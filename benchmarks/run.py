@@ -1,0 +1,32 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run table1     # one table
+"""
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (appendixB_iterative, fig4_accuracy_vs_bops,
+                            fig5_layer_mse, roofline, table1_algorithms,
+                            table3_throughput, table45_granularity)
+    suites = {
+        "table1": table1_algorithms.run,
+        "fig4": fig4_accuracy_vs_bops.run,
+        "table3": table3_throughput.run,
+        "table45": table45_granularity.run,
+        "fig5": fig5_layer_mse.run,
+        "appendixB": appendixB_iterative.run,
+        "roofline": roofline.run,
+    }
+    selected = sys.argv[1:] or list(suites)
+    t0 = time.time()
+    for name in selected:
+        print(f"\n===== {name} =====")
+        suites[name]()
+    print(f"\nall benchmarks done in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Paper Table 1: MSE / conditioning / arithmetic complexity per algorithm."""
+import time
+
+from repro.core.error_analysis import table1
+
+
+def run(log=print):
+    t0 = time.time()
+    t = table1(trials=200)
+    log("name,mse_measured,mse_paper,kappa_tile,amplification,"
+        "mults2d,multsH,complexity_pct,complexity_pct_paper,int_transform")
+    for name, row in t.items():
+        paper = row["paper"] or (None, None, None)
+        log(f"{name},{row['mse']:.2f},{paper[0]},{row['kappa_tile']:.2f},"
+            f"{row['amplification']:.2f},{row['mults_2d']},"
+            f"{row['mults_2d_hermitian']},"
+            f"{row['complexity_pct_hermitian']:.2f},{paper[2]},"
+            f"{row['integer_transform']}")
+    log(f"# table1 done in {time.time()-t0:.1f}s")
+    return t
+
+
+if __name__ == "__main__":
+    run()

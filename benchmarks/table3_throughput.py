@@ -1,0 +1,68 @@
+"""Paper Table 3 surrogate: compute-efficiency of the SFC datapath.
+
+The paper's Table 3 is an FPGA synthesis (DSP counts); on TPU the analogue
+is (a) the multiplication/BOPs reduction of the transform-domain pipeline
+and (b) measured wall-clock of the jitted conv paths on this host (CPU
+numbers are indicative only; the roofline analysis in EXPERIMENTS.md covers
+the TPU target).  VGG-16's conv stack (all 3x3 stride-1, the paper's pick)
+is the workload.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import conv2d_direct, fastconv2d, generate_sfc
+from repro.quant import ConvWorkload, bops_reduction, INT8_FREQ
+
+# VGG-16 conv layers (HxW, Cin, Cout) at 224 input — per paper §6.2
+VGG_LAYERS = [(224, 3, 64), (224, 64, 64), (112, 64, 128), (112, 128, 128),
+              (56, 128, 256), (56, 256, 256), (56, 256, 256),
+              (28, 256, 512), (28, 512, 512), (28, 512, 512),
+              (14, 512, 512), (14, 512, 512), (14, 512, 512)]
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run(log=print):
+    algo = generate_sfc(6, 7, 3)
+    total_direct_bops = total_sfc_bops = 0.0
+    for hw, cin, cout in VGG_LAYERS:
+        wl = ConvWorkload(hw, hw, cin, cout, 3)
+        total_direct_bops += wl.H * wl.W * wl.C_out * wl.R**2 * wl.C_in
+        total_sfc_bops += (wl.H * wl.W * wl.C_out * wl.R**2 * wl.C_in
+                           / bops_reduction(wl, algo))
+    log(f"vgg16_bops_reduction,{total_direct_bops/total_sfc_bops:.2f}x")
+
+    # wall-clock of one representative mid-network layer on this host
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(1, 56, 56, 64), jnp.float32)
+    w = jnp.asarray(rng.randn(3, 3, 64, 64) * 0.05, jnp.float32)
+    direct = jax.jit(lambda x, w: conv2d_direct(x, w))
+    sfc_fp = jax.jit(lambda x, w: fastconv2d(x, w, algo))
+    hook = INT8_FREQ.hook()
+    sfc_q = jax.jit(lambda x, w: fastconv2d(x, w, algo,
+                                            elementwise_hook=hook))
+    td = _time(direct, x, w)
+    tf = _time(sfc_fp, x, w)
+    tq = _time(sfc_q, x, w)
+    log(f"layer56x56x64_direct_ms,{td*1e3:.2f}")
+    log(f"layer56x56x64_sfc_fp_ms,{tf*1e3:.2f}")
+    log(f"layer56x56x64_sfc_int8sim_ms,{tq*1e3:.2f}")
+    # paper's GOPs/DSP analogue: mults per output
+    log(f"mults_per_output_direct,{9*64}")
+    log(f"mults_per_output_sfc,{algo.mults_2d/algo.M**2*64:.1f}")
+    return {"bops_reduction": total_direct_bops / total_sfc_bops}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+"""Quickstart: SFC fast convolution as a drop-in, with int8 quantization.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Shows the paper's core loop: generate an SFC algorithm, run a convolution
+through the three-stage transform flow, quantize the transform domain to
+int8 with frequency-wise scales, and compare accuracy + multiplication
+counts against direct convolution and Winograd.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (conv2d_direct, fastconv2d, generate_sfc,
+                        generate_winograd)
+from repro.quant import INT8_FREQ, ConvWorkload, bops_reduction
+
+
+def main():
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(1, 56, 56, 32), jnp.float32)   # NHWC
+    w = jnp.asarray(rng.randn(3, 3, 32, 64) * 0.1, jnp.float32)
+
+    y_ref = conv2d_direct(x, w)
+
+    print("algorithm            mults/tile  complexity  rel.err(fp32)  "
+          "rel.err(int8-freq)")
+    for algo in [generate_sfc(6, 6, 3), generate_sfc(6, 7, 3),
+                 generate_sfc(4, 4, 3), generate_winograd(4, 3),
+                 generate_winograd(2, 3)]:
+        y_fp = fastconv2d(x, w, algo)
+        y_q = fastconv2d(x, w, algo, elementwise_hook=INT8_FREQ.hook())
+        err_fp = float(jnp.linalg.norm(y_fp - y_ref)
+                       / jnp.linalg.norm(y_ref))
+        err_q = float(jnp.linalg.norm(y_q - y_ref) / jnp.linalg.norm(y_ref))
+        print(f"{algo.name:20s} {algo.mults_2d:10d}  "
+              f"{100*algo.arithmetic_complexity_2d:9.2f}%  "
+              f"{err_fp:13.2e}  {err_q:12.4f}")
+
+    wl = ConvWorkload(56, 56, 32, 64, 3)
+    print(f"\nBOPs reduction (int8, 56x56x32->64):")
+    for algo in [generate_sfc(6, 7, 3), generate_sfc(6, 6, 3)]:
+        print(f"  {algo.name}: {bops_reduction(wl, algo):.2f}x vs "
+              "direct int8")
+    print("\nKey claim: SFC-6 reaches Winograd-class multiplication "
+          "reduction with direct-conv-class int8 accuracy.")
+
+
+if __name__ == "__main__":
+    main()

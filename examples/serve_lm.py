@@ -1,0 +1,88 @@
+"""Serve a small LM with batched requests through the production decode path.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch mamba2-1.3b]
+
+Trains a smoke-scale model briefly (so generations aren't pure noise), then
+runs a batched serving loop: ragged prompts, per-sequence positions, greedy
+decode — the same ``decode_step`` the multi-pod dry-run lowers at
+decode_32k/long_500k scale.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.data import SyntheticTokenPipeline, TokenPipelineConfig
+from repro.models import build
+from repro.optim.optimizers import AdamW
+from repro.train.steps import init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-1.3b", choices=list(ARCH_IDS))
+    ap.add_argument("--train-steps", type=int, default=30)
+    ap.add_argument("--gen-len", type=int, default=24)
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    model = build(cfg)
+    pipe = SyntheticTokenPipeline(TokenPipelineConfig(
+        vocab_size=cfg.vocab_size, seq_len=48, global_batch=args.batch))
+
+    # brief training
+    opt = AdamW(lr=5e-3)
+    state = init_train_state(model, opt, jax.random.PRNGKey(0))
+    step_fn = jax.jit(make_train_step(model, opt), donate_argnums=(0,))
+    extra = {}
+    if cfg.family == "vlm":
+        extra["vision"] = jnp.zeros(
+            (args.batch, cfg.n_vision_tokens, cfg.d_model), jnp.float32)
+    if cfg.family == "encdec":
+        extra["frames"] = jnp.zeros((args.batch, 48, cfg.d_model),
+                                    jnp.float32)
+    for i in range(args.train_steps):
+        b = pipe.batch(i)
+        state, m = step_fn(state, {
+            "tokens": jnp.asarray(b["tokens"]),
+            "labels": jnp.asarray(b["labels"]), **extra})
+    print(f"trained {args.train_steps} steps, final loss "
+          f"{float(m['loss']):.3f}")
+
+    # batched serving: ragged prompts
+    rng = np.random.RandomState(7)
+    prompt_lens = rng.randint(4, 12, size=args.batch)
+    max_prompt = int(prompt_lens.max())
+    prompts = pipe.batch(999)["tokens"][:, :max_prompt]
+    memory = extra.get("vision", extra.get("frames"))
+    total = max_prompt + args.gen_len
+    cache = model.init_cache(state.params, args.batch, total, memory)
+    serve = jax.jit(model.decode_step, donate_argnums=(1,))
+
+    tok = jnp.asarray(prompts[:, 0:1], jnp.int32)
+    out_tokens = [np.asarray(tok)]
+    t0 = time.time()
+    for t in range(total - 1):
+        logits, cache = serve(state.params, cache, tok,
+                              jnp.full((args.batch,), t, jnp.int32))
+        nxt = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        in_prompt = (t + 1) < prompt_lens
+        tok = jnp.where(jnp.asarray(in_prompt)[:, None],
+                        jnp.asarray(prompts[:, min(t + 1, max_prompt - 1)]
+                                    [:, None], jnp.int32), nxt)
+        out_tokens.append(np.asarray(tok))
+    dt = time.time() - t0
+    gen = np.concatenate(out_tokens, axis=1)
+    print(f"served {args.batch} sequences x {total} steps in {dt:.1f}s "
+          f"({args.batch*(total-1)/dt:.0f} tok/s on CPU)")
+    for i in range(args.batch):
+        print(f"  seq{i} prompt={gen[i,:prompt_lens[i]].tolist()} "
+              f"gen={gen[i, prompt_lens[i]:prompt_lens[i]+8].tolist()}...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""End-to-end driver: train a CNN, PTQ-quantize its SFC convs, compare.
+
+    PYTHONPATH=src python examples/train_cnn_sfc.py [--steps 150]
+
+Mirrors the paper's §6.1 experiment offline: train fp32 -> swap every 3x3
+stride-1 conv for quantized SFC-6 -> measure accuracy retention, vs the
+same swap with Winograd F(4x4,3x3).  Runs in a few minutes on CPU.
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.resnet18 import CNNConfig
+from repro.data import ImagePipelineConfig, SyntheticImagePipeline
+from repro.models.cnn import cnn_loss, init_resnet, resnet_forward
+from repro.optim.optimizers import AdamW, cosine_schedule
+
+CFG = CNNConfig(name="example-cnn", stages=(1, 1), widths=(16, 32),
+                image_size=24, n_classes=10)
+
+
+def accuracy(cfg, params, pipe, n=6, start=5000):
+    correct = total = 0
+    for i in range(start, start + n):
+        b = pipe.batch(i)
+        logits = resnet_forward(params, cfg, jnp.asarray(b["images"]))
+        correct += int((np.argmax(np.asarray(logits), -1)
+                        == b["labels"]).sum())
+        total += len(b["labels"])
+    return correct / total
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=150)
+    args = ap.parse_args()
+
+    pipe = SyntheticImagePipeline(ImagePipelineConfig(
+        image_size=CFG.image_size, n_classes=CFG.n_classes,
+        global_batch=32, seed=3))
+    params = init_resnet(jax.random.PRNGKey(0), CFG)
+    opt = AdamW(lr=cosine_schedule(3e-3, 10, args.steps), weight_decay=1e-4)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state, batch):
+        (loss, m), g = jax.value_and_grad(
+            lambda p: cnn_loss(p, CFG, batch), has_aux=True)(params)
+        params, state, _ = opt.apply(params, g, state)
+        return params, state, m
+
+    t0 = time.time()
+    for i in range(args.steps):
+        b = pipe.batch(i)
+        params, state, m = step(params, state,
+                                {"images": jnp.asarray(b["images"]),
+                                 "labels": jnp.asarray(b["labels"])})
+        if i % 25 == 0:
+            print(f"step {i:4d}  loss {float(m['loss']):.3f}  "
+                  f"acc {float(m['acc']):.3f}")
+    print(f"trained {args.steps} steps in {time.time()-t0:.0f}s\n")
+
+    rows = [("direct fp32", dataclasses.replace(CFG)),
+            ("direct int8", dataclasses.replace(
+                CFG, quant="int8", conv_algo="direct")),
+            ("SFC-6(6x6,3x3) int8", dataclasses.replace(
+                CFG, conv_algo="sfc6_6", quant="int8")),
+            ("SFC-6(7x7,3x3) int8", dataclasses.replace(
+                CFG, conv_algo="sfc6_7", quant="int8")),
+            ("SFC-6 int6", dataclasses.replace(
+                CFG, conv_algo="sfc6_6", quant="int6")),
+            ("Wino(4x4,3x3) int8", dataclasses.replace(
+                CFG, conv_algo="wino4", quant="int8")),
+            ("Wino(4x4,3x3) int6", dataclasses.replace(
+                CFG, conv_algo="wino4", quant="int6"))]
+    print(f"{'variant':26s} accuracy")
+    base = None
+    for name, cfg in rows:
+        acc = accuracy(cfg, params, pipe)
+        base = acc if base is None else base
+        print(f"{name:26s} {acc:.3f}  (delta {acc-base:+.3f})")
+    print("\nExpected: SFC int8 within noise of fp32 (paper: -0.17%); "
+          "Winograd degrades, especially at int6 (paper: -5.4%).")
+
+
+if __name__ == "__main__":
+    main()

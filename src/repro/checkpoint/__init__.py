@@ -1,0 +1,4 @@
+"""Atomic / async / elastic checkpointing."""
+from repro.checkpoint.checkpointer import Checkpointer
+
+__all__ = ["Checkpointer"]

@@ -1,0 +1,151 @@
+"""Fault-tolerant checkpointing (no orbax offline — built on npz + JSON).
+
+Design points for 1000+-node operation:
+  * **atomic**: write to a temp dir, fsync, rename — a crash mid-save never
+    corrupts the latest checkpoint;
+  * **async**: device->host transfer happens on the caller thread, file IO
+    on a worker thread so the train loop is not blocked;
+  * **elastic restore**: arrays are stored unsharded (gathered); restore
+    re-shards onto whatever mesh/device-count the new job has — tested by
+    round-tripping across different mesh shapes;
+  * **self-describing**: the pytree structure and dtypes are stored in a
+    JSON manifest next to the arrays, with a step counter and content
+    digest for integrity checks;
+  * retention: keep the last N checkpoints, delete older ones only after a
+    newer one is fully committed.
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import hashlib
+import json
+import os
+import pathlib
+import shutil
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_path_part(p) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _path_part(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"#{p.idx}"
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._pool = concurrent.futures.ThreadPoolExecutor(max_workers=1)
+        self._pending: Optional[concurrent.futures.Future] = None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree, blocking: bool = False) -> None:
+        """Snapshot ``tree`` at ``step``. Non-blocking by default."""
+        flat = _flatten(tree)
+        host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+        self.wait()
+        self._pending = self._pool.submit(self._write, step, host)
+        if blocking:
+            self.wait()
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.result()
+            self._pending = None
+
+    def _write(self, step: int, host: Dict[str, np.ndarray]) -> None:
+        tmp = self.dir / f".tmp-{step}-{os.getpid()}"
+        final = self.dir / f"step_{step:012d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        digest = hashlib.sha256()
+        arrays_path = tmp / "arrays.npz"
+        # npz has no bfloat16: store raw uint16 bits, dtype in the manifest
+        storable = {k: (v.view(np.uint16) if v.dtype.name == "bfloat16"
+                        else v) for k, v in host.items()}
+        np.savez(arrays_path, **{k.replace("/", "|"): v
+                                 for k, v in storable.items()})
+        digest.update(arrays_path.read_bytes())
+        manifest = {
+            "step": step,
+            "time": time.time(),
+            "keys": sorted(host.keys()),
+            "dtypes": {k: str(v.dtype) for k, v in host.items()},
+            "shapes": {k: list(v.shape) for k, v in host.items()},
+            "sha256": digest.hexdigest(),
+        }
+        (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+        with open(tmp / "manifest.json") as f:
+            os.fsync(f.fileno())
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)                      # atomic commit
+        self._gc()
+
+    def _gc(self) -> None:
+        ckpts = sorted(self.dir.glob("step_*"))
+        for old in ckpts[:-self.keep]:
+            shutil.rmtree(old, ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def latest_step(self) -> Optional[int]:
+        ckpts = sorted(self.dir.glob("step_*"))
+        if not ckpts:
+            return None
+        return int(ckpts[-1].name.split("_")[1])
+
+    def restore(self, tree_like, step: Optional[int] = None,
+                shardings=None, verify: bool = True):
+        """Restore into the structure of ``tree_like``.
+
+        ``shardings`` (optional pytree of NamedSharding) re-shards each
+        array onto the *current* mesh — this is the elastic-restore path:
+        a checkpoint written on 256 devices restores onto 8 (or 512).
+        """
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self.dir / f"step_{step:012d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        if verify:
+            got = hashlib.sha256((d / "arrays.npz").read_bytes()).hexdigest()
+            if got != manifest["sha256"]:
+                raise IOError(f"checkpoint {d} digest mismatch")
+        data = np.load(d / "arrays.npz")
+        flat_like = _flatten(tree_like)
+        flat_shard = _flatten(shardings) if shardings is not None else {}
+        out = {}
+        for key, like in flat_like.items():
+            arr = data[key.replace("/", "|")]
+            if manifest["dtypes"].get(key) == "bfloat16":
+                import ml_dtypes
+                arr = arr.view(ml_dtypes.bfloat16)
+            if shardings is not None and key in flat_shard:
+                out[key] = jax.device_put(arr, flat_shard[key])
+            else:
+                out[key] = jnp.asarray(arr)
+        leaves_like, treedef = jax.tree_util.tree_flatten(tree_like)
+        keys_in_order = list(_flatten(tree_like).keys())
+        return jax.tree_util.tree_unflatten(
+            treedef, [out[k] for k in keys_in_order]), step

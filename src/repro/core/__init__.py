@@ -1,0 +1,18 @@
+"""SFC core: the paper's contribution as a composable JAX module."""
+from repro.core.generator import (BilinearAlgorithm, direct_algorithm,
+                                  generate_sfc, generate_winograd,
+                                  paper_algorithms)
+from repro.core.conv2d import (conv1d_depthwise_causal_direct, conv2d_direct,
+                               fastconv1d_depthwise_causal, fastconv2d,
+                               transform_domain_matmul, transform_input_2d,
+                               transform_weights_2d, inverse_transform_2d)
+from repro.core.generator2d import Bilinear2D, generate_sfc_2d_hermitian
+from repro.core import error_analysis, iterative, symbolic
+
+__all__ = [
+    "BilinearAlgorithm", "direct_algorithm", "generate_sfc",
+    "generate_winograd", "paper_algorithms", "fastconv2d", "conv2d_direct",
+    "fastconv1d_depthwise_causal", "conv1d_depthwise_causal_direct",
+    "transform_domain_matmul", "transform_input_2d", "transform_weights_2d",
+    "inverse_transform_2d", "error_analysis", "iterative", "symbolic",
+]

@@ -1,0 +1,174 @@
+"""Tiled fast convolution execution in JAX (2-D NHWC and 1-D depthwise).
+
+Implements the three-stage bilinear flow (paper Eq. 1) for any
+``BilinearAlgorithm`` (SFC, Winograd, direct):
+
+    Y = A^T [ (G W G^T) (.) (B^T X B) ] A
+
+vectorized over batch x tiles x channels. The transform-domain contraction
+(stage 2 amortized over C_in/C_out) is the MXU hot spot; a Pallas kernel
+version lives in ``repro.kernels`` — this module is the reference/portable
+path and the oracle for those kernels.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.generator import BilinearAlgorithm
+
+
+# --------------------------------------------------------------------------
+# Tiling helpers
+# --------------------------------------------------------------------------
+def _overlap_tiles_1d(n_tiles: int, M: int, L: int) -> np.ndarray:
+    """Row indices (n_tiles, L) of overlapping tiles with stride M."""
+    return np.arange(n_tiles)[:, None] * M + np.arange(L)[None, :]
+
+
+def pad_amounts(size: int, M: int, R: int, padding: str) -> Tuple[int, int, int]:
+    """(lo_pad, hi_pad, out_size) for one spatial dim."""
+    if padding == "SAME":
+        out = size
+        lo = (R - 1) // 2
+    elif padding == "VALID":
+        out = size - R + 1
+        lo = 0
+    else:
+        raise ValueError(f"padding must be SAME or VALID, got {padding}")
+    n_tiles = -(-out // M)  # ceil
+    padded_needed = n_tiles * M + R - 1
+    hi = padded_needed - size - lo
+    return lo, hi, out
+
+
+# --------------------------------------------------------------------------
+# 2-D convolution (NHWC, HWIO weights, stride 1)
+# --------------------------------------------------------------------------
+def transform_input_2d(x: jnp.ndarray, algo: BilinearAlgorithm,
+                       padding: str = "SAME") -> Tuple[jnp.ndarray, Tuple]:
+    """(B,H,W,C) -> transform-domain tiles (B, nH, nW, t, t, C)."""
+    B, H, W, C = x.shape
+    M, R, L = algo.M, algo.R, algo.L
+    lo_h, hi_h, out_h = pad_amounts(H, M, R, padding)
+    lo_w, hi_w, out_w = pad_amounts(W, M, R, padding)
+    xp = jnp.pad(x, ((0, 0), (lo_h, hi_h), (lo_w, hi_w), (0, 0)))
+    nH = (xp.shape[1] - (R - 1)) // M
+    nW = (xp.shape[2] - (R - 1)) // M
+    idx_h = _overlap_tiles_1d(nH, M, L)
+    idx_w = _overlap_tiles_1d(nW, M, L)
+    tiles = xp[:, idx_h, :, :]            # (B, nH, L, Wp, C)
+    tiles = tiles[:, :, :, idx_w, :]      # (B, nH, L, nW, L, C)
+    tiles = jnp.transpose(tiles, (0, 1, 3, 2, 4, 5))  # (B,nH,nW,L,L,C)
+    bt = jnp.asarray(algo.bt(), dtype=x.dtype)
+    tx = jnp.einsum("ti,bnwijc,uj->bnwtuc", bt, tiles, bt)
+    return tx, (out_h, out_w, nH, nW)
+
+
+def transform_weights_2d(w: jnp.ndarray, algo: BilinearAlgorithm) -> jnp.ndarray:
+    """(R,R,Cin,Cout) -> (t,t,Cin,Cout)."""
+    g = jnp.asarray(algo.g(), dtype=w.dtype)
+    return jnp.einsum("ti,ijco,uj->tuco", g, w, g)
+
+
+def transform_domain_matmul(tx: jnp.ndarray, tw: jnp.ndarray,
+                            precision=jax.lax.Precision.HIGHEST) -> jnp.ndarray:
+    """(B,nH,nW,t,t,Cin) x (t,t,Cin,Cout) -> (B,nH,nW,t,t,Cout).
+
+    The hot loop: t^2 independent GEMMs of shape
+    (B*nH*nW, Cin) x (Cin, Cout), one per transform-domain position.
+    """
+    return jnp.einsum("bnwtuc,tuco->bnwtuo", tx, tw, precision=precision)
+
+
+def inverse_transform_2d(ty: jnp.ndarray, algo: BilinearAlgorithm,
+                         geom: Tuple) -> jnp.ndarray:
+    """(B,nH,nW,t,t,Cout) -> (B,H_out,W_out,Cout)."""
+    out_h, out_w, nH, nW = geom
+    at = jnp.asarray(algo.at(), dtype=ty.dtype)
+    y = jnp.einsum("mt,bnwtuo,pu->bnwmpo", at, ty, at)  # (B,nH,nW,M,M,O)
+    B = y.shape[0]
+    O = y.shape[-1]
+    M = algo.M
+    y = jnp.transpose(y, (0, 1, 3, 2, 4, 5)).reshape(B, nH * M, nW * M, O)
+    return y[:, :out_h, :out_w, :]
+
+
+def fastconv2d(x: jnp.ndarray, w: jnp.ndarray, algo: BilinearAlgorithm,
+               padding: str = "SAME",
+               bias: Optional[jnp.ndarray] = None,
+               elementwise_hook: Optional[Callable] = None) -> jnp.ndarray:
+    """Fast 2-D convolution (cross-correlation, as in ML convention).
+
+    ``elementwise_hook(tx, tw) -> (tx, tw)`` lets the quantization layer
+    inject the transform-domain fake-quantization (paper Eq. 17).
+    """
+    assert w.shape[0] == w.shape[1] == algo.R, (w.shape, algo.R)
+    tx, geom = transform_input_2d(x, algo, padding)
+    tw = transform_weights_2d(w, algo)
+    if elementwise_hook is not None:
+        tx, tw = elementwise_hook(tx, tw)
+    ty = transform_domain_matmul(tx, tw)
+    y = inverse_transform_2d(ty, algo, geom)
+    if bias is not None:
+        y = y + bias
+    return y
+
+
+def conv2d_direct(x: jnp.ndarray, w: jnp.ndarray,
+                  padding: str = "SAME",
+                  bias: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Reference direct convolution via lax (NHWC, HWIO, stride 1)."""
+    y = jax.lax.conv_general_dilated(
+        x, w.astype(x.dtype), window_strides=(1, 1), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    if bias is not None:
+        y = y + bias
+    return y
+
+
+# --------------------------------------------------------------------------
+# 1-D depthwise causal convolution (Mamba2 / Zamba2 short conv)
+# --------------------------------------------------------------------------
+def fastconv1d_depthwise_causal(x: jnp.ndarray, w: jnp.ndarray,
+                                algo: BilinearAlgorithm) -> jnp.ndarray:
+    """Causal depthwise conv1d: x (B, T, C), w (R, C) -> (B, T, C).
+
+    y[b, t, c] = sum_r x[b, t - (R-1) + r, c] * w[r, c]   (left-padded)
+
+    Depthwise has no channel contraction, so the element-wise stage is a
+    true element-wise product — exactly the regime the paper's
+    multiplication counting addresses (t/M mults per output vs R direct).
+    """
+    B, T, C = x.shape
+    R, M, L = algo.R, algo.M, algo.L
+    assert w.shape == (R, C)
+    n_tiles = -(-T // M)
+    xp = jnp.pad(x, ((0, 0), (R - 1, n_tiles * M - T), (0, 0)))
+    idx = _overlap_tiles_1d(n_tiles, M, L)
+    tiles = xp[:, idx, :]                                   # (B, nT, L, C)
+    bt = jnp.asarray(algo.bt(), dtype=x.dtype)
+    g = jnp.asarray(algo.g(), dtype=w.dtype)
+    at = jnp.asarray(algo.at(), dtype=x.dtype)
+    tx = jnp.einsum("ti,bnic->bntc", bt, tiles)
+    tw = jnp.einsum("tr,rc->tc", g, w)
+    ty = tx * tw[None, None, :, :]
+    y = jnp.einsum("mt,bntc->bnmc", at, ty)                 # (B,nT,M,C)
+    y = y.reshape(B, n_tiles * M, C)
+    return y[:, :T, :]
+
+
+def conv1d_depthwise_causal_direct(x: jnp.ndarray, w: jnp.ndarray
+                                   ) -> jnp.ndarray:
+    """Oracle for the depthwise causal conv1d."""
+    B, T, C = x.shape
+    R = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (R - 1, 0), (0, 0)))
+    out = jnp.zeros((B, T, C), dtype=x.dtype)
+    for r in range(R):
+        out = out + xp[:, r:r + T, :] * w[r][None, None, :]
+    return out

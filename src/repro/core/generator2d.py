@@ -1,0 +1,383 @@
+"""Full-2D-Hermitian SFC algorithms — the paper's '/88' execution counts.
+
+The separable scheme (generator.py) runs t² multiplications per 2-D tile
+(100 for SFC-6(6×6,3×3)).  The paper's second figure (88) exploits the full
+2-D Hermitian symmetry: for a pair of *complex* per-dim frequencies (u, v),
+the separable 3×3 = 9 real products carry exactly two complex numbers —
+X₂d[u, v] and X₂d[u, N−v] (their conjugates complete the 4 grid entries) —
+so 6 Karatsuba products suffice: a saving of 3 per (complex×complex) block,
+100 − 3·4 = 88 (and 49−3 = 46, 144−12 = 132, 196−12 = 184).
+
+This module builds the *flat* (non-separable) bilinear algorithm
+(B^T: t×L², G: t×R², A^T: M²×t) with exact rational arithmetic:
+
+  * real×real / real×complex / corr×anything blocks keep the separable
+    structure (no Hermitian savings exist there);
+  * each complex×complex block is replaced by two paired 2-D frequencies,
+    3 Karatsuba components each, with A^T columns recovered from
+    2·Re(X₂d[u,±v]·ω^{−(u·k_r ± v·k_c)})/N² plus the per-dim correction
+    bookkeeping inherited from the 1-D solver.
+
+Validated exact (rational, zero-error) against direct 2-D correlation, with
+component counts matching the paper (tests/test_generator2d.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from fractions import Fraction
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import symbolic
+from repro.core.generator import BilinearAlgorithm, generate_sfc
+
+
+@dataclasses.dataclass(frozen=True)
+class Bilinear2D:
+    """Flat 2-D bilinear algorithm: y = A^T ((G w)(B^T x)) on vec inputs."""
+
+    name: str
+    M: int
+    R: int
+    L: int
+    BT: Tuple[Tuple[Fraction, ...], ...]   # t x L^2
+    G: Tuple[Tuple[Fraction, ...], ...]    # t x R^2
+    AT: Tuple[Tuple[Fraction, ...], ...]   # M^2 x t
+
+    @property
+    def t(self) -> int:
+        return len(self.BT)
+
+    def conv2d_exact(self, x: List[List[Fraction]],
+                     w: List[List[Fraction]]) -> List[List[Fraction]]:
+        xv = [v for row in x for v in row]
+        wv = [v for row in w for v in row]
+        tx = [sum(r * v for r, v in zip(row, xv)) for row in self.BT]
+        tw = [sum(r * v for r, v in zip(row, wv)) for row in self.G]
+        m = [a * b for a, b in zip(tx, tw)]
+        y = [sum(r * v for r, v in zip(row, m)) for row in self.AT]
+        return [y[i * self.M:(i + 1) * self.M] for i in range(self.M)]
+
+    def bt(self):
+        return np.array([[float(v) for v in r] for r in self.BT])
+
+    def g(self):
+        return np.array([[float(v) for v in r] for r in self.G])
+
+    def at(self):
+        return np.array([[float(v) for v in r] for r in self.AT])
+
+
+def _kron_rows(r1: Sequence[Fraction], r2: Sequence[Fraction]
+               ) -> Tuple[Fraction, ...]:
+    return tuple(Fraction(a) * Fraction(b) for a in r1 for b in r2)
+
+
+def generate_sfc_2d_hermitian(N: int, M: int, R: int) -> Bilinear2D:
+    """Build the flat full-Hermitian 2-D SFC-N(M×M, R×R)."""
+    base = generate_sfc(N, M, R)
+    ring = symbolic.CyclotomicRing.for_points(N)
+    freqs = symbolic.real_dft_frequencies(N)
+    meta = dict(base.meta)
+    n_dft = meta["n_dft_components"]
+    L = base.L
+
+    # per-dim component labels: ('real', u) once, ('cplx', u, j) j=0..2,
+    # then ('corr', i) for correction rows
+    labels: List[Tuple] = []
+    for f in freqs:
+        if f.kind == "real":
+            labels.append(("real", f.u))
+        else:
+            labels.extend([("cplx", f.u, j) for j in range(3)])
+    n_corr = base.t - n_dft
+    labels.extend([("corr", i) for i in range(n_corr)])
+    assert len(labels) == base.t
+
+    BT1 = [list(r) for r in base.BT]
+    G1 = [list(r) for r in base.G]
+    AT1 = [list(r) for r in base.AT]
+
+    # ---- flat components ----
+    BT2: List[Tuple[Fraction, ...]] = []
+    G2: List[Tuple[Fraction, ...]] = []
+    # col_map: separable column pair (a, b) -> list of
+    #   (flat column index, coeff) so A^T can be rebuilt exactly:
+    #   m_sep[a,b] == sum coeff * m_flat[idx]  ... only needed for cc blocks;
+    # all other blocks map 1:1.
+    col_map: Dict[Tuple[int, int], List[Tuple[int, Fraction]]] = {}
+
+    # index complex freqs: u -> first separable component index
+    cplx_start = {}
+    idx = 0
+    for f in freqs:
+        if f.kind == "complex":
+            cplx_start[f.u] = idx
+            idx += 3
+        else:
+            idx += 1
+
+    def sep_rows(a: int, b: int):
+        return (_kron_rows(BT1[a], BT1[b]), _kron_rows(G1[a], G1[b]))
+
+    handled = set()
+    # 1) complex x complex blocks -> paired 6-component form
+    cplx_us = [f.u for f in freqs if f.kind == "complex"]
+    for u in cplx_us:
+        for v in cplx_us:
+            au, av = cplx_start[u], cplx_start[v]
+            block = [(au + i, av + j) for i in range(3) for j in range(3)]
+            handled.update(block)
+            # 2-D frequencies (u, v) and (u, N - v): rows over L^2 inputs.
+            new_idx = []
+            for sv in (v, (N - v) % N):
+                a_row = [Fraction(0)] * (L * L)
+                b_row = [Fraction(0)] * (L * L)
+                aw = [Fraction(0)] * (R * R)
+                bw = [Fraction(0)] * (R * R)
+                # input side: window offset from the 1-D algorithm
+                off = meta["offset"]
+                for i in range(N):
+                    gi = off + i
+                    if gi >= L:
+                        continue
+                    for j in range(N):
+                        gj = off + j
+                        if gj >= L:
+                            continue
+                        a, b = ring.root_power(u * i + sv * j)
+                        a_row[gi * L + gj] += a
+                        b_row[gi * L + gj] += b
+                # weight side: folded reversed kernel per dim
+                for r1 in range(R):
+                    j1 = (R - 1 - r1) % N
+                    for r2 in range(R):
+                        j2 = (R - 1 - r2) % N
+                        a, b = ring.root_power(u * j1 + sv * j2)
+                        aw[r1 * R + r2] += a
+                        bw[r1 * R + r2] += b
+                base_i = len(BT2)
+                BT2.append(tuple(a_row))
+                BT2.append(tuple(b_row))
+                BT2.append(tuple(x + y for x, y in zip(a_row, b_row)))
+                G2.append(tuple(aw))
+                G2.append(tuple(bw))
+                G2.append(tuple(x + y for x, y in zip(aw, bw)))
+                new_idx.append(base_i)
+            # map the separable 9 products onto the 6 new ones is not
+            # needed: A^T is rebuilt from scratch for these blocks (below),
+            # so just remember where they live.
+            col_map[("ccblock", u, v)] = new_idx  # type: ignore
+
+    # 2) all other separable column pairs map 1:1 (kron rows)
+    flat_of_sep: Dict[Tuple[int, int], int] = {}
+    for a in range(base.t):
+        for b in range(base.t):
+            if (a, b) in handled:
+                continue
+            flat_of_sep[(a, b)] = len(BT2)
+            br, gr = sep_rows(a, b)
+            BT2.append(br)
+            G2.append(gr)
+
+    # ---- A^T ----
+    c0r, c1r = symbolic.karatsuba_recombine(ring)
+
+    def inv_coeff_1d(u_label, slot: int) -> List[Fraction]:
+        """coefficients of slot over one 1-D component group."""
+        if u_label[0] == "real":
+            a, b = ring.root_power((-u_label[1] * slot) % N)
+            return [ring.real_part((Fraction(a), Fraction(b)))
+                    / N]
+        # complex: 3 coefficients (2*Re((C0+C1 s) w))/N
+        u = u_label[1]
+        a, b = ring.root_power((-u * slot) % N)
+        w = (Fraction(a), Fraction(b))
+        return [2 * ring.real_part(ring.mul(
+            (Fraction(c0r[j]), Fraction(c1r[j])), w)) / N for j in range(3)]
+
+    AT2: List[List[Fraction]] = []
+    t2 = len(BT2)
+    for mr in range(M):
+        for mc in range(M):
+            row = [Fraction(0)] * t2
+            # A^T separable row = kron(AT1[mr], AT1[mc]); redistribute.
+            for a in range(base.t):
+                ca = AT1[mr][a]
+                if ca == 0:
+                    continue
+                for b in range(base.t):
+                    cb = AT1[mc][b]
+                    if cb == 0:
+                        continue
+                    if (a, b) in flat_of_sep:
+                        row[flat_of_sep[(a, b)]] += ca * cb
+            # cc blocks: contribution = sum over grid entries
+            #   (1/N^2) * 2Re( X2d[u,v] W2d[u,v] w^{-(u kr + v kc)} )
+            #          + (1/N^2) * 2Re( X2d[u,N-v] ... w^{-(u kr - v kc)} )
+            # where (kr, kc) are the circular slots the 1-D algorithm
+            # assigned to outputs mr, mc.  Those slots are recoverable from
+            # the 1-D A^T structure only if the output uses a slot; we
+            # instead reconstruct directly: the separable A^T row already
+            # encodes slot mixtures, so we express the cc contribution by
+            # *reusing the same slot mixture*: for components (au+i, av+j)
+            # the separable coefficient factorizes as
+            # alpha_i(mr) * beta_j(mc) where alpha = AT1[mr][au+i].
+            # The 9 separable products of block (u,v) relate linearly to
+            # the 6 flat ones; solve that linear relation exactly.
+            for u in cplx_us:
+                for v in cplx_us:
+                    au, av = cplx_start[u], cplx_start[v]
+                    alphas = [AT1[mr][au + i] for i in range(3)]
+                    betas = [AT1[mc][av + j] for j in range(3)]
+                    if all(x == 0 for x in alphas) or \
+                            all(x == 0 for x in betas):
+                        continue
+                    coeffs = _cc_block_coeffs(ring, alphas, betas)
+                    base_i0, base_i1 = col_map[("ccblock", u, v)]
+                    for j in range(3):
+                        row[base_i0 + j] += coeffs[0][j]
+                        row[base_i1 + j] += coeffs[1][j]
+            AT2.append(row)
+
+    algo = Bilinear2D(
+        name=f"SFC-{N}({M}x{M},{R}x{R})-H2D",
+        M=M, R=R, L=L,
+        BT=tuple(BT2), G=tuple(G2),
+        AT=tuple(tuple(r) for r in AT2))
+    _validate2d(algo)
+    return algo
+
+
+def _cc_block_coeffs(ring, alphas, betas):
+    """Express sum_{i,j} alpha_i beta_j m_sep[i,j] over the 6 flat products.
+
+    Separable products m_sep[i,j] = (row_i(u) x)(row_j(v) x') ... with
+    row_{0,1,2} = (P, Q, P+Q).  Define complex Z1 = X2d[u,v]W2d[u,v] and
+    Z2 = X2d[u,N-v]W2d[u,N-v].  Using P_u P_v = products of the 1-D
+    functionals, algebra over the ring gives an exact linear relation;
+    we solve it numerically-exactly by evaluating both sides on a basis.
+    """
+    # The separable 9 products and the flat 6 products are both bilinear
+    # forms in (x2d, w2d) restricted to this block's 4-dim complex subspace
+    # (spanned by the 2-D freqs (u,v),(u,-v) and conjugates on each of x,w).
+    # We find rational gamma (2x3) with
+    #   sum_ij alpha_i beta_j m_sep[i,j] == sum_k gamma_0k m1_k + gamma_1k m2_k
+    # by sampling: the x-side state is (p1, q1, p2, q2) (components of the
+    # two 2-D freqs), similarly for w; both m_sep and m_flat are
+    # polynomial in these 8 rationals.  Build a linear system over a basis
+    # of monomials and solve exactly with Fractions.
+    import itertools as it
+    from fractions import Fraction as F
+
+    alpha, beta = ring.alpha, ring.beta
+
+    def karat(p0, p1, q0, q1):
+        m1, m2, m3 = p0 * q0, p1 * q1, (p0 + p1) * (q0 + q1)
+        return [m1, m2, m3]
+
+    # separable side: 1-D components of x along dim-u: (P1x, Q1x, P1x+Q1x),
+    # along dim-v: (P2x, ...). Their products relate to the 2-D freq
+    # components: X2d[u,v] = (P1 + Q1 s)(P2 + Q2 s) etc. -- but the
+    # separable scheme's m_sep[i,j] = (r_i(u) o r_j(v) . x) * (same on w):
+    # r_i(u) o r_j(v) applied to x equals the product structure of the
+    # per-dim functionals evaluated on x's rank-1 component... For the
+    # validation-exact path we only need m_sep expressed in the 2-D
+    # components, which holds for ALL x because both sides are the same
+    # functional of x (symbolically: row_i(u) kron row_j(v) =
+    # component of the product (A1 + B1 s)(A2 + B2 s') with s' an
+    # independent symbol -- the 2-D transform uses s' = s).
+    # Sample the 8 underlying free parameters:
+    rng = np.random.RandomState(0)
+
+    def sample():
+        vals = [F(int(v)) for v in rng.randint(-9, 10, 8)]
+        p1, q1, p2, q2, a1, b1, a2, b2 = vals
+        # x-side 1-D comps along u: (p1, q1); along v: (p2, q2)
+        # w-side: (a1, b1), (a2, b2)
+        xs = [p1, q1, p1 + q1]
+        xv = [p2, q2, p2 + q2]
+        ws = [a1, b1, a1 + b1]
+        wv = [a2, b2, a2 + b2]
+        m_sep = [[xs[i] * xv[j] * ws[i] * wv[j] for j in range(3)]
+                 for i in range(3)]
+        # flat: X2d[u,v] = (p1 + q1 s)(p2 + q2 s) reduced
+        def cmul(c0, c1, d0, d1):
+            return (c0 * d0 + F(beta) * c1 * d1,
+                    c0 * d1 + c1 * d0 + F(alpha) * c1 * d1)
+        X1 = cmul(p1, q1, p2, q2)
+        W1 = cmul(a1, b1, a2, b2)
+        # X2d[u, N-v]: conj on the v factor: (p2 + q2 s~) with s~ = conj(s)
+        # = s^{N-1}: express conj(s) = cs0 + cs1 s
+        cs0, cs1 = ring.root_power(ring.N - 1)
+        X2 = cmul(p1, q1, p2 + q2 * cs0, q2 * cs1)
+        W2 = cmul(a1, b1, a2 + b2 * cs0, b2 * cs1)
+        m1 = karat(X1[0], X1[1], W1[0], W1[1])
+        m2 = karat(X2[0], X2[1], W2[0], W2[1])
+        return m_sep, m1 + m2
+
+    # solve for gamma (6 unknowns) from >=8 samples, with the target being
+    # sum alpha_i beta_j m_sep[i,j]
+    rows, rhs = [], []
+    for _ in range(10):
+        m_sep, flat = sample()
+        rows.append(flat)
+        rhs.append(sum(alphas[i] * betas[j] * m_sep[i][j]
+                       for i in range(3) for j in range(3)))
+    sol = _lstsq_exact(rows, rhs)
+    return [sol[:3], sol[3:]]
+
+
+def _lstsq_exact(rows: List[List[Fraction]], rhs: List[Fraction]
+                 ) -> List[Fraction]:
+    """Exact solve of an (overdetermined, consistent) rational system."""
+    n = len(rows[0])
+    # Gaussian elimination on the first n independent rows
+    aug = [list(r) + [b] for r, b in zip(rows, rhs)]
+    pivots = []
+    used = [False] * len(aug)
+    for col in range(n):
+        piv = None
+        for r in range(len(aug)):
+            if not used[r] and aug[r][col] != 0:
+                piv = r
+                break
+        if piv is None:
+            pivots.append(None)
+            continue
+        used[piv] = True
+        pivots.append(piv)
+        inv = Fraction(1) / aug[piv][col]
+        aug[piv] = [v * inv for v in aug[piv]]
+        for r in range(len(aug)):
+            if r != piv and aug[r][col] != 0:
+                f = aug[r][col]
+                aug[r] = [v - f * u for v, u in zip(aug[r], aug[piv])]
+    sol = [Fraction(0)] * n
+    for col, piv in enumerate(pivots):
+        if piv is not None:
+            sol[col] = aug[piv][n]
+    # consistency check on the leftover rows
+    for r in range(len(aug)):
+        if not used[r]:
+            resid = aug[r][n]
+            assert resid == 0, "cc-block relation inconsistent"
+    return sol
+
+
+def _validate2d(algo: Bilinear2D, trials: int = 2) -> None:
+    rng = np.random.RandomState(1)
+    for _ in range(trials):
+        x = [[Fraction(int(v)) for v in row]
+             for row in rng.randint(-5, 6, (algo.L, algo.L))]
+        w = [[Fraction(int(v)) for v in row]
+             for row in rng.randint(-5, 6, (algo.R, algo.R))]
+        got = algo.conv2d_exact(x, w)
+        for mr in range(algo.M):
+            for mc in range(algo.M):
+                want = sum(x[mr + a][mc + b] * w[a][b]
+                           for a in range(algo.R) for b in range(algo.R))
+                assert got[mr][mc] == want, (
+                    f"{algo.name}: mismatch at ({mr},{mc})")

@@ -1,0 +1,92 @@
+"""Iterative SFC convolution for very large kernels (paper Appendix B).
+
+Large (depthwise) kernels are handled by a two-level nesting: the kernel is
+split into ``Ro`` tiles of ``Ri`` taps and the feature map into overlapping
+tiles on a stride-``Mi`` grid; the per-tile correlations are accelerated by
+an *inner* SFC algorithm and the accumulation across kernel tiles — itself a
+correlation over the tile grid — by an *outer* SFC algorithm.  Total
+multiplications per composed tile = t_outer * t_inner (paper: 132*132 for a
+29x29 kernel == ~3% of direct).
+
+Exactness requires the tile grid to align: **inner kernel-tile size Ri must
+equal the inner output-tile size Mi** (the paper's uneven 5/6 split needs
+extra unspecified corrections; we use the aligned variant and report the
+achieved ratio — same order as the paper's 3%).  With
+
+    X[p, j] = x[p*Mi + j]        p = 0..(Mo+Ro-2),  j = 0..L_i-1
+
+the large correlation becomes a separable 2-D bilinear form over (p, j),
+so the standard SFC flow applies along each axis.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.generator import BilinearAlgorithm
+
+
+def iterative_mult_count(outer: BilinearAlgorithm,
+                         inner: BilinearAlgorithm,
+                         two_d: bool = True) -> int:
+    """Multiplications per composed output tile (App. B accounting)."""
+    per_dim = outer.t * inner.t
+    return per_dim * per_dim if two_d else per_dim
+
+
+def iterative_conv1d(x: jnp.ndarray, w: jnp.ndarray,
+                     inner: BilinearAlgorithm,
+                     outer: BilinearAlgorithm) -> jnp.ndarray:
+    """1-D valid correlation with a large kernel via 2-level SFC nesting.
+
+    x: (Mo*Mi + Ro*Ri - 1,), w: (Ro*Ri,) -> y: (Mo*Mi,)
+    with the alignment condition inner.R == inner.M.
+    """
+    Ri, Mi, Li = inner.R, inner.M, inner.L
+    Ro, Mo, Lo = outer.R, outer.M, outer.L
+    if Ri != Mi:
+        raise ValueError(
+            f"nested SFC needs inner.R == inner.M for grid alignment; "
+            f"got R={Ri}, M={Mi}")
+    Rw, Mtot = Ro * Ri, Mo * Mi
+    assert w.shape == (Rw,), (w.shape, Rw)
+    assert x.shape[0] == Mtot + Rw - 1, (x.shape, Mtot + Rw - 1)
+
+    # Overlapping arrangement X[p, j] = x[p*Mi + j]; the last tiles read past
+    # the end of x by (Li - Mi) = Ri - 1 elements -> zero-pad.
+    P = Lo  # = Mo + Ro - 1 outer positions
+    xp = jnp.pad(x, (0, P * Mi + Li - Mi - x.shape[0]))
+    idx = np.arange(P)[:, None] * Mi + np.arange(Li)[None, :]
+    X = xp[idx]                                     # (P, Li)
+    W = w.reshape(Ro, Ri)                           # (Ro, Ri)
+
+    bo = jnp.asarray(outer.bt(), dtype=x.dtype)     # (t_o, Lo)
+    bi = jnp.asarray(inner.bt(), dtype=x.dtype)     # (t_i, Li)
+    go = jnp.asarray(outer.g(), dtype=x.dtype)      # (t_o, Ro)
+    gi = jnp.asarray(inner.g(), dtype=x.dtype)      # (t_i, Ri)
+    ao = jnp.asarray(outer.at(), dtype=x.dtype)     # (Mo, t_o)
+    ai = jnp.asarray(inner.at(), dtype=x.dtype)     # (Mi, t_i)
+
+    TX = jnp.einsum("op,ij,pj->oi", bo, bi, X)      # (t_o, t_i)
+    TW = jnp.einsum("ok,ir,kr->oi", go, gi, W)      # (t_o, t_i)
+    TY = TX * TW                                    # t_o * t_i mults
+    Y = jnp.einsum("mo,ni,oi->mn", ao, ai, TY)      # (Mo, Mi)
+    return Y.reshape(Mtot)
+
+
+def large_kernel_report(kernel_size: int, inner: BilinearAlgorithm,
+                        outer: BilinearAlgorithm) -> dict:
+    """Multiplication accounting for one composed 2-D output tile."""
+    Mtot = outer.M * inner.M
+    direct = (Mtot * kernel_size) ** 2
+    nested = iterative_mult_count(outer, inner, two_d=True)
+    return {
+        "kernel": kernel_size,
+        "outputs_2d": Mtot * Mtot,
+        "direct_mults": direct,
+        "nested_mults": nested,
+        "ratio_pct": 100.0 * nested / direct,
+    }

@@ -1,0 +1,8 @@
+"""Deterministic synthetic data pipelines."""
+from repro.data.pipeline import (ImagePipelineConfig, Prefetcher,
+                                 SyntheticImagePipeline,
+                                 SyntheticTokenPipeline,
+                                 TokenPipelineConfig)
+
+__all__ = ["TokenPipelineConfig", "SyntheticTokenPipeline",
+           "ImagePipelineConfig", "SyntheticImagePipeline", "Prefetcher"]

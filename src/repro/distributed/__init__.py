@@ -1,0 +1,4 @@
+"""Distributed runtime: sharding rules, pipeline parallelism, collectives."""
+from repro.distributed import pipeline, sharding
+
+__all__ = ["pipeline", "sharding"]

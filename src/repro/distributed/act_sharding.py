@@ -1,0 +1,70 @@
+"""Activation sharding constraints ("logical axis" annotations).
+
+GSPMD propagates parameter/input shardings through most of the graph, but
+propagation can fail into ``while``-loop carries (observed: the flash-
+attention online-softmax carry compiled with an *unsharded* batch dim —
+a 10 TB buffer at qwen2.5 train_4k scale; EXPERIMENTS.md §Perf iteration 0).
+Model code therefore pins the batch axis at loop boundaries via
+``constrain_batch``.
+
+The mesh context is process-global and optional: with no rules installed
+(unit tests, single-device runs) every call is a no-op, so model code stays
+mesh-agnostic.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_RULES: Optional[Tuple[Mesh, Tuple[str, ...]]] = None
+
+
+def install(mesh: Mesh, batch_axes: Tuple[str, ...]) -> None:
+    global _RULES
+    _RULES = (mesh, batch_axes)
+
+
+def clear() -> None:
+    global _RULES
+    _RULES = None
+
+
+def constrain(x, spec: P):
+    if _RULES is None:
+        return x
+    mesh, _ = _RULES
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def constrain_batch(x, batch_dim: int = 0):
+    """Pin ``batch_dim`` to the data axes, other dims unconstrained."""
+    if _RULES is None:
+        return x
+    mesh, baxes = _RULES
+    if x.shape[batch_dim] % _axes_size(mesh, baxes) != 0:
+        return x
+    spec = [None] * x.ndim
+    spec[batch_dim] = baxes if len(baxes) > 1 else baxes[0]
+    return constrain(x, P(*spec))
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def data_shards() -> int:
+    """Number of data-parallel shards (1 when no rules are installed).
+
+    Used by the MoE dispatch to keep token grouping shard-local (§Perf
+    hillclimb 2): the token dim is reshaped to (data_shards, T_local) so
+    sort/scatter/gather stay within a shard instead of lowering to global
+    collectives."""
+    if _RULES is None:
+        return 1
+    mesh, baxes = _RULES
+    return _axes_size(mesh, baxes)

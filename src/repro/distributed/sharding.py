@@ -1,0 +1,200 @@
+"""Sharding rules: parameter/activation/cache PartitionSpecs per arch.
+
+Strategy (DESIGN.md §5):
+  * TP over 'model' on head / ffn / vocab / expert dims;
+  * FSDP (ZeRO-3-style) over 'data' on the other big dim of every matrix —
+    GSPMD inserts the all-gather at use and the reduce-scatter in the
+    backward pass; optimizer moments inherit the same specs so the full
+    training state is sharded over all devices;
+  * EP over 'model' for the expert dim when divisible (deepseek 256/16),
+    TP-within-expert otherwise (mixtral 8 experts);
+  * batch over ('pod', 'data') — the 'pod' axis is data-parallel by default
+    (pipeline-parallel mapping lives in distributed/pipeline.py);
+  * KV caches: batch over data, kv-head dim over 'model' (GSPMD pads
+    8 kv-heads -> 16 shards; see DESIGN.md §6), SSM states head-sharded.
+
+Rules are *path-pattern based* so they survive model refactors; stacked
+layer params (leading n_layers axis under lax.scan) automatically get a
+leading ``None``.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def batch_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _model_size(mesh: Mesh) -> int:
+    return mesh.shape["model"]
+
+
+# map (leaf-name, core shape) -> base PartitionSpec (without the stacked
+# leading layer axis)
+def _base_spec(name: str, core_shape: Tuple[int, ...], cfg: ModelConfig,
+               mesh: Mesh) -> P:
+    ndim = len(core_shape)
+    fs = "data"          # FSDP axis
+    tp = "model"         # tensor-parallel axis
+
+    # ---- embeddings / head ----
+    if name == "embed":
+        return P(tp, fs)
+    if name == "lm_head":
+        return P(fs, tp)
+
+    # ---- MoE expert stacks (E, d, f) / (E, f, d) ----
+    if (name in ("w_gate", "w_up", "w_down") and ndim == 3
+            and cfg.n_experts and core_shape[0] == cfg.n_experts):
+        ep_ok = cfg.n_experts % _model_size(mesh) == 0
+        if name == "w_down":
+            return P(tp, None, fs) if ep_ok else P(None, tp, fs)
+        return P(tp, fs, None) if ep_ok else P(None, fs, tp)
+    if name == "router":
+        return P(fs, None)
+
+    # ---- attention (per-head 3-D layout; §Perf iteration 4) ----
+    if ndim == 3 and name == "wq":
+        return P(fs, tp, None)        # (d, Hq, hd): q-heads over model
+    if ndim == 3 and name in ("wk", "wv"):
+        return P(fs, None, None)      # K/V replicated over model (small)
+    if ndim == 3 and name == "wo":
+        return P(tp, None, fs)        # (Hq, hd, d)
+
+    # ---- MLA / dense / ssm projections ----
+    if ndim == 2 and name in ("wq", "wk", "wv", "wq_b", "wkv_b", "w_gate",
+                              "w_up", "in_proj", "proj", "wq_a", "wkv_a"):
+        return P(fs, tp)
+    if ndim == 2 and name in ("wo", "w_down", "out_proj"):
+        return P(tp, fs)
+    if ndim == 2 and name == "conv_w":
+        return P(None, tp)
+
+    # everything else (norm scales, biases, gates, A_log, D, dt_bias):
+    return P(*([None] * ndim))
+
+
+_STACK_KEYS = ("blocks", "dense_blocks", "cross_blocks", "enc_blocks")
+
+
+def param_pspec(path: Tuple[str, ...], leaf, cfg: ModelConfig,
+                mesh: Mesh) -> P:
+    stacked = any(str(k) in _STACK_KEYS for k in path)
+    core_shape = leaf.shape[1:] if stacked else leaf.shape
+    base = _base_spec(path[-1], core_shape, cfg, mesh)
+    return P(None, *base) if stacked else base
+
+
+def _path_str(path) -> Tuple[str, ...]:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return tuple(out)
+
+
+def params_pspecs(abstract_params, cfg: ModelConfig, mesh: Mesh):
+    """Pytree of PartitionSpecs matching the parameter pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: param_pspec(_path_str(p), l, cfg, mesh),
+        abstract_params)
+
+
+def params_shardings(abstract_params, cfg: ModelConfig, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        params_pspecs(abstract_params, cfg, mesh),
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# --------------------------------------------------------------------------
+# batches and caches
+# --------------------------------------------------------------------------
+def batch_pspecs(batch_specs, mesh: Mesh):
+    b = batch_axes(mesh)
+
+    def spec(leaf):
+        return P(b, *([None] * (len(leaf.shape) - 1)))
+    return jax.tree_util.tree_map(spec, batch_specs)
+
+
+def cache_pspec(path: Tuple[str, ...], leaf, cfg: ModelConfig,
+                mesh: Mesh) -> P:
+    """KV caches (L?, B, S, H, D), SSM states, cross K/V.
+
+    The *sequence* dim of attention caches shards over 'model' (GQA head
+    counts 8 < 16 cannot shard the head dim; context lengths always divide).
+    Softmax over the sharded key axis lowers to an all-reduce of the online
+    max/sum — cheap relative to cache HBM savings (see §Roofline).
+    """
+    name = path[-1]
+    b = batch_axes(mesh)
+    nd = len(leaf.shape)
+    stacked = any(str(k) in ("layers", "dense_layers", "shared")
+                  for k in path) or name in ("cross_k", "cross_v")
+    lead = (None,) if stacked else ()
+    if name in ("k", "v", "cross_k", "cross_v"):     # (B, S, Hkv, D)
+        return P(*lead, b, "model", None, None)
+    if name == "c_kv":                               # (B, S, kr)
+        return P(*lead, b, "model", None)
+    if name == "k_rope":                             # (B, S, dr)
+        return P(*lead, b, "model", None)
+    if name == "state":                              # (B, H, P, N)
+        return P(*lead, b, "model", None, None)
+    if name == "conv":                               # (B, R-1, ch)
+        return P(*lead, b, None, "model")
+    return P(*([None] * nd))
+
+
+def cache_pspecs(abstract_cache, cfg: ModelConfig, mesh: Mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: cache_pspec(_path_str(p), l, cfg, mesh),
+        abstract_cache)
+
+
+def opt_state_pspecs(abstract_opt_state, pspecs_params):
+    """AdamW moments inherit the parameter specs; step is replicated."""
+    from repro.optim.optimizers import AdamWState
+    return AdamWState(step=P(), mu=pspecs_params, nu=pspecs_params)
+
+
+def sanitize_pspec(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Drop mesh axes from dims they do not divide (batch=1 decode, 8 GQA
+    kv-heads on a 16-way axis, ...) — explicit jit in_shardings require
+    exact divisibility."""
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None or i >= len(shape):
+            out.append(entry)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        out.append(entry if shape[i] % size == 0 else None)
+    return P(*out)
+
+
+def sanitized_shardings(pspecs, abstract_tree, mesh: Mesh):
+    """NamedShardings with non-divisible axes dropped per leaf."""
+    return jax.tree_util.tree_map(
+        lambda s, l: NamedSharding(mesh, sanitize_pspec(s, l.shape, mesh)),
+        pspecs, abstract_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def to_shardings(pspecs, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), pspecs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the SFC hot spots (+ pure-jnp oracles in ref.py)."""
+from repro.kernels.ops import (extract_tiles, fastconv2d_fp,
+                               quantized_fastconv2d, quantize_weights, untile)
+from repro.kernels.sfc_transform import sfc_transform, sfc_transform_quantize
+from repro.kernels.sfc_tdmm import tdmm_int8
+from repro.kernels.sfc_inverse import sfc_inverse
+from repro.kernels import ref
+
+__all__ = [
+    "sfc_transform", "sfc_transform_quantize", "tdmm_int8", "sfc_inverse",
+    "quantized_fastconv2d", "fastconv2d_fp", "quantize_weights",
+    "extract_tiles", "untile", "ref",
+]

@@ -1,0 +1,107 @@
+"""Jit'd public wrappers assembling the Pallas SFC kernels end-to-end.
+
+``quantized_fastconv2d`` is the deployment path of the paper's pipeline:
+
+  tile -> [Pallas: transform + per-frequency int8 quant]   (additions only)
+       -> [Pallas: t^2-position int8 MXU matmul + dequant]
+       -> [Pallas: inverse transform incl. correction terms]
+       -> untile
+
+Scales are static (PTQ-calibrated): act_scale (t, t), w_scale (t, t, Cout).
+On this CPU-only container the kernels run with interpret=True; on TPU pass
+interpret=False (the layouts/BlockSpecs are chosen for v5e).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import conv2d as c2d
+from repro.core.generator import BilinearAlgorithm
+from repro.kernels.sfc_transform import sfc_transform, sfc_transform_quantize
+from repro.kernels.sfc_tdmm import tdmm_int8
+from repro.kernels.sfc_inverse import sfc_inverse
+
+
+def extract_tiles(x: jnp.ndarray, algo: BilinearAlgorithm,
+                  padding: str = "SAME") -> Tuple[jnp.ndarray, Tuple]:
+    """(B,H,W,C) -> flat tiles (B*nH*nW, L, L, C) + geometry."""
+    B, H, W, C = x.shape
+    M, R, L = algo.M, algo.R, algo.L
+    lo_h, hi_h, out_h = c2d.pad_amounts(H, M, R, padding)
+    lo_w, hi_w, out_w = c2d.pad_amounts(W, M, R, padding)
+    xp = jnp.pad(x, ((0, 0), (lo_h, hi_h), (lo_w, hi_w), (0, 0)))
+    nH = (xp.shape[1] - (R - 1)) // M
+    nW = (xp.shape[2] - (R - 1)) // M
+    ih = np.arange(nH)[:, None] * M + np.arange(L)[None, :]
+    iw = np.arange(nW)[:, None] * M + np.arange(L)[None, :]
+    tiles = xp[:, ih, :, :][:, :, :, iw, :]
+    tiles = jnp.transpose(tiles, (0, 1, 3, 2, 4, 5)).reshape(
+        B * nH * nW, L, L, C)
+    return tiles, (B, out_h, out_w, nH, nW)
+
+
+def untile(y_tiles: jnp.ndarray, algo: BilinearAlgorithm,
+           geom: Tuple) -> jnp.ndarray:
+    B, out_h, out_w, nH, nW = geom
+    M = algo.M
+    O = y_tiles.shape[-1]
+    y = y_tiles.reshape(B, nH, nW, M, M, O)
+    y = jnp.transpose(y, (0, 1, 3, 2, 4, 5)).reshape(B, nH * M, nW * M, O)
+    return y[:, :out_h, :out_w, :]
+
+
+def quantize_weights(w: jnp.ndarray, algo: BilinearAlgorithm,
+                     w_scale: jnp.ndarray) -> jnp.ndarray:
+    """(R,R,Cin,Cout) f32 -> (t^2, Cin, Cout) int8 — offline, once."""
+    tw = c2d.transform_weights_2d(w, algo)            # (t,t,Cin,Cout)
+    q = jnp.clip(jnp.round(tw / w_scale[:, :, None, :]), -127, 127)
+    t = tw.shape[0]
+    return q.astype(jnp.int8).reshape(t * t, w.shape[2], w.shape[3])
+
+
+@functools.partial(jax.jit, static_argnames=("algo", "padding", "interpret"))
+def quantized_fastconv2d(x: jnp.ndarray, wq: jnp.ndarray,
+                         act_scale: jnp.ndarray, w_scale: jnp.ndarray,
+                         algo: BilinearAlgorithm, *,
+                         padding: str = "SAME",
+                         interpret: bool = True) -> jnp.ndarray:
+    """int8 SFC convolution with pre-quantized weights.
+
+    x (B,H,W,Cin) f32; wq (t^2, Cin, Cout) int8; act_scale (t,t);
+    w_scale (t,t,Cout) -> (B,H',W',Cout) f32.
+    """
+    t = algo.t
+    bt = jnp.asarray(algo.bt(), jnp.float32)
+    at = jnp.asarray(algo.at(), jnp.float32)
+    tiles, geom = extract_tiles(x, algo, padding)
+    xq = sfc_transform_quantize(tiles, bt, act_scale, interpret=interpret)
+    T = xq.shape[0]
+    C = xq.shape[-1]
+    X = jnp.transpose(xq.reshape(T, t * t, C), (1, 0, 2))   # (P, T, C)
+    Y = tdmm_int8(X, wq, act_scale.reshape(t * t),
+                  w_scale.reshape(t * t, -1), interpret=interpret)
+    O = Y.shape[-1]
+    ty = jnp.transpose(Y, (1, 0, 2)).reshape(T, t, t, O)
+    y_tiles = sfc_inverse(ty, at, interpret=interpret)
+    return untile(y_tiles, algo, geom)
+
+
+@functools.partial(jax.jit, static_argnames=("algo", "padding", "interpret"))
+def fastconv2d_fp(x: jnp.ndarray, w: jnp.ndarray, algo: BilinearAlgorithm, *,
+                  padding: str = "SAME", interpret: bool = True
+                  ) -> jnp.ndarray:
+    """Unquantized kernel path (transform -> f32 tdmm -> inverse)."""
+    bt = jnp.asarray(algo.bt(), x.dtype)
+    at = jnp.asarray(algo.at(), x.dtype)
+    t = algo.t
+    tiles, geom = extract_tiles(x, algo, padding)
+    tx = sfc_transform(tiles, bt, interpret=interpret)
+    tw = c2d.transform_weights_2d(w, algo)
+    ty = jnp.einsum("ntuc,tuco->ntuo", tx, tw)
+    y_tiles = sfc_inverse(ty, at, interpret=interpret)
+    return untile(y_tiles, algo, geom)

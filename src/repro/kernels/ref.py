@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for the Pallas kernels (the ``ref.py`` contract).
+
+Shapes use the *kernel* layout:
+  tiles     : (nT, L, L, C)      flattened spatial tiles, channels last
+  transform : (nT, t, t, C)
+  tdmm      : X (P, T, K) int8, W (P, K, N) int8 -> (P, T, N) f32
+              with per-position activation scales sx (P,) and
+              per-position-per-channel weight scales sw (P, N)
+  inverse   : (nT, t, t, O) -> (nT, M, M, O)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.generator import BilinearAlgorithm
+
+
+def sfc_transform_ref(tiles: jnp.ndarray, bt: jnp.ndarray) -> jnp.ndarray:
+    # f32 accumulation to match the kernel's MXU semantics exactly
+    out = jnp.einsum("ti,nijc,uj->ntuc", bt, tiles, bt,
+                     preferred_element_type=jnp.float32)
+    return out.astype(tiles.dtype)
+
+
+def sfc_transform_quantize_ref(tiles: jnp.ndarray, bt: jnp.ndarray,
+                               scale: jnp.ndarray, bits: int = 8
+                               ) -> jnp.ndarray:
+    """Transform + static per-frequency quantization to intN."""
+    tx = sfc_transform_ref(tiles, bt)
+    qmax = 2 ** (bits - 1) - 1
+    q = jnp.clip(jnp.round(tx / scale[None, :, :, None]), -qmax, qmax)
+    return q.astype(jnp.int8)
+
+
+def tdmm_int8_ref(xq: jnp.ndarray, wq: jnp.ndarray, sx: jnp.ndarray,
+                  sw: jnp.ndarray) -> jnp.ndarray:
+    """Transform-domain matmul: int8 x int8 -> int32 -> dequant f32."""
+    acc = jnp.einsum("ptk,pkn->ptn", xq.astype(jnp.int32),
+                     wq.astype(jnp.int32))
+    return acc.astype(jnp.float32) * (sx[:, None, None] * sw[:, None, :])
+
+
+def sfc_inverse_ref(ty: jnp.ndarray, at: jnp.ndarray) -> jnp.ndarray:
+    return jnp.einsum("mt,ntuo,pu->nmpo", at, ty, at)
+
+
+def quantized_fastconv2d_ref(x: jnp.ndarray, w: jnp.ndarray,
+                             algo: BilinearAlgorithm,
+                             act_scale: jnp.ndarray,
+                             w_scale: jnp.ndarray,
+                             padding: str = "SAME") -> jnp.ndarray:
+    """End-to-end oracle for the fused int8 SFC convolution pipeline.
+
+    act_scale: (t, t) static calibrated scales; w_scale: (t, t, Cout).
+    """
+    from repro.core import conv2d as c2d
+
+    B, H, W_, C = x.shape
+    tx, geom = c2d.transform_input_2d(x, algo, padding)
+    nH, nW = geom[2], geom[3]
+    t = algo.t
+    tiles_flat = tx.reshape(B * nH * nW, t, t, C)
+    qmax = 127
+    xq = jnp.clip(jnp.round(tiles_flat / act_scale[None, :, :, None]),
+                  -qmax, qmax).astype(jnp.int8)
+    tw = c2d.transform_weights_2d(w, algo)
+    wq = jnp.clip(jnp.round(tw / w_scale[:, :, None, :]),
+                  -qmax, qmax).astype(jnp.int8)
+    P = t * t
+    X = jnp.transpose(xq.reshape(B * nH * nW, P, C), (1, 0, 2))
+    Wm = wq.reshape(P, C, -1)
+    sx = act_scale.reshape(P)
+    sw = w_scale.reshape(P, -1)
+    Y = tdmm_int8_ref(X, Wm, sx, sw)                # (P, T, O)
+    O = Y.shape[-1]
+    ty = jnp.transpose(Y, (1, 0, 2)).reshape(B * nH * nW, t, t, O)
+    y = sfc_inverse_ref(ty, jnp.asarray(algo.at(), ty.dtype))
+    y = y.reshape(B, nH, nW, algo.M, algo.M, O)
+    y = jnp.transpose(y, (0, 1, 3, 2, 4, 5)).reshape(
+        B, nH * algo.M, nW * algo.M, O)
+    return y[:, :geom[0], :geom[1], :]

@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: SFC inverse transform A^T Y A.
+
+Maps dequantized transform-domain outputs (nT, t, t, O) back to spatial
+output tiles (nT, M, M, O).  A^T carries the correction-term columns, so the
+circular->linear conversion of paper §4.2 happens inside this same GEMM —
+no separate correction pass or extra HBM traffic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_BLOCK = 8
+CHAN_BLOCK = 128
+
+
+def _inverse_kernel(at_ref, y_ref, o_ref):
+    at = at_ref[...]                                  # (M, t)
+    y = y_ref[...]                                    # (TB, t, t, OB)
+    z = jnp.einsum("mt,ntuc->nmuc", at, y,
+                   preferred_element_type=jnp.float32)
+    z = jnp.einsum("pu,nmuc->nmpc", at, z,
+                   preferred_element_type=jnp.float32)
+    o_ref[...] = z.astype(o_ref.dtype)
+
+
+def _pad_to(x, axis, mult):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x, 0
+    width = [(0, 0)] * x.ndim
+    width[axis] = (0, pad)
+    return jnp.pad(x, width), pad
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "tile_block",
+                                             "chan_block"))
+def sfc_inverse(ty: jnp.ndarray, at: jnp.ndarray, *,
+                interpret: bool = True, tile_block: int = TILE_BLOCK,
+                chan_block: int = CHAN_BLOCK) -> jnp.ndarray:
+    """(nT, t, t, O) -> (nT, M, M, O)."""
+    nT, t, _, O = ty.shape
+    M = at.shape[0]
+    ty, _ = _pad_to(ty, 0, tile_block)
+    ty, _ = _pad_to(ty, 3, chan_block)
+    nTp, Op = ty.shape[0], ty.shape[3]
+    out = pl.pallas_call(
+        _inverse_kernel,
+        grid=(nTp // tile_block, Op // chan_block),
+        in_specs=[
+            pl.BlockSpec((M, t), lambda i, j: (0, 0)),
+            pl.BlockSpec((tile_block, t, t, chan_block),
+                         lambda i, j: (i, 0, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_block, M, M, chan_block),
+                               lambda i, j: (i, 0, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((nTp, M, M, Op), ty.dtype),
+        interpret=interpret,
+    )(at.astype(ty.dtype), ty)
+    return out[:nT, :, :, :O]

@@ -1,0 +1,76 @@
+"""Pallas TPU kernel: transform-domain int8 matmul with fused dequant.
+
+The MXU hot spot of the SFC pipeline: for each transform-domain position
+p in [0, t^2) an independent GEMM
+
+    Y[p] = dequant( X[p] @ W[p] )        X: (T, K) int8, W: (K, N) int8
+
+accumulated in int32 on the MXU and dequantized with the per-frequency
+activation scale sx[p] and per-frequency-per-channel weight scales sw[p, :]
+(paper Eq. 17).  Compared to direct int8 convolution, this stage runs
+t^2 / (M^2 R^2) = 1/3.24x fewer MACs for SFC-6(6x6,3x3).
+
+Blocking: grid (P, T/bt, N/bn) with the full K (C_in) dimension resident —
+for bt = bn = 128, K = 2048: 256 KiB int8 X + 256 KiB W + 64 KiB int32 acc,
+comfortably within a v5e core's 16 MiB VMEM. MXU dims (bt, K, bn) are all
+128-multiples.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+T_BLOCK = 128
+N_BLOCK = 128
+
+
+def _tdmm_kernel(x_ref, w_ref, sx_ref, sw_ref, o_ref):
+    x = x_ref[0]                                     # (bt, K) int8
+    w = w_ref[0]                                     # (K, bn) int8
+    acc = jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)            # (bt, bn) int32
+    scale = sx_ref[0] * sw_ref[0]                    # (bn,) f32
+    o_ref[0] = acc.astype(jnp.float32) * scale[None, :]
+
+
+def _pad_to(x, axis, mult):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    width = [(0, 0)] * x.ndim
+    width[axis] = (0, pad)
+    return jnp.pad(x, width)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "t_block",
+                                             "n_block"))
+def tdmm_int8(xq: jnp.ndarray, wq: jnp.ndarray, sx: jnp.ndarray,
+              sw: jnp.ndarray, *, interpret: bool = True,
+              t_block: int = T_BLOCK, n_block: int = N_BLOCK) -> jnp.ndarray:
+    """X (P, T, K) int8 x W (P, K, N) int8 -> (P, T, N) f32."""
+    P, T, K = xq.shape
+    _, _, N = wq.shape
+    assert wq.shape == (P, K, N) and sx.shape == (P,) and sw.shape == (P, N)
+    xq = _pad_to(xq, 1, t_block)
+    wq = _pad_to(wq, 2, n_block)
+    sw_p = _pad_to(sw, 1, n_block)
+    Tp, Np = xq.shape[1], wq.shape[2]
+    out = pl.pallas_call(
+        _tdmm_kernel,
+        grid=(P, Tp // t_block, Np // n_block),
+        in_specs=[
+            pl.BlockSpec((1, t_block, K), lambda p, i, j: (p, i, 0)),
+            pl.BlockSpec((1, K, n_block), lambda p, i, j: (p, 0, j)),
+            pl.BlockSpec((1,), lambda p, i, j: (p,)),
+            pl.BlockSpec((1, n_block), lambda p, i, j: (p, j)),
+        ],
+        out_specs=pl.BlockSpec((1, t_block, n_block),
+                               lambda p, i, j: (p, i, j)),
+        out_shape=jax.ShapeDtypeStruct((P, Tp, Np), jnp.float32),
+        interpret=interpret,
+    )(xq, wq, sx.astype(jnp.float32), sw_p.astype(jnp.float32))
+    return out[:, :T, :N]

@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: SFC input tile transform (+ fused quantization).
+
+Computes TX[n, :, :, c] = B^T @ X[n, :, :, c] @ B for a block of tiles and
+channels per grid step.  The transform matrices are {-1, 0, 1} integer
+matrices (the paper's additions-only SFT), so on TPU this lowers to cheap
+VPU/MXU work; the fused variant also applies static per-frequency scales and
+emits int8, saving an HBM round-trip of the f32 transform-domain tensor
+(the dominant memory term of the SFC pipeline — see EXPERIMENTS.md §Perf).
+
+VMEM budget per grid step (defaults TILE_BLOCK=8, CHAN_BLOCK=128, L<=14):
+  in  : 8 * 14 * 14 * 128 * 4B   = 0.8 MiB
+  out : 8 * 14 * 14 * 128 * 1..4B <= 0.8 MiB            (fits 16 MiB VMEM)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_BLOCK = 8
+CHAN_BLOCK = 128
+
+
+def _transform_kernel(bt_ref, x_ref, o_ref):
+    bt = bt_ref[...]                                  # (t, L)
+    x = x_ref[...]                                    # (TB, L, L, CB)
+    y = jnp.einsum("ti,nijc->ntjc", bt, x,
+                   preferred_element_type=jnp.float32)
+    y = jnp.einsum("uj,ntjc->ntuc", bt, y,
+                   preferred_element_type=jnp.float32)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def _transform_quant_kernel(bt_ref, scale_ref, x_ref, o_ref, *, bits: int):
+    bt = bt_ref[...]
+    x = x_ref[...]
+    y = jnp.einsum("ti,nijc->ntjc", bt, x,
+                   preferred_element_type=jnp.float32)
+    y = jnp.einsum("uj,ntjc->ntuc", bt, y,
+                   preferred_element_type=jnp.float32)
+    qmax = 2 ** (bits - 1) - 1
+    s = scale_ref[...]                                # (t, t)
+    q = jnp.clip(jnp.round(y / s[None, :, :, None]), -qmax, qmax)
+    o_ref[...] = q.astype(o_ref.dtype)
+
+
+def _pad_to(x, axis, mult):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x, 0
+    width = [(0, 0)] * x.ndim
+    width[axis] = (0, pad)
+    return jnp.pad(x, width), pad
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "tile_block",
+                                             "chan_block"))
+def sfc_transform(tiles: jnp.ndarray, bt: jnp.ndarray, *,
+                  interpret: bool = True,
+                  tile_block: int = TILE_BLOCK,
+                  chan_block: int = CHAN_BLOCK) -> jnp.ndarray:
+    """tiles (nT, L, L, C) f32 -> (nT, t, t, C) f32."""
+    nT, L, _, C = tiles.shape
+    t = bt.shape[0]
+    tiles, pad_n = _pad_to(tiles, 0, tile_block)
+    tiles, pad_c = _pad_to(tiles, 3, chan_block)
+    nTp, Cp = tiles.shape[0], tiles.shape[3]
+    out = pl.pallas_call(
+        _transform_kernel,
+        grid=(nTp // tile_block, Cp // chan_block),
+        in_specs=[
+            pl.BlockSpec((t, L), lambda i, j: (0, 0)),
+            pl.BlockSpec((tile_block, L, L, chan_block),
+                         lambda i, j: (i, 0, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_block, t, t, chan_block),
+                               lambda i, j: (i, 0, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((nTp, t, t, Cp), tiles.dtype),
+        interpret=interpret,
+    )(bt.astype(tiles.dtype), tiles)
+    return out[:nT, :, :, :C]
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret",
+                                             "tile_block", "chan_block"))
+def sfc_transform_quantize(tiles: jnp.ndarray, bt: jnp.ndarray,
+                           scale: jnp.ndarray, *, bits: int = 8,
+                           interpret: bool = True,
+                           tile_block: int = TILE_BLOCK,
+                           chan_block: int = CHAN_BLOCK) -> jnp.ndarray:
+    """tiles (nT, L, L, C) f32 -> int8 (nT, t, t, C), fused static quant."""
+    nT, L, _, C = tiles.shape
+    t = bt.shape[0]
+    tiles, _ = _pad_to(tiles, 0, tile_block)
+    tiles, _ = _pad_to(tiles, 3, chan_block)
+    nTp, Cp = tiles.shape[0], tiles.shape[3]
+    kern = functools.partial(_transform_quant_kernel, bits=bits)
+    out = pl.pallas_call(
+        kern,
+        grid=(nTp // tile_block, Cp // chan_block),
+        in_specs=[
+            pl.BlockSpec((t, L), lambda i, j: (0, 0)),
+            pl.BlockSpec((t, t), lambda i, j: (0, 0)),
+            pl.BlockSpec((tile_block, L, L, chan_block),
+                         lambda i, j: (i, 0, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_block, t, t, chan_block),
+                               lambda i, j: (i, 0, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((nTp, t, t, Cp), jnp.int8),
+        interpret=interpret,
+    )(bt.astype(tiles.dtype), scale.astype(tiles.dtype), tiles)
+    return out[:nT, :, :, :C]

@@ -1,0 +1,263 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + \
+    " --xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes, record memory/cost/collective analysis for §Roofline.
+
+  PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --multi-pod     # 2-pod mesh
+
+Results are cached as JSON under experiments/dryrun/ so the sweep is
+resumable; EXPERIMENTS.md §Dry-run / §Roofline are generated from them.
+"""
+import argparse
+import json
+import pathlib
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, SHAPES, cells, get_config
+from repro.distributed import sharding as shd
+from repro.launch import mesh as mesh_lib
+from repro.models.registry import build
+from repro.optim.optimizers import AdamW
+from repro.train import steps as steps_lib
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[8,128]{1,0}' -> bytes."""
+    m = re.match(r"([a-z0-9]+)\[([0-9,]*)\]", shape_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def collective_bytes(hlo_text: str):
+    """Sum operand bytes of every collective op in the (SPMD) HLO."""
+    totals = {c: 0 for c in _COLLECTIVES}
+    counts = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"(?:%?[\w.\-]+\s*=\s*)?"
+                     r"(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+                     r"([a-z0-9\-]+)", ls)
+        if not m:
+            continue
+        op = m.group(1)
+        if op.endswith("-start"):
+            op = op[:-6]
+        if op not in _COLLECTIVES:
+            continue
+        # operand shapes: inside the op's argument list
+        args = ls.split(op, 1)[1]
+        shapes = re.findall(r"([a-z0-9]+\[[0-9,]*\])", args)
+        totals[op] += sum(_shape_bytes(s) for s in shapes)
+        counts[op] += 1
+    return totals, counts
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    model = build(cfg)
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+
+    from repro.distributed import act_sharding as acts
+    acts.install(mesh, shd.batch_axes(mesh))
+    with mesh:
+        params_abs = model.init_abstract()
+        pspecs = shd.params_pspecs(params_abs, cfg, mesh)
+        p_shard = shd.sanitized_shardings(pspecs, params_abs, mesh)
+
+        if shape.kind == "train":
+            opt = AdamW(lr=3e-4)
+            state_abs = steps_lib.abstract_train_state(model, opt)
+            state_pspecs = steps_lib.TrainState(
+                params=pspecs,
+                opt=shd.opt_state_pspecs(state_abs.opt, pspecs),
+                rng=jax.sharding.PartitionSpec())
+            state_shard = shd.sanitized_shardings(state_pspecs, state_abs,
+                                                  mesh)
+            batch_abs = model.batch_specs(shape)
+            b_shard = shd.sanitized_shardings(
+                shd.batch_pspecs(batch_abs, mesh), batch_abs, mesh)
+            step = steps_lib.make_train_step(model, opt)
+            jitted = jax.jit(step,
+                             in_shardings=(state_shard, b_shard),
+                             out_shardings=(state_shard, None),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_abs, batch_abs)
+        elif shape.kind == "prefill":
+            batch_abs = model.batch_specs(shape)
+            b_shard = shd.sanitized_shardings(
+                shd.batch_pspecs(batch_abs, mesh), batch_abs, mesh)
+            memory = batch_abs.get("vision", batch_abs.get("frames"))
+            mem_shard = (None if memory is None else
+                         shd.sanitized_shardings(
+                             shd.batch_pspecs(memory, mesh), memory, mesh))
+            step = steps_lib.make_prefill_step(model)
+            jitted = jax.jit(step, in_shardings=(
+                p_shard, b_shard["tokens"], mem_shard))
+            lowered = jitted.lower(params_abs, batch_abs["tokens"], memory)
+        else:  # decode
+            cache_abs = model.cache_abstract(shape)
+            c_pspecs = shd.cache_pspecs(cache_abs, cfg, mesh)
+            c_shard = shd.sanitized_shardings(c_pspecs, cache_abs, mesh)
+            dec = model.decode_specs(shape)
+            b = shd.batch_axes(mesh)
+            tok_shard = shd.sanitized_shardings(
+                jax.sharding.PartitionSpec(b, None), dec["tokens"], mesh)
+            pos_shard = shd.sanitized_shardings(
+                jax.sharding.PartitionSpec(b), dec["pos"], mesh)
+            step = steps_lib.make_serve_step(model)
+            jitted = jax.jit(step,
+                             in_shardings=(p_shard, c_shard, tok_shard,
+                                           pos_shard),
+                             out_shardings=(tok_shard, None, c_shard),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params_abs, cache_abs, dec["tokens"],
+                                   dec["pos"])
+
+        compiled = lowered.compile()
+        cost = compiled.cost_analysis() or {}
+        try:
+            mem = compiled.memory_analysis()
+            mem_info = {
+                "argument_size_in_bytes": getattr(
+                    mem, "argument_size_in_bytes", None),
+                "output_size_in_bytes": getattr(
+                    mem, "output_size_in_bytes", None),
+                "temp_size_in_bytes": getattr(
+                    mem, "temp_size_in_bytes", None),
+                "generated_code_size_in_bytes": getattr(
+                    mem, "generated_code_size_in_bytes", None),
+            }
+        except Exception as e:          # CPU backend may not implement it
+            mem_info = {"error": str(e)}
+        hlo = compiled.as_text()
+        coll, coll_counts = collective_bytes(hlo)
+        # loop-aware analysis (cost_analysis counts while bodies once; see
+        # repro/launch/hlo_analysis.py) + archive the HLO for §Perf work
+        from repro.launch import hlo_analysis
+        summary = hlo_analysis.analyze(hlo)
+        import gzip
+        hlo_dir = OUT_DIR.parent / "hlo"
+        hlo_dir.mkdir(parents=True, exist_ok=True)
+        mesh_tag = "pod2" if multi_pod else "pod1"
+        with gzip.open(hlo_dir / f"{mesh_tag}_{arch}_{shape_name}.hlo.gz",
+                       "wt") as f:
+            f.write(hlo)
+
+    acts.clear()
+    n_params = sum(np.prod(l.shape) for l in
+                   jax.tree_util.tree_leaves(params_abs))
+    model_flops = 6 * cfg.active_param_count() * (
+        shape.seq_len * shape.global_batch if shape.kind == "train"
+        else (shape.seq_len * shape.global_batch if shape.kind == "prefill"
+              else shape.global_batch))
+    if shape.kind != "train":
+        model_flops = model_flops / 3  # fwd only = 2ND
+
+    return {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "kind": shape.kind,
+        "n_params": int(n_params),
+        "active_params": int(cfg.active_param_count()),
+        "hlo_flops": cost.get("flops"),
+        "hlo_bytes": cost.get("bytes accessed"),
+        "model_flops": float(model_flops),
+        "collective_bytes": coll,
+        "collective_counts": coll_counts,
+        "memory": mem_info,
+        # loop-corrected (per-device, trip counts multiplied through)
+        "la_flops": summary.flops,
+        "la_collective_bytes": summary.collective_bytes,
+        "la_collective_counts": summary.collective_counts,
+        "la_traffic_bytes": summary.traffic_bytes,
+        "la_param_bytes": summary.param_bytes,
+        "la_loop_trips": {k: v for k, v in
+                          sorted(summary.loop_trips.items())[:40]},
+    }
+
+
+def run_cell(arch, shape_name, multi_pod, force=False):
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    mesh_tag = "pod2" if multi_pod else "pod1"
+    out = OUT_DIR / f"{mesh_tag}_{arch}_{shape_name}.json"
+    if out.exists() and not force:
+        print(f"[skip] {out.name} (cached)")
+        return json.loads(out.read_text())
+    t0 = time.time()
+    print(f"[lower+compile] {mesh_tag} {arch} {shape_name} ...", flush=True)
+    try:
+        rec = lower_cell(arch, shape_name, multi_pod)
+        rec["compile_seconds"] = time.time() - t0
+        out.write_text(json.dumps(rec, indent=1))
+        print(f"[ok] {out.name} flops={rec['hlo_flops']:.3e} "
+              f"({rec['compile_seconds']:.0f}s)", flush=True)
+        return rec
+    except Exception:
+        err = traceback.format_exc()
+        print(f"[FAIL] {mesh_tag} {arch} {shape_name}\n{err}", flush=True)
+        (OUT_DIR / f"FAIL_{mesh_tag}_{arch}_{shape_name}.txt").write_text(err)
+        return None
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ARCH_IDS))
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    todo = cells()
+    if args.arch:
+        todo = [(a, s) for a, s in todo if a == args.arch]
+    if args.shape:
+        todo = [(a, s) for a, s in todo if s == args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    ok = fail = 0
+    for multi_pod in meshes:
+        for arch, shape_name in todo:
+            rec = run_cell(arch, shape_name, multi_pod, force=args.force)
+            ok += rec is not None
+            fail += rec is None
+    print(f"\ndry-run: {ok} ok, {fail} failed")
+    sys.exit(1 if fail else 0)
+
+
+if __name__ == "__main__":
+    main()

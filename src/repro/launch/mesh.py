@@ -1,0 +1,26 @@
+"""Production meshes (TPU v5e pods): 16x16 = 256 chips/pod, 2 pods = 512.
+
+``make_production_mesh`` is a function (not a module constant) so importing
+this module never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Whatever this host actually has (tests / examples / smoke runs)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))
+
+
+# TPU v5e hardware constants (per chip) — roofline denominators.
+PEAK_BF16_FLOPS = 197e12          # 197 TFLOP/s
+HBM_BW = 819e9                    # 819 GB/s
+ICI_BW = 50e9                     # ~50 GB/s per link

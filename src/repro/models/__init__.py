@@ -1,0 +1,7 @@
+"""Model zoo: assigned LM architectures + the paper's CNNs."""
+from repro.models.registry import Model, build
+from repro.models import (attention, cnn, decode, layers, mla, moe, ssm,
+                          transformer)
+
+__all__ = ["Model", "build", "attention", "cnn", "decode", "layers", "mla",
+           "moe", "ssm", "transformer"]

@@ -1,0 +1,333 @@
+"""Attention: GQA with flash-style chunked softmax, sliding window, KV cache.
+
+Prefill/training uses an online-softmax scan over KV chunks so the (S x S)
+score matrix is never materialized — required to compile the 32k-prefill
+and 4k-train cells at production batch sizes (see DESIGN.md §5).
+
+Decode attends one query against the cache (optionally a ring buffer for
+sliding-window archs, giving O(window) memory at 500k contexts).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+from repro.models.layers import Params
+
+NEG_INF = -1e30
+
+
+def padded_heads(cfg, n: int, pad_to: int = 16) -> int:
+    """Physical head-count padding so the head dim always divides a 16-way
+    model axis.  jit in_shardings demand exact divisibility (GSPMD padding
+    only applies to internal ops — §Perf iterations 3/4 showed a dropped
+    axis silently replicates attention), so we pad the *parameters*: dead
+    heads start at zero, receive zero signal through the zero wo rows, and
+    cost Hq_pad/Hq extra attention flops (48/40 = 20% for qwen2.5).
+    """
+    if n % pad_to == 0 or n < pad_to:
+        return n
+    return -(-n // pad_to) * pad_to
+
+
+def init_attention(key, cfg, dtype) -> Params:
+    """Per-head QKV layout: wq (d, Hq_pad, hd), wk/wv (d, Hkv, hd), wo
+    (Hq_pad, hd, d).
+
+    TP plan (§Perf iteration 4): padded q heads shard exactly over the
+    model axis; **K/V are replicated over the model axis** (g-times smaller
+    than Q) and expanded to per-q-head copies locally, so every attention
+    einsum is shard-aligned — no resharding collectives (iteration-2
+    bottleneck) and no 2x kv-slot padding (iteration-3 regression).
+    """
+    d = cfg.d_model
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    hq_p = padded_heads(cfg, hq)
+    ks = jax.random.split(key, 4)
+
+    def heads(key, n, n_pad):
+        w = layers.dense_init(key, d, n * hd, dtype).reshape(d, n, hd)
+        if n_pad > n:
+            w = jnp.concatenate(
+                [w, jnp.zeros((d, n_pad - n, hd), dtype)], axis=1)
+        return w
+
+    wo = layers.dense_init(ks[3], hq * hd, d, dtype).reshape(hq, hd, d)
+    if hq_p > hq:
+        wo = jnp.concatenate(
+            [wo, jnp.zeros((hq_p - hq, hd, d), dtype)], axis=0)
+    p = {
+        "wq": heads(ks[0], hq, hq_p),
+        "wk": heads(ks[1], hkv, hkv),
+        "wv": heads(ks[2], hkv, hkv),
+        "wo": wo,
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq_p, hd), dtype)
+        p["bk"] = jnp.zeros((hkv, hd), dtype)
+        p["bv"] = jnp.zeros((hkv, hd), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = layers.init_rmsnorm(hd, dtype)
+        p["k_norm"] = layers.init_rmsnorm(hd, dtype)
+    return p
+
+
+def _project_qkv(p: Params, cfg, x: jnp.ndarray, positions: jnp.ndarray,
+                 rope: bool = True):
+    """Returns q (B,S,Hq_pad,hd), k (B,S,Hkv,hd), v (B,S,Hkv,hd)."""
+    q = jnp.einsum("bsd,dkh->bskh", x, p["wq"])
+    k = jnp.einsum("bsd,dkh->bskh", x, p["wk"])
+    v = jnp.einsum("bsd,dkh->bskh", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if cfg.qk_norm:
+        q = layers.rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = layers.rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if rope:
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def expand_kv_padded(k: jnp.ndarray, cfg) -> jnp.ndarray:
+    """(B,S,Hkv,hd) -> (B,S,Hq_pad,hd): per-q-head KV copies (local; the
+    source is model-axis-replicated; transient under remat).  Padded head
+    slots reuse kv head 0 (their scores are discarded by the zero wo)."""
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    hq_p = padded_heads(cfg, hq)
+    g = hq // hkv
+    out = jnp.repeat(k, g, axis=2) if g > 1 else k
+    if hq_p > hq:
+        pad = jnp.broadcast_to(out[:, :, :1, :],
+                               out.shape[:2] + (hq_p - hq, out.shape[-1]))
+        out = jnp.concatenate([out, pad], axis=2)
+    return out
+
+
+def attention_output(p: Params, cfg, o: jnp.ndarray) -> jnp.ndarray:
+    """o (B,S,n,1,hd) or (B,S,n,hd) -> (B,S,d); n may be Hq or Hq_pad
+    (wo rows are sliced to match; padded rows are zero anyway)."""
+    B, S = o.shape[:2]
+    o = o.reshape(B, S, -1, cfg.head_dim)
+    return jnp.einsum("bskh,khd->bsd", o, p["wo"][:o.shape[2]])
+
+
+def _chunk_mask(Sq, Sk, chunk, cidx, causal, window, q_offset):
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = cidx * chunk + jnp.arange(chunk)
+    mask = (k_pos[None, :] <= q_pos[:, None]) if causal else \
+        jnp.ones((Sq, chunk), bool)
+    if window:
+        mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+    return mask & (k_pos < Sk)[None, :]
+
+
+def _flash_fwd_scan(qg, kc_t, vc_t, Sq, Sk, chunk, causal, window,
+                    q_offset, scale):
+    from repro.distributed import act_sharding as acts
+    B, _, Hkv, groups, D = qg.shape
+    Dv = vc_t.shape[-1]
+    n_chunks = kc_t.shape[0]
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        kb, vb, cidx = inputs
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qg, kb,
+                       preferred_element_type=jnp.float32) * scale
+        mask = _chunk_mask(Sq, Sk, chunk, cidx, causal, window, q_offset)
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqhgk,bkhd->bqhgd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = acts.constrain_batch(
+        jnp.full((B, Sq, Hkv, groups), NEG_INF, jnp.float32))
+    l0 = acts.constrain_batch(
+        jnp.zeros((B, Sq, Hkv, groups), jnp.float32))
+    a0 = acts.constrain_batch(
+        jnp.zeros((B, Sq, Hkv, groups, Dv), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (kc_t, vc_t, jnp.arange(n_chunks)))
+    return m, l, acc
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash_core(q, k, v, causal, window, q_offset, chunk):
+    out, _ = _flash_core_fwd(q, k, v, causal, window, q_offset, chunk)
+    return out
+
+
+def _flash_prep(qg, k, v, chunk):
+    from repro.distributed import act_sharding as acts
+    B, Sq, Hkv, groups, D = qg.shape
+    Sk = k.shape[1]
+    Dv = v.shape[-1]
+    chunk = min(chunk, Sk)
+    n_chunks = -(-Sk // chunk)
+    pad = n_chunks * chunk - Sk
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc_t = acts.constrain_batch(jnp.moveaxis(
+        kp.reshape(B, n_chunks, chunk, Hkv, D), 1, 0), 1)
+    vc_t = acts.constrain_batch(jnp.moveaxis(
+        vp.reshape(B, n_chunks, chunk, Hkv, Dv), 1, 0), 1)
+    return qg, kc_t, vc_t, chunk, n_chunks, pad
+
+
+def _flash_core_fwd(q, k, v, causal, window, q_offset, chunk):
+    B, Sq, Hkv, groups, D = q.shape
+    Sk = k.shape[1]
+    scale = 1.0 / np.sqrt(D)
+    qg, kc_t, vc_t, chunk_, n_chunks, _ = _flash_prep(q, k, v, chunk)
+    m, l, acc = _flash_fwd_scan(qg, kc_t, vc_t, Sq, Sk, chunk_, causal,
+                                window, q_offset, scale)
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    res = (q, k, v, m, l, out)
+    return out.astype(q.dtype), res
+
+
+def _flash_core_bwd(causal, window, q_offset, chunk, res, dout):
+    """Flash backward: recompute scores chunk-wise — the full (Sq x Sk)
+    probability tensor is never materialized nor saved (§Perf iteration 2:
+    the naive scan backward stacked ~5.4 GB of per-chunk residuals per
+    layer at qwen2.5 train_4k scale)."""
+    q, k, v, m, l, out = res
+    B, Sq, Hkv, groups, D = q.shape
+    Sk = k.shape[1]
+    Dv = v.shape[-1]
+    scale = 1.0 / np.sqrt(D)
+    qg, kc_t, vc_t, chunk_, n_chunks, pad = _flash_prep(q, k, v, chunk)
+    dout_g = dout.astype(jnp.float32)
+    # D_i = sum_d dout_i * out_i (the softmax-normalization term)
+    delta = jnp.sum(dout_g * out, axis=-1)                 # (B,Sq,Hkv,g)
+    l_safe = jnp.maximum(l, 1e-30)
+
+    def step(dq_acc, inputs):
+        kb, vb, cidx = inputs
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qg, kb,
+                       preferred_element_type=jnp.float32) * scale
+        mask = _chunk_mask(Sq, Sk, chunk_, cidx, causal, window, q_offset)
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        p = jnp.exp(s - m[..., None]) / l_safe[..., None]  # (B,q,h,g,k)
+        dv_c = jnp.einsum("bqhgk,bqhgd->bkhd", p, dout_g)
+        dp = jnp.einsum("bqhgd,bkhd->bqhgk", dout_g, vb.astype(jnp.float32))
+        ds = p * (dp - delta[..., None]) * scale
+        dq_acc = dq_acc + jnp.einsum("bqhgk,bkhd->bqhgd", ds,
+                                     kb.astype(jnp.float32))
+        dk_c = jnp.einsum("bqhgk,bqhgd->bkhd", ds, qg.astype(jnp.float32))
+        return dq_acc, (dk_c, dv_c)
+
+    dq0 = jnp.zeros(qg.shape, jnp.float32)
+    dq, (dk_c, dv_c) = jax.lax.scan(
+        step, dq0, (kc_t, vc_t, jnp.arange(n_chunks)))
+    dk = jnp.moveaxis(dk_c, 0, 1).reshape(B, n_chunks * chunk_, Hkv, D)
+    dv = jnp.moveaxis(dv_c, 0, 1).reshape(B, n_chunks * chunk_, Hkv, Dv)
+    if pad:
+        dk, dv = dk[:, :Sk], dv[:, :Sk]
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype))
+
+
+_flash_core.defvjp(_flash_core_fwd, _flash_core_bwd)
+
+
+def flash_attention(qg: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int = 0,
+                    q_offset: int = 0, chunk: int = 512) -> jnp.ndarray:
+    """Online-softmax attention with a memory-lean custom VJP.
+
+    qg: (B, Sq, Hkv, g, D) grouped queries; k/v: (B, Sk, Hkv, Dv); MLA
+    passes Dv != D (g=1).  ``window > 0`` restricts attention to the last
+    ``window`` keys (Mixtral sliding-window).  ``q_offset`` is the absolute
+    position of q[0] relative to k[0].  Returns (B, Sq, Hkv, g, Dv).
+    """
+    return _flash_core(qg, k, v, causal, window, q_offset, chunk)
+
+
+def attention_block(p: Params, cfg, x: jnp.ndarray,
+                    positions: jnp.ndarray) -> jnp.ndarray:
+    """Training/prefill self-attention (causal)."""
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    o = flash_attention(q[:, :, :, None, :], expand_kv_padded(k, cfg),
+                        expand_kv_padded(v, cfg), causal=True,
+                        window=cfg.sliding_window)
+    return attention_output(p, cfg, o)
+
+
+# --------------------------------------------------------------------------
+# KV cache (decode)
+# --------------------------------------------------------------------------
+def init_kv_cache(cfg, batch: int, max_len: int, dtype) -> Params:
+    """Ring buffer when sliding-window, else full-length cache."""
+    length = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    shape = (batch, length, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_attention(p: Params, cfg, x: jnp.ndarray, cache: Params,
+                     pos: jnp.ndarray) -> Tuple[jnp.ndarray, Params]:
+    """One-token decode: x (B, 1, d), pos (B,) absolute positions."""
+    B = x.shape[0]
+    q, k, v = _project_qkv(p, cfg, x, pos[:, None])
+    length = cache["k"].shape[1]
+    slot = (pos % length) if cfg.sliding_window else pos
+    k_cache = jax.vmap(lambda c, u, s: jax.lax.dynamic_update_slice(
+        c, u, (s, 0, 0)))(cache["k"], k, slot)
+    v_cache = jax.vmap(lambda c, u, s: jax.lax.dynamic_update_slice(
+        c, u, (s, 0, 0)))(cache["v"], v, slot)
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    groups = hq // hkv
+    qg = q[:, :, :hq, :].reshape(B, 1, hkv, groups, hd)
+    s = jnp.einsum("bqhgd,bkhd->bhgk", qg, k_cache,
+                   preferred_element_type=jnp.float32) / np.sqrt(hd)
+    idx = jnp.arange(length)[None, :]
+    if cfg.sliding_window:
+        # ring buffer: once pos >= length every slot holds a key from the
+        # window; before that only slots [0, pos] have been written.
+        valid = (idx <= (pos % length)[:, None]) | (pos[:, None] >= length)
+    else:
+        valid = idx <= pos[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    pattn = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", pattn.astype(v_cache.dtype), v_cache)
+    out = attention_output(p, cfg, o[:, None])
+    return out, {"k": k_cache, "v": v_cache}
+
+
+# --------------------------------------------------------------------------
+# Cross-attention (whisper decoder, llama-vision gated layers)
+# --------------------------------------------------------------------------
+def init_cross_attention(key, cfg, dtype) -> Params:
+    p = init_attention(key, cfg, dtype)
+    p["gate"] = jnp.zeros((), dtype)   # llama-vision gated cross-attn
+    return p
+
+
+def cross_attention_block(p: Params, cfg, x: jnp.ndarray,
+                          memory: jnp.ndarray, gated: bool = False
+                          ) -> jnp.ndarray:
+    """x (B,S,d) attends to memory (B,Sm,d); no RoPE, not causal."""
+    B, S, _ = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = hq // hkv
+    q = jnp.einsum("bsd,dkh->bskh", x, p["wq"])
+    k = jnp.einsum("bsd,dkh->bskh", memory, p["wk"])
+    v = jnp.einsum("bsd,dkh->bskh", memory, p["wv"])
+    if cfg.qk_norm:
+        q = layers.rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = layers.rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    o = flash_attention(q[:, :, :, None, :], expand_kv_padded(k, cfg),
+                        expand_kv_padded(v, cfg), causal=False)
+    out = attention_output(p, cfg, o)
+    if gated:
+        out = jnp.tanh(p["gate"]) * out
+    return out

@@ -1,0 +1,192 @@
+"""CNNs from the paper's evaluation (ResNet-18 family, VGG-16 family).
+
+Every 3x3 stride-1 convolution is computed by a selectable algorithm
+(direct / Winograd F(4x4,3x3) / SFC-4(4,3) / SFC-6(6,3) / SFC-6(7,3)) with
+optional transform-domain fake quantization — exactly the substitution the
+paper performs on TorchVision models (§6.1).  Stride-2 and 1x1 convolutions
+always use the direct path (fast algorithms are stride-1 constructs).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.resnet18 import CNNConfig
+from repro.core import conv2d as c2d
+from repro.core.generator import (BilinearAlgorithm, generate_sfc,
+                                  generate_winograd)
+import repro.quant.fake_quant as fq
+
+Params = Dict[str, Any]
+
+_ALGOS = {}
+
+
+def conv_algo(name: str) -> Optional[BilinearAlgorithm]:
+    if name == "direct":
+        return None
+    if name not in _ALGOS:
+        _ALGOS[name] = {
+            "sfc6_7": lambda: generate_sfc(6, 7, 3),
+            "sfc6_6": lambda: generate_sfc(6, 6, 3),
+            "sfc4_4": lambda: generate_sfc(4, 4, 3),
+            "wino4": lambda: generate_winograd(4, 3),
+            "wino2": lambda: generate_winograd(2, 3),
+        }[name]()
+    return _ALGOS[name]
+
+
+def quant_config(cfg: CNNConfig) -> fq.QuantConfig:
+    if cfg.quant == "none":
+        return fq.FP32
+    bits = int(cfg.quant[3:])
+    return fq.QuantConfig(bits, bits, cfg.act_granularity,
+                          cfg.weight_granularity)
+
+
+def conv_apply(x, w, b, cfg: CNNConfig, stride: int = 1,
+               qhook=None) -> jnp.ndarray:
+    """Algorithm-dispatched conv; fast path only for 3x3 stride-1."""
+    R = w.shape[0]
+    algo = conv_algo(cfg.conv_algo)
+    if stride == 1 and R == 3 and algo is not None:
+        y = c2d.fastconv2d(x, w, algo, padding="SAME",
+                           elementwise_hook=qhook)
+    else:
+        y = jax.lax.conv_general_dilated(
+            x, w, (stride, stride), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + b
+
+
+def _conv_init(key, r, cin, cout):
+    fan = r * r * cin
+    return (jax.random.normal(key, (r, r, cin, cout)) *
+            np.sqrt(2.0 / fan)).astype(jnp.float32)
+
+
+def _norm_apply(x, scale, bias):
+    # BatchNorm folded into scale/bias (the paper fuses BN before quant);
+    # training uses this as a per-channel affine "filter response norm" lite.
+    mu = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * scale + bias
+
+
+# --------------------------------------------------------------------------
+# ResNet
+# --------------------------------------------------------------------------
+def init_resnet(key, cfg: CNNConfig) -> Params:
+    ks = iter(jax.random.split(key, 256))
+    p: Params = {}
+    w0 = cfg.widths[0]
+    p["stem"] = {"w": _conv_init(next(ks), cfg.stem_kernel, 3, w0),
+                 "b": jnp.zeros((w0,)),
+                 "scale": jnp.ones((w0,)), "bias": jnp.zeros((w0,))}
+    cin = w0
+    for si, (n_blocks, width) in enumerate(zip(cfg.stages, cfg.widths)):
+        for bi in range(n_blocks):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            blk = {
+                "conv1": {"w": _conv_init(next(ks), 3, cin, width),
+                          "b": jnp.zeros((width,))},
+                "conv2": {"w": _conv_init(next(ks), 3, width, width),
+                          "b": jnp.zeros((width,))},
+                "scale1": jnp.ones((width,)), "bias1": jnp.zeros((width,)),
+                "scale2": jnp.ones((width,)), "bias2": jnp.zeros((width,)),
+            }
+            if stride != 1 or cin != width:
+                blk["proj"] = {"w": _conv_init(next(ks), 1, cin, width),
+                               "b": jnp.zeros((width,))}
+            p[f"s{si}b{bi}"] = blk
+            cin = width
+    p["head"] = {"w": (jax.random.normal(next(ks), (cin, cfg.n_classes))
+                       * 0.01).astype(jnp.float32),
+                 "b": jnp.zeros((cfg.n_classes,))}
+    return p
+
+
+def resnet_forward(p: Params, cfg: CNNConfig, x: jnp.ndarray,
+                   qhooks: Optional[Dict[str, Any]] = None) -> jnp.ndarray:
+    """x (B, H, W, 3) -> logits.  qhooks maps layer name -> elementwise hook
+    (None = use the config-default quantizer)."""
+    default_hook = quant_config(cfg).hook()
+
+    def hook_for(name):
+        if qhooks is not None and name in qhooks:
+            return qhooks[name]
+        return default_hook
+
+    stem_stride = 2 if cfg.image_size >= 128 else 1
+    h = conv_apply(x, p["stem"]["w"], p["stem"]["b"], cfg,
+                   stride=stem_stride, qhook=None)
+    h = jax.nn.relu(_norm_apply(h, p["stem"]["scale"], p["stem"]["bias"]))
+    if cfg.image_size >= 128:
+        h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max,
+                                  (1, 3, 3, 1), (1, 2, 2, 1), "SAME")
+    cin = cfg.widths[0]
+    for si, (n_blocks, width) in enumerate(zip(cfg.stages, cfg.widths)):
+        for bi in range(n_blocks):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            blk = p[f"s{si}b{bi}"]
+            name = f"s{si}b{bi}"
+            y = conv_apply(h, blk["conv1"]["w"], blk["conv1"]["b"], cfg,
+                           stride=stride, qhook=hook_for(name + ".conv1"))
+            y = jax.nn.relu(_norm_apply(y, blk["scale1"], blk["bias1"]))
+            y = conv_apply(y, blk["conv2"]["w"], blk["conv2"]["b"], cfg,
+                           stride=1, qhook=hook_for(name + ".conv2"))
+            y = _norm_apply(y, blk["scale2"], blk["bias2"])
+            sc = h
+            if "proj" in blk:
+                sc = conv_apply(h, blk["proj"]["w"], blk["proj"]["b"], cfg,
+                                stride=stride)
+            h = jax.nn.relu(y + sc)
+    h = jnp.mean(h, axis=(1, 2))
+    return jnp.einsum("bd,dc->bc", h, p["head"]["w"]) + p["head"]["b"]
+
+
+# --------------------------------------------------------------------------
+# VGG
+# --------------------------------------------------------------------------
+def init_vgg(key, cfg: CNNConfig) -> Params:
+    ks = iter(jax.random.split(key, 64))
+    p: Params = {}
+    cin = 3
+    for si, (n_convs, width) in enumerate(zip(cfg.stages, cfg.widths)):
+        for ci in range(n_convs):
+            p[f"s{si}c{ci}"] = {"w": _conv_init(next(ks), 3, cin, width),
+                                "b": jnp.zeros((width,))}
+            cin = width
+    p["head"] = {"w": (jax.random.normal(next(ks), (cin, cfg.n_classes))
+                       * 0.01).astype(jnp.float32),
+                 "b": jnp.zeros((cfg.n_classes,))}
+    return p
+
+
+def vgg_forward(p: Params, cfg: CNNConfig, x: jnp.ndarray) -> jnp.ndarray:
+    hook = quant_config(cfg).hook()
+    h = x
+    for si, (n_convs, width) in enumerate(zip(cfg.stages, cfg.widths)):
+        for ci in range(n_convs):
+            blk = p[f"s{si}c{ci}"]
+            h = jax.nn.relu(conv_apply(h, blk["w"], blk["b"], cfg,
+                                       stride=1, qhook=hook))
+        h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max,
+                                  (1, 2, 2, 1), (1, 2, 2, 1), "SAME")
+    h = jnp.mean(h, axis=(1, 2))
+    return jnp.einsum("bd,dc->bc", h, p["head"]["w"]) + p["head"]["b"]
+
+
+def cnn_loss(p: Params, cfg: CNNConfig, batch) -> Tuple[jnp.ndarray, Dict]:
+    fwd = vgg_forward if cfg.kind == "vgg" else resnet_forward
+    logits = fwd(p, cfg, batch["images"])
+    labels = batch["labels"]
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(logz - gold)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, {"loss": loss, "acc": acc}

@@ -1,0 +1,246 @@
+"""Single-token decode with per-family caches (the ``serve_step``).
+
+Cache layouts (stacked over layers, scan-compatible):
+  dense/moe : KV ring/full caches per layer (GQA) or MLA latent caches
+  ssm       : (state, conv window) per layer — O(1) memory in context length
+  hybrid    : ssm caches + per-invocation KV caches for the shared block
+  vlm/encdec: self-attn caches + precomputed cross-attention K/V (computed
+              once from the static memory at cache init — no per-step
+              recompute of the vision/encoder projections)
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import layers, mla, ssm
+from repro.models.layers import Params, dtype_of
+from repro.models.transformer import (_compute, decoder_block,
+                                      encoder_forward, lm_logits)
+
+
+def _stack_map(fn, n, *args):
+    trees = [fn(*args) for _ in range(n)]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _cross_kv(xattn_params, cfg, memory):
+    k = jnp.einsum("bsd,dkh->bskh", memory, xattn_params["wk"])
+    v = jnp.einsum("bsd,dkh->bskh", memory, xattn_params["wv"])
+    return k, v
+
+
+def init_cache(params: Params, cfg: ModelConfig, batch: int, max_len: int,
+               memory: Optional[jnp.ndarray] = None) -> Params:
+    from repro.models.transformer import cast_compute
+    params = cast_compute(params, cfg)
+    dtype = dtype_of(cfg.compute_dtype)
+    fam = cfg.family
+    cache: Params = {}
+    if fam in ("dense", "moe"):
+        per_layer = (
+            (lambda: mla.init_mla_cache(cfg, batch, max_len, dtype))
+            if cfg.use_mla else
+            (lambda: attn.init_kv_cache(cfg, batch, max_len, dtype)))
+        n_moe = cfg.n_layers - cfg.first_dense_layers
+        cache["layers"] = _stack_map(per_layer, n_moe)
+        if cfg.first_dense_layers:
+            cache["dense_layers"] = _stack_map(per_layer,
+                                               cfg.first_dense_layers)
+    elif fam == "ssm":
+        cache["layers"] = _stack_map(
+            lambda: ssm.init_mamba2_cache(cfg, batch, dtype), cfg.n_layers)
+    elif fam == "hybrid":
+        cache["layers"] = _stack_map(
+            lambda: ssm.init_mamba2_cache(cfg, batch, dtype), cfg.n_layers)
+        n_inv = -(-cfg.n_layers // cfg.shared_attn_every)
+        cache["shared"] = _stack_map(
+            lambda: attn.init_kv_cache(cfg, batch, max_len, dtype), n_inv)
+    elif fam == "vlm":
+        cache["layers"] = _stack_map(
+            lambda: attn.init_kv_cache(cfg, batch, max_len, dtype),
+            cfg.n_layers)
+        assert memory is not None
+        mem = _compute(memory, cfg)
+        n_groups = cfg.n_layers // cfg.cross_attn_every
+        ks, vs = [], []
+        for g in range(n_groups):
+            xp = jax.tree_util.tree_map(
+                lambda a, g=g: a[g], params["cross_blocks"])
+            k, v = _cross_kv(xp["xattn"], cfg, mem)
+            ks.append(k)
+            vs.append(v)
+        cache["cross_k"] = jnp.stack(ks)
+        cache["cross_v"] = jnp.stack(vs)
+    elif fam == "encdec":
+        assert memory is not None, "encdec cache needs encoder frames"
+        enc_out = encoder_forward(params, cfg, memory)
+        cache["layers"] = _stack_map(
+            lambda: attn.init_kv_cache(cfg, batch, max_len, dtype),
+            cfg.n_layers)
+        ks, vs = [], []
+        for l in range(cfg.n_layers):
+            xp = jax.tree_util.tree_map(
+                lambda a, l=l: a[l], params["cross_blocks"])
+            k, v = _cross_kv(xp["xattn"], cfg, enc_out)
+            ks.append(k)
+            vs.append(v)
+        cache["cross_k"] = jnp.stack(ks)
+        cache["cross_v"] = jnp.stack(vs)
+    else:
+        raise ValueError(fam)
+    return cache
+
+
+def _cross_decode(x, ln, xattn, cfg, ck, cv):
+    """One-token cross-attention against precomputed memory K/V."""
+    from repro.models.attention import attention_output
+    B = x.shape[0]
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = hq // hkv
+    h = layers.rmsnorm(x, ln, cfg.norm_eps)
+    qg = jnp.einsum("bsd,dkh->bskh", h,
+                    xattn["wq"])[:, :, :hq, :].reshape(B, 1, hkv, g, hd)
+    s = jnp.einsum("bqhgd,bkhd->bhgk", qg, ck,
+                   preferred_element_type=jnp.float32) / np.sqrt(hd)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p.astype(cv.dtype), cv)
+    return attention_output(xattn, cfg, o[:, None])
+
+
+def _attn_ffn_decode(bp, cfg, x, cache_l, pos, use_moe):
+    from repro.models import moe as moe_mod
+    h = layers.rmsnorm(x, bp["ln1"], cfg.norm_eps)
+    if cfg.use_mla:
+        a, new_cache = mla.mla_decode(bp["attn"], cfg, h, cache_l, pos)
+    else:
+        a, new_cache = attn.decode_attention(bp["attn"], cfg, h, cache_l, pos)
+    x = x + a
+    h = layers.rmsnorm(x, bp["ln2"], cfg.norm_eps)
+    if use_moe:
+        # serving must not drop tokens: capacity == T (lossless dispatch)
+        f, _ = moe_mod.moe_block(
+            bp["ffn"], cfg, h,
+            capacity_factor=cfg.n_experts / cfg.n_experts_active)
+    else:
+        f = layers.swiglu(h, **bp["ffn"])
+    return x + f, new_cache
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache: Params,
+                tokens: jnp.ndarray, pos: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, Params]:
+    """tokens (B, 1) int32, pos (B,) int32 -> (logits (B,1,V), new cache)."""
+    from repro.models.transformer import cast_compute
+    params = cast_compute(params, cfg)
+    B = tokens.shape[0]
+    x = _compute(params["embed"][tokens], cfg)
+    fam = cfg.family
+    new_cache = dict(cache)
+
+    if fam in ("dense", "moe"):
+        if cfg.first_dense_layers:
+            def dense_fn(x, inp):
+                bp, cl = inp
+                x, nc = _attn_ffn_decode(bp, cfg, x, cl, pos, False)
+                return x, nc
+            x, nc = jax.lax.scan(dense_fn, x, (params["dense_blocks"],
+                                               cache["dense_layers"]))
+            new_cache["dense_layers"] = nc
+
+        def fn(x, inp):
+            bp, cl = inp
+            x, nc = _attn_ffn_decode(bp, cfg, x, cl, pos, fam == "moe")
+            return x, nc
+        x, nc = jax.lax.scan(fn, x, (params["blocks"], cache["layers"]))
+        new_cache["layers"] = nc
+    elif fam in ("ssm", "hybrid"):
+        every = cfg.shared_attn_every
+
+        def fn(carry, inp):
+            x, i, shared_c = carry
+            bp, cl = inp
+            if fam == "hybrid":
+                inv = i // every
+
+                def with_attn(operand):
+                    x, shared_c = operand
+                    c_inv = jax.tree_util.tree_map(
+                        lambda a: jax.lax.dynamic_index_in_dim(
+                            a, inv, 0, keepdims=False), shared_c)
+                    h = layers.rmsnorm(x, params["shared_block"]["ln1"],
+                                       cfg.norm_eps)
+                    a, nc = attn.decode_attention(
+                        params["shared_block"]["attn"], cfg, h, c_inv, pos)
+                    x = x + a
+                    h = layers.rmsnorm(x, params["shared_block"]["ln2"],
+                                       cfg.norm_eps)
+                    x = x + layers.swiglu(h, **params["shared_block"]["ffn"])
+                    shared_c = jax.tree_util.tree_map(
+                        lambda full, upd: jax.lax.dynamic_update_index_in_dim(
+                            full, upd, inv, 0), shared_c, nc)
+                    return x, shared_c
+
+                x, shared_c = jax.lax.cond(
+                    i % every == 0, with_attn, lambda o: o, (x, shared_c))
+            h = layers.rmsnorm(x, bp["ln"], cfg.norm_eps)
+            y, nc = ssm.mamba2_decode(bp["mixer"], cfg, h, cl)
+            return (x + y, i + 1, shared_c), nc
+
+        shared0 = cache.get("shared", ())
+        (x, _, shared_c), nc = jax.lax.scan(
+            fn, (x, jnp.zeros((), jnp.int32), shared0),
+            (params["blocks"], cache["layers"]))
+        new_cache["layers"] = nc
+        if fam == "hybrid":
+            new_cache["shared"] = shared_c
+    elif fam == "vlm":
+        k = cfg.cross_attn_every
+        n_groups = cfg.n_layers // k
+        blocks = jax.tree_util.tree_map(
+            lambda a: a.reshape((n_groups, k) + a.shape[1:]),
+            params["blocks"])
+        caches = jax.tree_util.tree_map(
+            lambda a: a.reshape((n_groups, k) + a.shape[1:]),
+            cache["layers"])
+
+        def group_fn(x, inp):
+            gb, gc, xp, ck, cv = inp
+            h = _cross_decode(x, xp["ln"], xp["xattn"], cfg, ck, cv)
+            x = x + jnp.tanh(xp["xattn"]["gate"]) * h
+            hh = layers.rmsnorm(x, xp["ln2"], cfg.norm_eps)
+            x = x + jnp.tanh(xp["ffn_gate"]) * layers.swiglu(hh, **xp["ffn"])
+
+            def inner(x, inp2):
+                bp, cl = inp2
+                x, nc = _attn_ffn_decode(bp, cfg, x, cl, pos, False)
+                return x, nc
+            x, ncs = jax.lax.scan(inner, x, (gb, gc))
+            return x, ncs
+
+        x, nc = jax.lax.scan(group_fn, x,
+                             (blocks, caches, params["cross_blocks"],
+                              cache["cross_k"], cache["cross_v"]))
+        new_cache["layers"] = jax.tree_util.tree_map(
+            lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]), nc)
+    elif fam == "encdec":
+        def fn(x, inp):
+            bp, xp, cl, ck, cv = inp
+            x = x + _cross_decode(x, xp["ln"], xp["xattn"], cfg, ck, cv)
+            x, nc = _attn_ffn_decode(bp, cfg, x, cl, pos, False)
+            return x, nc
+        x, nc = jax.lax.scan(fn, x, (params["blocks"],
+                                     params["cross_blocks"],
+                                     cache["layers"], cache["cross_k"],
+                                     cache["cross_v"]))
+        new_cache["layers"] = nc
+    else:
+        raise ValueError(fam)
+
+    x = layers.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return lm_logits(params, cfg, x), new_cache

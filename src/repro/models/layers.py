@@ -1,0 +1,100 @@
+"""Shared NN building blocks (pure-functional, pytree params).
+
+Conventions:
+  * params are nested dicts of jnp arrays; layer stacks carry a leading
+    ``n_layers`` axis and run under ``jax.lax.scan`` (small HLO, fast
+    compile, remat-friendly);
+  * ``init_*`` functions return parameter pytrees; for the dry-run they are
+    only ever called under ``jax.eval_shape`` (no allocation);
+  * compute runs in ``compute_dtype`` (bf16 by default), params are stored
+    in ``param_dtype``; logits/losses in f32.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+# --------------------------------------------------------------------------
+# initializers
+# --------------------------------------------------------------------------
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float = 1.0
+               ) -> jnp.ndarray:
+    std = scale / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * std
+            ).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+            ).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# primitives
+# --------------------------------------------------------------------------
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5
+            ) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def init_rmsnorm(d: int, dtype) -> jnp.ndarray:
+    return jnp.ones((d,), dtype)
+
+
+def swiglu(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+           w_down: jnp.ndarray) -> jnp.ndarray:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)
+
+
+def init_swiglu(key, d: int, f: int, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"w_gate": dense_init(k1, d, f, dtype),
+            "w_up": dense_init(k2, d, f, dtype),
+            "w_down": dense_init(k3, f, d, dtype)}
+
+
+def rope_frequencies(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float
+               ) -> jnp.ndarray:
+    """x: (..., S, H, D); positions: (..., S)."""
+    D = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(D, theta), jnp.float32)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (...,S,D/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def cross_entropy_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+                       mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """logits (..., V) f32; labels (...,) int32; mean over valid tokens."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

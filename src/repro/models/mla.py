@@ -1,0 +1,140 @@
+"""Multi-head Latent Attention (DeepSeek-V3, arXiv:2412.19437).
+
+Queries and keys/values are projected through low-rank latents; the KV cache
+stores only the compressed latent c_kv (kv_lora_rank=512) plus the decoupled
+RoPE key (64) — 576 floats/token instead of 2*128*128 = 32768 for MHA.
+
+* prefill/train: online-softmax scan over latent chunks, expanding each
+  chunk's K_nope/V from c_kv *inside* the scan — the full (B,S,H,128+128)
+  expansion (13 GB/device at 32k prefill) is never materialized.
+* decode: **absorbed form** — W_UK folds into the query (q_eff = q W_UK) and
+  W_UV into the output, so attention runs directly against the latent cache.
+  Per-step cost O(B*H*(kr+dr)*L) with no cache expansion at all.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+from repro.models.layers import Params
+from repro.models.attention import NEG_INF
+
+
+def init_mla(key, cfg, dtype) -> Params:
+    d = cfg.d_model
+    H = cfg.n_heads
+    qr, kr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "wq_a": layers.dense_init(ks[0], d, qr, dtype),
+        "q_a_norm": layers.init_rmsnorm(qr, dtype),
+        "wq_b": layers.dense_init(ks[1], qr, H * (dn + dr), dtype),
+        "wkv_a": layers.dense_init(ks[2], d, kr + dr, dtype),
+        "kv_a_norm": layers.init_rmsnorm(kr, dtype),
+        "wkv_b": layers.dense_init(ks[3], kr, H * (dn + dv), dtype),
+        "wo": layers.dense_init(ks[4], H * dv, d, dtype),
+    }
+
+
+def _mla_q(p: Params, cfg, x: jnp.ndarray, positions: jnp.ndarray):
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    q_lat = layers.rmsnorm(jnp.einsum("bsd,dr->bsr", x, p["wq_a"]),
+                           p["q_a_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rh->bsh", q_lat, p["wq_b"]).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = layers.apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_kv_latent(p: Params, cfg, x: jnp.ndarray, positions: jnp.ndarray):
+    kv_a = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    c_kv = layers.rmsnorm(kv_a[..., :cfg.kv_lora_rank], p["kv_a_norm"],
+                          cfg.norm_eps)
+    k_rope = layers.apply_rope(
+        kv_a[..., cfg.kv_lora_rank:][:, :, None, :], positions,
+        cfg.rope_theta)[:, :, 0, :]                   # (B, S, dr)
+    return c_kv, k_rope
+
+
+def _split_wkv_b(p: Params, cfg):
+    H = cfg.n_heads
+    dn, dv = cfg.qk_nope_head_dim, cfg.v_head_dim
+    w = p["wkv_b"].reshape(cfg.kv_lora_rank, H, dn + dv)
+    return w[..., :dn], w[..., dn:]                  # (kr,H,dn), (kr,H,dv)
+
+
+def _expand_kv(p: Params, cfg, c_kv: jnp.ndarray):
+    """Latent -> per-head K_nope / V (transient; recomputed under remat)."""
+    w_uk, w_uv = _split_wkv_b(p, cfg)
+    k_nope = jnp.einsum("bsr,rhd->bshd", c_kv, w_uk)
+    v = jnp.einsum("bsr,rhd->bshd", c_kv, w_uv)
+    return k_nope, v
+
+
+def mla_block(p: Params, cfg, x: jnp.ndarray, positions: jnp.ndarray
+              ) -> jnp.ndarray:
+    """Causal MLA (training / prefill).
+
+    K/V are expanded from the latent transiently per layer (under remat the
+    expansion is recomputed, never stored) and fed through the shared
+    flash-attention custom-VJP kernel — one memory-lean attention path for
+    every architecture (§Perf iteration 2).
+    """
+    from repro.models.attention import flash_attention
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)
+    c_kv, k_rope = _mla_kv_latent(p, cfg, x, positions)
+    k_nope, v = _expand_kv(p, cfg, c_kv)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, dr))],
+        axis=-1)
+    o = flash_attention(q[:, :, :, None, :], k, v, causal=True)
+    return jnp.einsum("bsh,hd->bsd", o.reshape(B, S, -1), p["wo"])
+
+
+def init_mla_cache(cfg, batch: int, max_len: int, dtype) -> Params:
+    return {
+        "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_decode(p: Params, cfg, x: jnp.ndarray, cache: Params,
+               pos: jnp.ndarray) -> Tuple[jnp.ndarray, Params]:
+    """Absorbed one-token MLA decode against the latent cache."""
+    B = x.shape[0]
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    q_nope, q_rope = _mla_q(p, cfg, x, pos[:, None])      # (B,1,H,*)
+    c_new, r_new = _mla_kv_latent(p, cfg, x, pos[:, None])
+    c_cache = jax.vmap(lambda c, u, s: jax.lax.dynamic_update_slice(
+        c, u, (s, 0)))(cache["c_kv"], c_new, pos)
+    r_cache = jax.vmap(lambda c, u, s: jax.lax.dynamic_update_slice(
+        c, u, (s, 0)))(cache["k_rope"], r_new, pos)
+
+    w_uk, w_uv = _split_wkv_b(p, cfg)
+    # absorb W_UK into the query:  q_eff (B, H, kr)
+    q_eff = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], w_uk)
+    L = c_cache.shape[1]
+    s = (jnp.einsum("bhr,bkr->bhk", q_eff, c_cache,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bhd,bkd->bhk", q_rope[:, 0], r_cache,
+                      preferred_element_type=jnp.float32)) / np.sqrt(dn + dr)
+    valid = jnp.arange(L)[None, :] <= pos[:, None]
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    attn = jax.nn.softmax(s, axis=-1)
+    # attend in latent space, then absorb W_UV on the way out
+    o_lat = jnp.einsum("bhk,bkr->bhr", attn.astype(c_cache.dtype), c_cache)
+    o = jnp.einsum("bhr,rhd->bhd", o_lat, w_uv)           # (B, H, dv)
+    out = jnp.einsum("bsh,hd->bsd", o.reshape(B, 1, H * dv), p["wo"])
+    return out, {"c_kv": c_cache, "k_rope": r_cache}

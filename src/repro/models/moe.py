@@ -1,0 +1,129 @@
+"""Mixture-of-Experts FFN with sort-based grouped dispatch (EP-shardable).
+
+Tokens are routed top-k, sorted by expert, packed into a capacity-bounded
+grouped tensor (E, C, d) and processed with a single grouped einsum — the
+layout GSPMD shards cleanly: E over the 'model' axis (expert parallelism)
+and the token batch over 'data'.  Over-capacity tokens are dropped (GShard
+semantics); the router aux loss balances load so drops stay rare.
+
+For small expert counts that do not divide the model axis (mixtral: 8
+experts on a 16-way axis) the expert weights are instead sharded on their
+d_ff dimension (TP-within-expert) — the sharding rule, not this module,
+decides (see repro/distributed/sharding.py).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.layers import Params
+
+
+def init_moe(key, cfg, dtype) -> Params:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    import numpy as np
+    std = 1.0 / np.sqrt(d)
+    p = {
+        "router": layers.dense_init(ks[0], d, E, dtype, scale=0.1),
+        "w_gate": (jax.random.normal(ks[1], (E, d, f), jnp.float32) * std
+                   ).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (E, d, f), jnp.float32) * std
+                 ).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (E, f, d), jnp.float32)
+                   / np.sqrt(f)).astype(dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = layers.init_swiglu(
+            ks[4], d, f * cfg.n_shared_experts, dtype)
+    return p
+
+
+def _group_local(xt, expert_ids, gate_vals, E, k, C):
+    """Shard-local grouping: xt (T, d) -> grouped (E, C, d) + indices."""
+    T = xt.shape[0]
+    flat_expert = expert_ids.reshape(T * k)
+    flat_token = jnp.repeat(jnp.arange(T), k)
+    flat_gate = gate_vals.reshape(T * k)
+    order = jnp.argsort(flat_expert)
+    se, st, sg = flat_expert[order], flat_token[order], flat_gate[order]
+    group_start = jnp.searchsorted(se, jnp.arange(E))
+    slot = jnp.arange(T * k) - group_start[se]
+    keep = slot < C
+    safe_slot = jnp.where(keep, slot, C - 1)
+    grouped = jnp.zeros((E, C, xt.shape[1]), xt.dtype)
+    grouped = grouped.at[se, safe_slot].add(
+        jnp.where(keep[:, None], xt[st], 0))
+    return grouped, (se, st, sg, keep, safe_slot)
+
+
+def _combine_local(y_grouped, idx, T, d, dtype):
+    se, st, sg, keep, safe_slot = idx
+    contrib = (y_grouped[se, safe_slot]
+               * sg[:, None].astype(dtype)
+               * keep[:, None].astype(dtype))
+    return jnp.zeros((T, d), dtype).at[st].add(contrib)
+
+
+def moe_block(p: Params, cfg, x: jnp.ndarray,
+              capacity_factor: float = 1.25) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (B, S, d) -> (out (B, S, d), aux_loss scalar).
+
+    Dispatch is **data-shard-local** (§Perf hillclimb 2): tokens reshape to
+    (data_shards, T_local) and grouping/sort/scatter are vmapped per shard,
+    so under GSPMD they stay on-shard; only the expert matmul crosses the
+    model axis (the canonical EP all-to-all).  Global-semantics grouping
+    lowered to per-layer (T, d) all-reduces + a global sort (~5 TB/step at
+    deepseek-v3 train_4k scale — EXPERIMENTS.md §Perf).
+    """
+    from repro.distributed import act_sharding as acts
+    from jax.sharding import PartitionSpec as P
+
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.n_experts_active
+    T = B * S
+    xt = x.reshape(T, d)
+
+    logits = jnp.einsum("td,de->te", xt, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)          # (T, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # load-balancing aux loss (Switch/GShard form)
+    density = jnp.mean(
+        jax.nn.one_hot(expert_ids[:, 0], E, dtype=jnp.float32), axis=0)
+    mean_prob = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(density * mean_prob)
+
+    ds = acts.data_shards()
+    ds = ds if T % ds == 0 else 1
+    Tl = T // ds
+    C = max(int(Tl * k / E * capacity_factor), 1)
+
+    xt_s = acts.constrain_batch(xt.reshape(ds, Tl, d))
+    eid_s = acts.constrain_batch(expert_ids.reshape(ds, Tl, k))
+    gv_s = acts.constrain_batch(gate_vals.reshape(ds, Tl, k))
+
+    grouped, idx = jax.vmap(
+        lambda xx, ee, gg: _group_local(xx, ee, gg, E, k, C))(
+            xt_s, eid_s, gv_s)                    # (ds, E, C, d)
+    grouped = acts.constrain(grouped, P("data", "model", None, None))
+
+    h_gate = jnp.einsum("secd,edf->secf", grouped, p["w_gate"])
+    h_up = jnp.einsum("secd,edf->secf", grouped, p["w_up"])
+    h = jax.nn.silu(h_gate) * h_up
+    y_grouped = jnp.einsum("secf,efd->secd", h, p["w_down"])
+    y_grouped = acts.constrain(y_grouped, P("data", "model", None, None))
+
+    out = jax.vmap(
+        lambda yy, i0, i1, i2, i3, i4: _combine_local(
+            yy, (i0, i1, i2, i3, i4), Tl, d, xt.dtype))(
+                y_grouped, *idx)                  # (ds, Tl, d)
+    out = acts.constrain_batch(out).reshape(T, d)
+
+    if cfg.n_shared_experts:
+        out = out + layers.swiglu(xt, **p["shared"])
+    return out.reshape(B, S, d), aux

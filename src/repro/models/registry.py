@@ -1,0 +1,91 @@
+"""Model registry: config -> (init, loss, forward, cache, decode) bundle."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import decode as decode_mod
+from repro.models import transformer as tfm
+from repro.models.layers import Params, dtype_of
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    def init(self, key) -> Params:
+        return tfm.init_lm(key, self.cfg)
+
+    def init_abstract(self) -> Params:
+        """Parameter ShapeDtypeStructs — no allocation (dry-run path)."""
+        return jax.eval_shape(
+            lambda: tfm.init_lm(jax.random.PRNGKey(0), self.cfg))
+
+    def loss(self, params: Params, batch: Dict[str, jnp.ndarray]):
+        return tfm.lm_loss(params, self.cfg, batch)
+
+    def forward(self, params: Params, tokens: jnp.ndarray,
+                memory: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+        if self.cfg.family == "encdec":
+            memory = tfm.encoder_forward(params, self.cfg, memory)
+        hidden, _ = tfm.lm_hidden(params, self.cfg, tokens, memory)
+        return tfm.lm_logits(params, self.cfg, hidden)
+
+    def init_cache(self, params: Params, batch: int, max_len: int,
+                   memory: Optional[jnp.ndarray] = None) -> Params:
+        return decode_mod.init_cache(params, self.cfg, batch, max_len,
+                                     memory)
+
+    def decode_step(self, params: Params, cache: Params,
+                    tokens: jnp.ndarray, pos: jnp.ndarray):
+        return decode_mod.decode_step(params, self.cfg, cache, tokens, pos)
+
+    # ------------------------------------------------------------------
+    def batch_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for one input-shape cell (training /
+        prefill inputs; decode uses ``decode_specs``)."""
+        B, S = shape.global_batch, shape.seq_len
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+        d = dtype_of(self.cfg.compute_dtype)
+        if self.cfg.family == "vlm":
+            specs["vision"] = jax.ShapeDtypeStruct(
+                (B, self.cfg.n_vision_tokens, self.cfg.d_model), d)
+        if self.cfg.family == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (B, S * self.cfg.encoder_seq_ratio, self.cfg.d_model), d)
+        return specs
+
+    def decode_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        B = shape.global_batch
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((B,), jnp.int32),
+        }
+
+    def cache_abstract(self, shape: ShapeConfig) -> Params:
+        """Abstract cache for lowering serve_step at a given context len."""
+        B, S = shape.global_batch, shape.seq_len
+        cfg = self.cfg
+        d = dtype_of(cfg.compute_dtype)
+        memory = None
+        if cfg.family == "vlm":
+            memory = jax.ShapeDtypeStruct((B, cfg.n_vision_tokens,
+                                           cfg.d_model), d)
+        elif cfg.family == "encdec":
+            memory = jax.ShapeDtypeStruct(
+                (B, S * cfg.encoder_seq_ratio, cfg.d_model), d)
+        params = self.init_abstract()
+        return jax.eval_shape(
+            lambda p, m: decode_mod.init_cache(p, cfg, B, S, m),
+            params, memory)
+
+
+def build(cfg: ModelConfig) -> Model:
+    return Model(cfg)

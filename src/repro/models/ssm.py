@@ -1,0 +1,188 @@
+"""Mamba2 SSD (state-space duality) block — arXiv:2405.21060.
+
+Chunked SSD: within chunks of length Q the recurrence is computed as a
+masked attention-like quadratic form; across chunks a linear state
+recurrence (lax.scan) carries (H, P, N) states.  The depthwise causal
+conv1d (R = ssm_conv = 4) optionally runs the paper's SFC 1-D fast path
+(``cfg.use_sfc_conv``) — the only convolution in the assigned LM pool, see
+DESIGN.md §6.
+
+Decode is O(1) per token via the (B, H, P, N) state + a (R-1)-deep conv
+ring buffer — this is what makes the ``long_500k`` cell sub-quadratic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+from repro.models.layers import Params
+
+_SFC_CONV1D_ALGO = None
+
+
+def _sfc_conv1d_algo():
+    """SFC-6(6,4) for the R=4 depthwise conv: 12 mults / 6 outputs vs 24."""
+    global _SFC_CONV1D_ALGO
+    if _SFC_CONV1D_ALGO is None:
+        from repro.core.generator import generate_sfc
+        _SFC_CONV1D_ALGO = generate_sfc(6, 6, 4)
+    return _SFC_CONV1D_ALGO
+
+
+def init_mamba2(key, cfg, dtype) -> Params:
+    d = cfg.d_model
+    di, N, H = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = di + 2 * N
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": layers.dense_init(ks[0], d, 2 * di + 2 * N + H, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch),
+                                     jnp.float32) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": layers.init_rmsnorm(di, dtype),
+        "out_proj": layers.dense_init(ks[2], di, d, dtype),
+    }
+
+
+def _causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                   use_sfc: bool) -> jnp.ndarray:
+    from repro.core import conv2d as c2d
+    if use_sfc:
+        y = c2d.fastconv1d_depthwise_causal(x, w, _sfc_conv1d_algo())
+    else:
+        y = c2d.conv1d_depthwise_causal_direct(x, w)
+    return jax.nn.silu(y + b)
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                Bm: jnp.ndarray, Cm: jnp.ndarray, D: jnp.ndarray,
+                chunk: int,
+                init_state: jnp.ndarray = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """SSD scan.  x (B,S,H,P); dt (B,S,H); A (H,); Bm/Cm (B,S,N); D (H,).
+
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    nc = -(-S // chunk)
+    pad = nc * chunk - S
+    if pad:
+        # ragged sequence lengths: zero-pad to a chunk multiple; padded
+        # steps have dt=0 so they neither decay nor inject state.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    S_pad = nc * chunk
+    xc = x.reshape(Bsz, nc, chunk, H, P)
+    dtc = dt.reshape(Bsz, nc, chunk, H)
+    Bc = Bm.reshape(Bsz, nc, chunk, N)
+    Cc = Cm.reshape(Bsz, nc, chunk, N)
+
+    dA = dtc * A[None, None, None, :]                      # (B,nc,Q,H) <= 0
+    dA_cum = jnp.cumsum(dA, axis=2)
+    # intra-chunk: masked decay kernel L[q,s] = exp(dAcum_q - dAcum_s), q>=s
+    seg = dA_cum[:, :, :, None, :] - dA_cum[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(mask[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bcqn,bcsn->bcqs", Cc, Bc,
+                        preferred_element_type=jnp.float32)
+    # pairwise contraction: a single 4-operand einsum lets XLA materialize a
+    # 6-D (B,nc,Q,H,Q,P) intermediate (~17 GB/layer at prefill_32k —
+    # EXPERIMENTS.md §Perf hillclimb 3); the explicit kernel (B,nc,Q,Q,H)
+    # is 64x smaller and contracts straight into (B,nc,Q,H,P).
+    kern = scores[..., None] * L * dtc[:, :, None, :, :]   # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bcqsh,bcshp->bcqhp", kern,
+                         xc.astype(jnp.float32))
+
+    # chunk -> state contribution and inter-chunk recurrence
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)   # (B,nc,Q,H)
+    states = jnp.einsum("bcsn,bcsh,bcsh,bcshp->bchpn",
+                        Bc, decay_to_end, dtc, xc.astype(jnp.float32))
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])              # (B,nc,H)
+
+    def scan_fn(carry, inp):
+        st_prev = carry
+        st_c, dec_c = inp
+        st_new = st_prev * dec_c[:, :, None, None] + st_c
+        return st_new, st_prev
+
+    st0 = (jnp.zeros((Bsz, H, P, N), jnp.float32) if init_state is None
+           else init_state.astype(jnp.float32))
+    final_state, prev_states = jax.lax.scan(
+        scan_fn, st0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)           # (B,nc,H,P,N)
+
+    y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp",
+                         Cc, jnp.exp(dA_cum), prev_states)
+    y = (y_intra + y_inter).reshape(Bsz, S_pad, H, P)
+    y = y + D[None, None, :, None] * x.astype(jnp.float32)
+    return y[:, :S].astype(x.dtype), final_state
+
+
+def mamba2_block(p: Params, cfg, x: jnp.ndarray) -> jnp.ndarray:
+    """Training/prefill Mamba2 block. x (B,S,d) -> (B,S,d)."""
+    B, S, d = x.shape
+    di, N, H, P = (cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads,
+                   cfg.ssm_headdim)
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["in_proj"])
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * N], axis=-1)
+    xbc = _causal_conv1d(xbc, p["conv_w"], p["conv_b"], cfg.use_sfc_conv)
+    xs, Bm, Cm = jnp.split(xbc, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, _ = ssd_chunked(xs.reshape(B, S, H, P), dt, A, Bm, Cm, p["D"],
+                       min(cfg.ssm_chunk, S))
+    y = y.reshape(B, S, di) * jax.nn.silu(z)
+    y = layers.rmsnorm(y, p["norm"], cfg.norm_eps)
+    return jnp.einsum("bsk,kd->bsd", y, p["out_proj"])
+
+
+# --------------------------------------------------------------------------
+# decode (O(1) per token)
+# --------------------------------------------------------------------------
+def init_mamba2_cache(cfg, batch: int, dtype) -> Params:
+    di, N, H, P = (cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads,
+                   cfg.ssm_headdim)
+    conv_ch = di + 2 * N
+    return {
+        "state": jnp.zeros((batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+    }
+
+
+def mamba2_decode(p: Params, cfg, x: jnp.ndarray, cache: Params
+                  ) -> Tuple[jnp.ndarray, Params]:
+    """One-token step. x (B,1,d)."""
+    B = x.shape[0]
+    di, N, H, P = (cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads,
+                   cfg.ssm_headdim)
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["in_proj"])[:, 0]
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * N], axis=-1)
+    window = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)
+    conv_out = jnp.einsum("brc,rc->bc", window, p["conv_w"])
+    xbc_c = jax.nn.silu(conv_out + p["conv_b"])
+    xs, Bm, Cm = jnp.split(xbc_c, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,H)
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(B, H, P).astype(jnp.float32)
+    decay = jnp.exp(dt * A)                                       # (B,H)
+    state = cache["state"] * decay[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xh, Bm.astype(jnp.float32))
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), state)
+    y = y + p["D"][None, :, None] * xh
+    y = (y.reshape(B, di) * jax.nn.silu(z)).astype(x.dtype)
+    y = layers.rmsnorm(y, p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bk,kd->bd", y, p["out_proj"])[:, None, :]
+    new_cache = {"state": state, "conv": window[:, 1:, :]}
+    return out, new_cache

@@ -1,0 +1,353 @@
+"""Unified decoder-LM assembly for all assigned architecture families.
+
+Families map to block stacks that run under ``jax.lax.scan`` over stacked
+layer parameters (small HLO, fast multi-pod compiles):
+
+  dense   : [norm->attn->res ; norm->swiglu->res] x L
+  moe     : same, FFN = grouped-dispatch MoE (+ optional first-k dense
+            layers and MLA attention for deepseek-v3, + MTP head)
+  ssm     : [norm->mamba2->res] x L
+  hybrid  : ssm stack with one weight-shared attention block invoked every
+            ``shared_attn_every`` layers (zamba2)
+  vlm     : groups of [gated cross-attn block ; k self-attn blocks]
+  encdec  : bidirectional encoder stack + causal decoder w/ cross-attention
+
+Each family exposes: init / loss (train) / forward (prefill logits) /
+init_cache / decode_step — the launch layer jits these per (arch x shape).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed import act_sharding as acts
+from repro.models import attention as attn
+from repro.models import layers, mla, moe, ssm
+from repro.models.layers import Params, dtype_of
+
+
+# --------------------------------------------------------------------------
+# block init/apply
+# --------------------------------------------------------------------------
+def init_decoder_block(key, cfg: ModelConfig, dtype, use_moe: bool) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "ln1": layers.init_rmsnorm(cfg.d_model, dtype),
+        "ln2": layers.init_rmsnorm(cfg.d_model, dtype),
+    }
+    p["attn"] = (mla.init_mla(k1, cfg, dtype) if cfg.use_mla
+                 else attn.init_attention(k1, cfg, dtype))
+    p["ffn"] = (moe.init_moe(k2, cfg, dtype) if use_moe
+                else layers.init_swiglu(k2, cfg.d_model, cfg.d_ff, dtype))
+    return p
+
+
+def decoder_block(p: Params, cfg: ModelConfig, x, positions, use_moe: bool):
+    # batch pinned at every sub-block boundary: forces GSPMD to all-gather
+    # the FSDP-sharded weights instead of replicating the batch
+    # (EXPERIMENTS.md §Perf iteration 2)
+    h = acts.constrain_batch(layers.rmsnorm(x, p["ln1"], cfg.norm_eps))
+    if cfg.use_mla:
+        a = mla.mla_block(p["attn"], cfg, h, positions)
+    else:
+        a = attn.attention_block(p["attn"], cfg, h, positions)
+    x = x + acts.constrain_batch(a)
+    h = acts.constrain_batch(layers.rmsnorm(x, p["ln2"], cfg.norm_eps))
+    if use_moe:
+        f, aux = moe.moe_block(p["ffn"], cfg, h)
+    else:
+        f, aux = layers.swiglu(h, **p["ffn"]), jnp.zeros((), jnp.float32)
+    return x + acts.constrain_batch(f), aux
+
+
+def init_mamba_layer(key, cfg, dtype) -> Params:
+    return {
+        "ln": layers.init_rmsnorm(cfg.d_model, dtype),
+        "mixer": ssm.init_mamba2(key, cfg, dtype),
+    }
+
+
+def mamba_layer(p: Params, cfg, x):
+    h = acts.constrain_batch(layers.rmsnorm(x, p["ln"], cfg.norm_eps))
+    return x + acts.constrain_batch(ssm.mamba2_block(p["mixer"], cfg, h))
+
+
+# --------------------------------------------------------------------------
+# parameter trees
+# --------------------------------------------------------------------------
+def _stack_init(fn, key, n: int):
+    """Initialize n layers and stack leaves along a leading axis."""
+    keys = jax.random.split(key, n)
+    trees = [fn(k) for k in keys]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_lm(key, cfg: ModelConfig) -> Params:
+    dtype = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 12)
+    V, d = cfg.padded_vocab, cfg.d_model
+    p: Params = {
+        "embed": layers.embed_init(ks[0], V, d, dtype),
+        "final_norm": layers.init_rmsnorm(d, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = layers.dense_init(ks[1], d, V, dtype)
+
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        n_moe = cfg.n_layers - cfg.first_dense_layers
+        if cfg.first_dense_layers:
+            p["dense_blocks"] = _stack_init(
+                lambda k: init_decoder_block(k, cfg, dtype, use_moe=False),
+                ks[2], cfg.first_dense_layers)
+        p["blocks"] = _stack_init(
+            lambda k: init_decoder_block(k, cfg, dtype,
+                                         use_moe=(fam == "moe")),
+            ks[3], n_moe)
+        if cfg.mtp_depth:
+            p["mtp"] = {
+                "proj": layers.dense_init(ks[4], 2 * d, d, dtype),
+                "block": init_decoder_block(ks[5], cfg, dtype,
+                                            use_moe=(fam == "moe")),
+                "norm": layers.init_rmsnorm(d, dtype),
+            }
+    elif fam == "ssm":
+        p["blocks"] = _stack_init(
+            lambda k: init_mamba_layer(k, cfg, dtype), ks[2], cfg.n_layers)
+    elif fam == "hybrid":
+        p["blocks"] = _stack_init(
+            lambda k: init_mamba_layer(k, cfg, dtype), ks[2], cfg.n_layers)
+        p["shared_block"] = init_decoder_block(ks[3], cfg, dtype,
+                                               use_moe=False)
+    elif fam == "vlm":
+        n_groups = cfg.n_layers // cfg.cross_attn_every
+        p["blocks"] = _stack_init(
+            lambda k: init_decoder_block(k, cfg, dtype, use_moe=False),
+            ks[2], cfg.n_layers)
+        p["cross_blocks"] = _stack_init(
+            lambda k: {
+                "ln": layers.init_rmsnorm(d, dtype),
+                "xattn": attn.init_cross_attention(k, cfg, dtype),
+                "ln2": layers.init_rmsnorm(d, dtype),
+                "ffn": layers.init_swiglu(
+                    jax.random.fold_in(k, 1), d, cfg.d_ff, dtype),
+                "ffn_gate": jnp.zeros((), dtype),
+            }, ks[3], n_groups)
+    elif fam == "encdec":
+        p["enc_blocks"] = _stack_init(
+            lambda k: init_decoder_block(k, cfg, dtype, use_moe=False),
+            ks[2], cfg.encoder_layers)
+        p["enc_norm"] = layers.init_rmsnorm(d, dtype)
+        p["blocks"] = _stack_init(
+            lambda k: init_decoder_block(k, cfg, dtype, use_moe=False),
+            ks[3], cfg.n_layers)
+        p["cross_blocks"] = _stack_init(
+            lambda k: {
+                "ln": layers.init_rmsnorm(d, dtype),
+                "xattn": attn.init_attention(k, cfg, dtype),
+            }, ks[4], cfg.n_layers)
+    else:
+        raise ValueError(fam)
+    return p
+
+
+# --------------------------------------------------------------------------
+# forward (training / prefill)
+# --------------------------------------------------------------------------
+def _compute(x, cfg):
+    return x.astype(dtype_of(cfg.compute_dtype))
+
+
+def cast_compute(params: Params, cfg: ModelConfig) -> Params:
+    """Cast floating params to the compute dtype (f32 masters stay in the
+    optimizer; the cast is differentiable so grads flow back to masters)."""
+    cd = dtype_of(cfg.compute_dtype)
+
+    def cast(a):
+        return a.astype(cd) if jnp.issubdtype(a.dtype, jnp.floating) else a
+    return jax.tree_util.tree_map(cast, params)
+
+
+def lm_hidden(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+              memory: Optional[jnp.ndarray] = None,
+              remat: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Token ids -> final hidden states. Returns (hidden, aux_loss)."""
+    params = cast_compute(params, cfg)
+    B, S = tokens.shape
+    # constrain the raw gather: a vocab-sharded embedding lookup otherwise
+    # materializes a full-batch (replicated) f32 output before resharding
+    x = _compute(acts.constrain_batch(params["embed"][tokens]), cfg)
+    x = acts.constrain_batch(x)
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    aux_total = jnp.zeros((), jnp.float32)
+    fam = cfg.family
+
+    if fam in ("dense", "moe"):
+        if cfg.first_dense_layers:
+            x, aux_total = _scan_blocks(
+                params["dense_blocks"], cfg, x, positions, False, remat,
+                aux_total)
+        x, aux_total = _scan_blocks(params["blocks"], cfg, x, positions,
+                                    fam == "moe", remat, aux_total)
+    elif fam == "ssm":
+        x = _scan_mamba(params["blocks"], cfg, x, None, remat)
+    elif fam == "hybrid":
+        x = _scan_mamba(params["blocks"], cfg, x, params["shared_block"],
+                        remat, positions)
+    elif fam == "vlm":
+        assert memory is not None, "vlm needs vision embeddings"
+        mem = _compute(memory, cfg)
+        k = cfg.cross_attn_every
+        n_groups = cfg.n_layers // k
+        blocks = jax.tree_util.tree_map(
+            lambda a: a.reshape((n_groups, k) + a.shape[1:]),
+            params["blocks"])
+
+        def group_fn(x, inp):
+            x = acts.constrain_batch(x)
+            gblocks, cross = inp
+            h = layers.rmsnorm(x, cross["ln"], cfg.norm_eps)
+            x = x + attn.cross_attention_block(cross["xattn"], cfg, h, mem,
+                                               gated=True)
+            h = layers.rmsnorm(x, cross["ln2"], cfg.norm_eps)
+            x = x + jnp.tanh(cross["ffn_gate"]) * layers.swiglu(
+                h, **cross["ffn"])
+
+            def inner(x, bp):
+                x, _ = decoder_block(bp, cfg, x, positions, False)
+                return x, None
+            x, _ = jax.lax.scan(inner, x, gblocks)
+            return x, None
+
+        fn = jax.checkpoint(group_fn) if remat else group_fn
+        x, _ = jax.lax.scan(fn, x, (blocks, params["cross_blocks"]))
+    elif fam == "encdec":
+        assert memory is not None, "encdec needs encoder output"
+
+        def dec_fn(x, inp):
+            x = acts.constrain_batch(x)
+            bp, xp = inp
+            h = layers.rmsnorm(x, xp["ln"], cfg.norm_eps)
+            x = x + attn.cross_attention_block(xp["xattn"], cfg, h, memory)
+            x, _ = decoder_block(bp, cfg, x, positions, False)
+            return x, None
+
+        fn = jax.checkpoint(dec_fn) if remat else dec_fn
+        x, _ = jax.lax.scan(fn, x, (params["blocks"],
+                                    params["cross_blocks"]))
+    else:
+        raise ValueError(fam)
+    x = layers.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux_total
+
+
+import os
+_REMAT_POLICY = os.environ.get("REPRO_REMAT_POLICY", "full")
+
+
+def _checkpoint(fn):
+    """Layer remat policy: 'full' recomputes everything (min memory);
+    'dots' saves matmul outputs (no fwd recompute of GEMMs, more memory) —
+    §Perf experiment, switchable per run via REPRO_REMAT_POLICY."""
+    if _REMAT_POLICY == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)
+
+
+def _scan_blocks(blocks, cfg, x, positions, use_moe, remat, aux_total):
+    def fn(x, bp):
+        x = acts.constrain_batch(x)
+        x, aux = decoder_block(bp, cfg, x, positions, use_moe)
+        return x, aux
+    fn = _checkpoint(fn) if remat else fn
+    x, auxes = jax.lax.scan(fn, x, blocks)
+    return x, aux_total + jnp.sum(auxes)
+
+
+def _scan_mamba(blocks, cfg, x, shared_block, remat, positions=None):
+    every = cfg.shared_attn_every
+
+    def fn(carry, inp):
+        x, i = carry
+        x = acts.constrain_batch(x)
+        bp = inp
+        if shared_block is not None:
+            def with_attn(x):
+                y, _ = decoder_block(shared_block, cfg, x, positions, False)
+                return y
+            x = jax.lax.cond(i % every == 0, with_attn, lambda x: x, x)
+        x = mamba_layer(bp, cfg, x)
+        return (x, i + 1), None
+
+    fn = jax.checkpoint(fn) if remat else fn
+    (x, _), _ = jax.lax.scan(fn, (x, jnp.zeros((), jnp.int32)), blocks)
+    return x
+
+
+def encoder_forward(params: Params, cfg: ModelConfig,
+                    frames: jnp.ndarray) -> jnp.ndarray:
+    """Whisper encoder over stub frame embeddings (B, S_enc, d)."""
+    params = cast_compute(params, cfg)
+    x = _compute(frames, cfg)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    def fn(x, bp):
+        h = layers.rmsnorm(x, bp["ln1"], cfg.norm_eps)
+        q, k, v = attn._project_qkv(bp["attn"], cfg, h, positions)
+        a = attn.flash_attention(q[:, :, :, None, :],
+                                 attn.expand_kv_padded(k, cfg),
+                                 attn.expand_kv_padded(v, cfg),
+                                 causal=False)
+        x = x + attn.attention_output(bp["attn"], cfg, a)
+        h = layers.rmsnorm(x, bp["ln2"], cfg.norm_eps)
+        return x + layers.swiglu(h, **bp["ffn"]), None
+
+    x, _ = jax.lax.scan(fn, x, params["enc_blocks"])
+    return layers.rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def lm_logits(params: Params, cfg: ModelConfig, hidden: jnp.ndarray
+              ) -> jnp.ndarray:
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    return jnp.einsum("bsd,dv->bsv", hidden,
+                      head.astype(hidden.dtype)).astype(jnp.float32)
+
+
+def lm_loss(params: Params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray]
+            ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    params = cast_compute(params, cfg)
+    memory = batch.get("vision", batch.get("frames"))
+    if cfg.family == "encdec":
+        memory = encoder_forward(params, cfg, batch["frames"])
+    hidden, aux = lm_hidden(params, cfg, batch["tokens"], memory)
+    logits = lm_logits(params, cfg, hidden)
+    loss = layers.cross_entropy_loss(logits, batch["labels"])
+    metrics = {"ce": loss, "aux": aux}
+    if cfg.mtp_depth:
+        # multi-token prediction (deepseek): predict t+2 from hidden_t and
+        # the embedding of token t+1.
+        emb_next = _compute(params["embed"][batch["tokens"]], cfg)
+        h_in = jnp.concatenate(
+            [hidden[:, :-1, :], emb_next[:, 1:, :]], axis=-1)
+        h_mtp = jnp.einsum("bsd,dk->bsk", h_in, params["mtp"]["proj"])
+        B, S1, _ = h_mtp.shape
+        pos = jnp.broadcast_to(jnp.arange(S1)[None, :], (B, S1))
+        h_mtp, _ = decoder_block(params["mtp"]["block"], cfg, h_mtp, pos,
+                                 cfg.family == "moe")
+        h_mtp = layers.rmsnorm(h_mtp, params["mtp"]["norm"], cfg.norm_eps)
+        mtp_logits = lm_logits(params, cfg, h_mtp)
+        mtp_loss = layers.cross_entropy_loss(
+            mtp_logits[:, :-1], batch["labels"][:, 2:])
+        metrics["mtp"] = mtp_loss
+        loss = loss + 0.3 * mtp_loss
+    loss = loss + cfg.router_aux_coef * aux
+    metrics["loss"] = loss
+    return loss, metrics

@@ -1,0 +1,8 @@
+"""Optimizers + schedules + gradient compression."""
+from repro.optim.optimizers import (AdamW, AdamWState, SGD, cosine_schedule,
+                                    global_norm)
+from repro.optim.grad_compression import (compress_with_feedback,
+                                          compressed_psum, init_residuals)
+
+__all__ = ["AdamW", "AdamWState", "SGD", "cosine_schedule", "global_norm",
+           "compress_with_feedback", "compressed_psum", "init_residuals"]

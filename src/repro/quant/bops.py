@@ -1,0 +1,85 @@
+"""Bit-operations (BOPs) cost model — paper §6 metric.
+
+An n-bit addition costs n BOPs; an n-bit multiplication costs n(n-1) BOPs
+(n-1 shifted additions).  We account for all three stages of the fast
+convolution (transform costs included, as the paper requires) plus the
+direct-convolution baseline.
+
+Accumulator width for a dot product of K products of a-bit x w-bit operands:
+    acc_bits = a + w + ceil(log2(K))
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+from repro.core.generator import BilinearAlgorithm
+
+
+def add_bops(bits: int) -> int:
+    return bits
+
+
+def mult_bops(a_bits: int, w_bits: int) -> int:
+    n = max(a_bits, w_bits)
+    return n * (n - 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvWorkload:
+    H: int
+    W: int
+    C_in: int
+    C_out: int
+    R: int
+    bits_act: int = 8
+    bits_weight: int = 8
+
+
+def direct_conv_bops(wl: ConvWorkload) -> float:
+    """Direct convolution: H*W*Cout dot products of length R^2*Cin."""
+    K = wl.R * wl.R * wl.C_in
+    acc_bits = wl.bits_act + wl.bits_weight + math.ceil(math.log2(K))
+    per_out = K * mult_bops(wl.bits_act, wl.bits_weight) + (K - 1) * add_bops(acc_bits)
+    return wl.H * wl.W * wl.C_out * per_out
+
+
+def fastconv_bops(wl: ConvWorkload, algo: BilinearAlgorithm,
+                  transform_bits: Optional[int] = None) -> float:
+    """Fast convolution (SFC / Winograd) under the same cost model.
+
+    * input transform: per tile per C_in, 2-D separable adds at
+      ``transform_bits`` (data width grows by log2(||B^T||_1) — SFC rows sum
+      to <= N so int8 data stays within int16).
+    * element-wise stage: t^2 x C_in x C_out MACs per tile.
+    * output transform: per tile per C_out adds at accumulator width.
+    * weight transform is amortized (precomputed once) — paper assumption.
+    """
+    M, t, L = algo.M, algo.t, algo.L
+    n_tiles = math.ceil(wl.H / M) * math.ceil(wl.W / M)
+    adds = algo.transform_addition_counts()
+
+    if transform_bits is None:
+        row_l1 = max(int(sum(abs(v) for v in row)) for row in algo.BT)
+        transform_bits = wl.bits_act + max(1, math.ceil(math.log2(max(row_l1, 2))))
+    # 2-D separable input transform: rows then cols.
+    input_adds = (adds["input"] * L + adds["input"] * t)  # per channel per tile
+    input_cost = n_tiles * wl.C_in * input_adds * add_bops(transform_bits)
+
+    # element-wise stage: accumulate over C_in at wide accumulator.
+    K = wl.C_in
+    acc_bits = wl.bits_act + wl.bits_weight + math.ceil(math.log2(max(K, 2)))
+    ew_cost = n_tiles * t * t * wl.C_out * (
+        K * mult_bops(wl.bits_act, wl.bits_weight) + (K - 1) * add_bops(acc_bits))
+
+    # output transform at accumulator width (dequant fused into scales).
+    out_adds = adds["output"] * t + adds["output"] * M
+    out_cost = n_tiles * wl.C_out * out_adds * add_bops(acc_bits)
+
+    return input_cost + ew_cost + out_cost
+
+
+def bops_reduction(wl: ConvWorkload, algo: BilinearAlgorithm) -> float:
+    """Direct/fast BOPs ratio (paper reports 1.6x-2.5x vs int8 direct)."""
+    return direct_conv_bops(wl) / fastconv_bops(wl, algo)

@@ -1,0 +1,140 @@
+"""Fake (simulated) integer quantization with the paper's granularities.
+
+Symmetric uniform quantization: q = clip(round(x / s), -qmax, qmax), with a
+scale-factor *group* structure (paper §5, Eq. 17):
+
+  activations (transform domain, shape (..., t, t, C)):
+     'tensor'     : one scale for the whole tensor
+     'frequency'  : one scale per transform-domain coordinate  -> s[t, t]
+  weights (transform domain, shape (t, t, Cin, Cout)):
+     'channel'          : per output channel                   -> s[Cout]
+     'frequency'        : per coordinate                       -> s[t, t]
+     'channel+frequency': per coordinate per channel           -> s[t,t,Cout]
+
+Spatial-domain tensors use 'tensor' (activations) / 'channel' (weights).
+All ops are jittable; the straight-through estimator is used for gradients
+so the same code serves PTQ simulation and quantization-aware fine-tuning.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def qmax_for_bits(bits: int) -> int:
+    return 2 ** (bits - 1) - 1
+
+
+def _absmax_scale(x: jnp.ndarray, reduce_axes: Sequence[int], bits: int
+                  ) -> jnp.ndarray:
+    amax = jnp.max(jnp.abs(x), axis=tuple(reduce_axes), keepdims=True)
+    return amax / qmax_for_bits(bits) + 1e-12
+
+
+def activation_reduce_axes(ndim: int, granularity: str,
+                           t_axes: Tuple[int, int] = (-3, -2)) -> Tuple[int, ...]:
+    """Axes to reduce when computing activation scales.
+
+    For transform-domain activations (..., t, t, C) with 'frequency'
+    granularity we keep the two t axes and reduce everything else
+    (including channels — the paper's s_Tx is [T x T]).
+    """
+    t_axes = tuple(a % ndim for a in t_axes)
+    if granularity == "tensor":
+        return tuple(range(ndim))
+    if granularity == "frequency":
+        return tuple(a for a in range(ndim) if a not in t_axes)
+    raise ValueError(f"activation granularity: {granularity}")
+
+
+def weight_reduce_axes(ndim: int, granularity: str) -> Tuple[int, ...]:
+    """Weights are (t, t, Cin, Cout) (transform) or (R, R, Cin, Cout)."""
+    if granularity == "channel":          # keep Cout
+        return tuple(range(ndim - 1))
+    if granularity == "frequency":        # keep (t, t)
+        return (ndim - 2, ndim - 1)
+    if granularity == "channel+frequency":  # keep (t, t, Cout)
+        return (ndim - 2,)
+    if granularity == "tensor":
+        return tuple(range(ndim))
+    raise ValueError(f"weight granularity: {granularity}")
+
+
+@jax.custom_vjp
+def _ste_round(x):
+    return jnp.round(x)
+
+
+def _ste_round_fwd(x):
+    return jnp.round(x), None
+
+
+def _ste_round_bwd(_, g):
+    return (g,)
+
+
+_ste_round.defvjp(_ste_round_fwd, _ste_round_bwd)
+
+
+def quantize(x: jnp.ndarray, scale: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Real -> integer grid (still float dtype, values are integers)."""
+    q = qmax_for_bits(bits)
+    return jnp.clip(_ste_round(x / scale), -q, q)
+
+
+def dequantize(xq: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return xq * scale
+
+
+def fake_quant(x: jnp.ndarray, bits: int, reduce_axes: Sequence[int],
+               scale: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """quantize+dequantize; scale computed from data unless provided."""
+    s = scale if scale is not None else _absmax_scale(x, reduce_axes, bits)
+    return dequantize(quantize(x, s, bits), s)
+
+
+def fake_quant_activation(x: jnp.ndarray, bits: int, granularity: str,
+                          scale: Optional[jnp.ndarray] = None,
+                          t_axes: Tuple[int, int] = (-3, -2)) -> jnp.ndarray:
+    axes = activation_reduce_axes(x.ndim, granularity, t_axes)
+    return fake_quant(x, bits, axes, scale)
+
+
+def fake_quant_weight(w: jnp.ndarray, bits: int, granularity: str,
+                      scale: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    axes = weight_reduce_axes(w.ndim, granularity)
+    return fake_quant(w, bits, axes, scale)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Transform-domain quantization recipe (paper Eq. 17 + §6.3 ablation)."""
+
+    bits_act: int = 8
+    bits_weight: int = 8
+    act_granularity: str = "frequency"          # 'tensor' | 'frequency'
+    weight_granularity: str = "channel+frequency"
+    enabled: bool = True
+
+    def hook(self):
+        """elementwise_hook for ``repro.core.conv2d.fastconv2d``."""
+        if not self.enabled:
+            return None
+
+        def _hook(tx, tw):
+            txq = fake_quant_activation(
+                tx, self.bits_act, self.act_granularity, t_axes=(-3, -2))
+            twq = fake_quant_weight(tw, self.bits_weight,
+                                    self.weight_granularity)
+            return txq, twq
+        return _hook
+
+
+FP32 = QuantConfig(enabled=False)
+INT8_FREQ = QuantConfig(8, 8, "frequency", "channel+frequency")
+INT8_TENSOR = QuantConfig(8, 8, "tensor", "channel")
+INT6_FREQ = QuantConfig(6, 6, "frequency", "channel+frequency")
+INT4_FREQ = QuantConfig(4, 4, "frequency", "channel+frequency")

@@ -1,0 +1,94 @@
+"""Post-training quantization calibration (paper §6.1).
+
+The paper calibrates on ~500 images with AdaQuant; offline we implement the
+robust core of that recipe:
+
+  * **scale search**: per scale-group grid search over a multiplier of the
+    absmax scale, minimizing the MSE between the fake-quantized and fp
+    tensors (LoWino-style distance minimization, same objective family as
+    AdaQuant's first stage);
+  * **calibration buffers**: running absmax/percentile statistics collected
+    over calibration batches, producing *static* scales for deployment (the
+    paper stores transform-domain tensors, avoiding double quantization);
+  * a hook factory that plugs the calibrated static scales into the
+    ``fastconv2d`` element-wise stage.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.quant.fake_quant as fq
+
+
+def mse_scale_search(x: jnp.ndarray, bits: int, reduce_axes: Sequence[int],
+                     n_grid: int = 32, lo: float = 0.3) -> jnp.ndarray:
+    """Grid-search the scale multiplier minimizing fake-quant MSE per group."""
+    amax_scale = jnp.max(jnp.abs(x), axis=tuple(reduce_axes), keepdims=True) \
+        / fq.qmax_for_bits(bits) + 1e-12
+    best_scale = amax_scale
+    best_err = jnp.full(amax_scale.shape, jnp.inf)
+    for m in np.linspace(lo, 1.0, n_grid):
+        s = amax_scale * m
+        err = jnp.sum((fq.dequantize(fq.quantize(x, s, bits), s) - x) ** 2,
+                      axis=tuple(reduce_axes), keepdims=True)
+        best_scale = jnp.where(err < best_err, s, best_scale)
+        best_err = jnp.minimum(err, best_err)
+    return best_scale
+
+
+@dataclasses.dataclass
+class CalibrationState:
+    """Running absmax statistics for one tensor's scale group."""
+
+    amax: Optional[np.ndarray] = None
+
+    def update(self, x: np.ndarray, reduce_axes: Sequence[int]) -> None:
+        cur = np.max(np.abs(x), axis=tuple(reduce_axes), keepdims=True)
+        self.amax = cur if self.amax is None else np.maximum(self.amax, cur)
+
+    def scale(self, bits: int) -> np.ndarray:
+        assert self.amax is not None, "no calibration data seen"
+        return self.amax / fq.qmax_for_bits(bits) + 1e-12
+
+
+@dataclasses.dataclass
+class PTQLayer:
+    """Calibrated transform-domain quantizer for one conv layer."""
+
+    config: fq.QuantConfig
+    act_state: CalibrationState = dataclasses.field(
+        default_factory=CalibrationState)
+    weight_scale: Optional[jnp.ndarray] = None
+
+    # ---- calibration pass ----
+    def observe(self, tx: jnp.ndarray, tw: jnp.ndarray) -> None:
+        axes = fq.activation_reduce_axes(tx.ndim, self.config.act_granularity)
+        self.act_state.update(np.asarray(tx), axes)
+        if self.weight_scale is None:
+            w_axes = fq.weight_reduce_axes(tw.ndim,
+                                           self.config.weight_granularity)
+            self.weight_scale = mse_scale_search(
+                tw, self.config.bits_weight, w_axes)
+
+    def calibration_hook(self) -> Callable:
+        def _hook(tx, tw):
+            self.observe(tx, tw)
+            return tx, tw  # calibration runs in fp
+        return _hook
+
+    # ---- deployment pass ----
+    def quantized_hook(self) -> Callable:
+        act_scale = jnp.asarray(self.act_state.scale(self.config.bits_act))
+
+        def _hook(tx, tw):
+            txq = fq.fake_quant(tx, self.config.bits_act,
+                                reduce_axes=(), scale=act_scale)
+            twq = fq.fake_quant(tw, self.config.bits_weight,
+                                reduce_axes=(), scale=self.weight_scale)
+            return txq, twq
+        return _hook

@@ -1,0 +1,22 @@
+"""Shared test config.
+
+The suite jit-compiles hundreds of programs in one process; compiled
+executables otherwise accumulate until LLVM hits the container's memory
+ceiling ("LLVM compilation error: Cannot allocate memory").  Clearing the
+jax caches at module boundaries keeps the footprint flat.
+
+NOTE: deliberately no XLA_FLAGS here — smoke tests and benches must see
+the host's single device (the 512-device override belongs exclusively to
+repro/launch/dryrun*.py).
+"""
+import gc
+
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_per_module():
+    yield
+    jax.clear_caches()
+    gc.collect()

@@ -1,0 +1,85 @@
+"""Attention unit tests: flash custom-VJP vs naive, windows, head padding."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models.attention import (expand_kv_padded, flash_attention,
+                                    padded_heads)
+
+
+def naive(qg, k, v, causal=True, window=0):
+    B, Sq, Hkv, g, D = qg.shape
+    Sk = k.shape[1]
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qg, k) / np.sqrt(D)
+    mask = jnp.tril(jnp.ones((Sq, Sk), bool), k=Sk - Sq) if causal else \
+        jnp.ones((Sq, Sk), bool)
+    if window:
+        qpos = jnp.arange(Sq)[:, None]
+        kpos = jnp.arange(Sk)[None, :]
+        mask = mask & (kpos > qpos - window)
+    s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqhgk,bkhd->bqhgd", p, v)
+
+
+@pytest.mark.parametrize("Hkv,g,Dv,window,chunk", [
+    (2, 2, 16, 0, 8), (4, 1, 8, 0, 16), (2, 2, 16, 7, 8), (1, 4, 32, 0, 33)])
+def test_flash_matches_naive_fwd_and_grad(Hkv, g, Dv, window, chunk):
+    rng = np.random.RandomState(0)
+    B, S, D = 2, 33, 16
+    qg = jnp.asarray(rng.randn(B, S, Hkv, g, D), jnp.float32)
+    k = jnp.asarray(rng.randn(B, S, Hkv, D), jnp.float32)
+    v = jnp.asarray(rng.randn(B, S, Hkv, Dv), jnp.float32)
+
+    def f(qg, k, v):
+        return jnp.sum(jnp.sin(flash_attention(
+            qg, k, v, causal=True, window=window, chunk=chunk)))
+
+    def fn(qg, k, v):
+        return jnp.sum(jnp.sin(naive(qg, k, v, causal=True, window=window)))
+
+    np.testing.assert_allclose(float(f(qg, k, v)), float(fn(qg, k, v)),
+                               rtol=1e-4)
+    g1 = jax.grad(f, argnums=(0, 1, 2))(qg, k, v)
+    g2 = jax.grad(fn, argnums=(0, 1, 2))(qg, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-4)
+
+
+def test_padded_heads_arithmetic():
+    class C:
+        pass
+    assert padded_heads(C(), 40) == 48
+    assert padded_heads(C(), 24) == 32
+    assert padded_heads(C(), 32) == 32
+    assert padded_heads(C(), 6) == 6      # below one shard: replicated
+
+
+def test_padded_heads_do_not_change_output():
+    """A model whose head count pads (phi4: 24 -> 32) computes the same
+    function as one with no padding (the zero wo rows kill dead heads)."""
+    cfg = get_smoke_config("phi4-mini-3.8b")
+    cfg = cfg.__class__(**{**cfg.__dict__, "compute_dtype": "float32"})
+    from repro.models.attention import attention_block, init_attention
+    p = init_attention(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jnp.asarray(np.random.RandomState(0).randn(2, 16, cfg.d_model),
+                    jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(16)[None], (2, 16))
+    out = attention_block(p, cfg, x, pos)
+    # reference: strip padding and compute densely
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dkh->bskh", x, p["wq"][:, :hq])
+    k = jnp.einsum("bsd,dkh->bskh", x, p["wk"])
+    v = jnp.einsum("bsd,dkh->bskh", x, p["wv"])
+    from repro.models.layers import apply_rope
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    g = hq // hkv
+    o = naive(q.reshape(2, 16, hkv, g, hd), k, v, causal=True)
+    ref = jnp.einsum("bskh,khd->bsd", o.reshape(2, 16, hq, hd),
+                     p["wo"][:hq])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)

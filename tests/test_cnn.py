@@ -1,0 +1,69 @@
+"""Paper CNNs: forward shapes, algorithm/quant selection, trainability."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.resnet18 import CIFAR_RESNET18, SMOKE_CNN, VGG16, CNNConfig
+from repro.models.cnn import (cnn_loss, init_resnet, init_vgg,
+                              resnet_forward, vgg_forward)
+
+
+def test_resnet_forward_shapes():
+    cfg = SMOKE_CNN
+    p = init_resnet(jax.random.PRNGKey(0), cfg)
+    x = jnp.zeros((2, cfg.image_size, cfg.image_size, 3))
+    logits = resnet_forward(p, cfg, x)
+    assert logits.shape == (2, cfg.n_classes)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("algo", ["direct", "sfc6_6", "sfc6_7", "sfc4_4",
+                                  "wino4"])
+def test_algorithms_agree_fp32(algo):
+    """All conv algorithms compute the same network function in fp32."""
+    base = dataclasses.replace(SMOKE_CNN, conv_algo="direct")
+    var = dataclasses.replace(SMOKE_CNN, conv_algo=algo)
+    p = init_resnet(jax.random.PRNGKey(0), base)
+    x = jnp.asarray(np.random.RandomState(0).randn(2, 16, 16, 3),
+                    jnp.float32)
+    y0 = resnet_forward(p, base, x)
+    y1 = resnet_forward(p, var, x)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_quantized_sfc_close_to_fp():
+    base = dataclasses.replace(SMOKE_CNN, conv_algo="sfc6_6")
+    q = dataclasses.replace(SMOKE_CNN, conv_algo="sfc6_6", quant="int8")
+    p = init_resnet(jax.random.PRNGKey(0), base)
+    x = jnp.asarray(np.random.RandomState(0).randn(2, 16, 16, 3),
+                    jnp.float32)
+    y0 = resnet_forward(p, base, x)
+    y1 = resnet_forward(p, q, x)
+    rel = float(jnp.linalg.norm(y1 - y0) / (jnp.linalg.norm(y0) + 1e-9))
+    assert rel < 0.15
+
+
+def test_vgg_forward():
+    cfg = dataclasses.replace(
+        VGG16, stages=(1, 1), widths=(8, 16), image_size=16, n_classes=10)
+    p = init_vgg(jax.random.PRNGKey(0), cfg)
+    x = jnp.zeros((2, 16, 16, 3))
+    assert vgg_forward(p, cfg, x).shape == (2, 10)
+
+
+def test_cnn_gradients():
+    cfg = dataclasses.replace(SMOKE_CNN, conv_algo="sfc6_6", quant="int8")
+    p = init_resnet(jax.random.PRNGKey(0), cfg)
+    batch = {"images": jnp.asarray(
+        np.random.RandomState(0).randn(2, 16, 16, 3), jnp.float32),
+        "labels": jnp.asarray([0, 1], jnp.int32)}
+    loss, metrics = cnn_loss(p, cfg, batch)
+    assert jnp.isfinite(loss)
+    g = jax.grad(lambda p: cnn_loss(p, cfg, batch)[0])(p)
+    gn = sum(float(jnp.sum(jnp.abs(x))) for x in
+             jax.tree_util.tree_leaves(g))
+    assert np.isfinite(gn) and gn > 0   # STE keeps grads flowing

@@ -1,0 +1,76 @@
+"""Fast-conv execution vs direct oracle: 2-D, 1-D depthwise, iterative."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (conv1d_depthwise_causal_direct, conv2d_direct,
+                        fastconv1d_depthwise_causal, fastconv2d,
+                        generate_sfc, generate_winograd, paper_algorithms)
+from repro.core.iterative import iterative_conv1d, large_kernel_report
+
+ALGOS = {n: a for n, a in paper_algorithms().items() if a.kind != "direct"}
+
+
+@pytest.mark.parametrize("name", list(ALGOS))
+@pytest.mark.parametrize("padding", ["SAME", "VALID"])
+def test_fastconv2d_matches_direct(name, padding):
+    algo = ALGOS[name]
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(2, 13, 15, 4), jnp.float32)
+    w = jnp.asarray(rng.randn(algo.R, algo.R, 4, 6), jnp.float32)
+    y = fastconv2d(x, w, algo, padding=padding)
+    yref = conv2d_direct(x, w, padding=padding)
+    assert y.shape == yref.shape
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yref),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 3), st.integers(5, 23), st.integers(5, 23),
+       st.integers(1, 5), st.integers(0, 2 ** 31 - 1))
+def test_fastconv2d_property_shapes(b, h, w_, c, seed):
+    algo = ALGOS["SFC-6(6x6,3x3)"]
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(b, h, w_, c), jnp.float32)
+    w = jnp.asarray(rng.randn(3, 3, c, 3), jnp.float32)
+    y = fastconv2d(x, w, algo, padding="SAME")
+    yref = conv2d_direct(x, w, padding="SAME")
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yref),
+                               rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("nmr", [(6, 3, 4), (6, 6, 4), (4, 4, 3), (6, 7, 3)])
+def test_fastconv1d_depthwise(nmr):
+    N, M, R = nmr
+    algo = generate_sfc(N, M, R)
+    rng = np.random.RandomState(1)
+    x = jnp.asarray(rng.randn(2, 37, 8), jnp.float32)
+    w = jnp.asarray(rng.randn(R, 8), jnp.float32)
+    y = fastconv1d_depthwise_causal(x, w, algo)
+    yref = conv1d_depthwise_causal_direct(x, w)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_iterative_large_kernel():
+    """App. B: nested SFC for a 30-tap kernel, exact + ~5% of direct."""
+    inner = generate_sfc(6, 5, 5)
+    outer = generate_sfc(6, 6, 6)
+    rng = np.random.RandomState(0)
+    Rw, Mt = inner.R * outer.R, inner.M * outer.M
+    x = jnp.asarray(rng.randn(Mt + Rw - 1), jnp.float64)
+    w = jnp.asarray(rng.randn(Rw), jnp.float64)
+    y = iterative_conv1d(x, w, inner, outer)
+    yref = jnp.array([(x[m:m + Rw] * w).sum() for m in range(Mt)])
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yref),
+                               rtol=1e-4, atol=1e-4)
+    rep = large_kernel_report(30, inner, outer)
+    assert rep["ratio_pct"] < 8.0     # paper: ~3% with its uneven split
+
+
+def test_iterative_alignment_check():
+    with pytest.raises(ValueError):
+        iterative_conv1d(jnp.zeros(30), jnp.zeros(12),
+                         generate_sfc(6, 6, 4), generate_sfc(6, 3, 3))

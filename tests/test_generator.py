@@ -1,0 +1,91 @@
+"""SFC/Winograd generator: exactness, paper multiplication counts, structure."""
+from fractions import Fraction
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.generator import (direct_algorithm, generate_sfc,
+                                  generate_winograd, paper_algorithms)
+
+ALGOS = paper_algorithms()
+
+
+@pytest.mark.parametrize("name", list(ALGOS))
+def test_exact_rational(name):
+    """A^T((Gw) . (B^T x)) == correlation, exactly (zero rational error)."""
+    algo = ALGOS[name]
+    rng = np.random.RandomState(42)
+    for _ in range(5):
+        x = [Fraction(int(v), int(d)) for v, d in zip(
+            rng.randint(-99, 100, algo.L), rng.randint(1, 9, algo.L))]
+        w = [Fraction(int(v)) for v in rng.randint(-99, 100, algo.R)]
+        got = algo.conv1d_exact(x, w)
+        want = [sum(x[m + r] * w[r] for r in range(algo.R))
+                for m in range(algo.M)]
+        assert got == want
+
+
+def test_paper_multiplication_counts():
+    """Table 1 / appendix counts: 49, 100, 144, 196 (separable form)."""
+    assert generate_sfc(4, 4, 3).mults_2d == 49
+    assert generate_sfc(6, 6, 3).mults_2d == 100
+    assert generate_sfc(6, 7, 3).mults_2d == 144
+    assert generate_sfc(6, 6, 5).mults_2d == 196
+
+
+def test_paper_hermitian_complexity():
+    """Paper's arithmetic-complexity column (full-Hermitian counts)."""
+    from repro.core.error_analysis import table1
+    t = table1(trials=8)
+    assert abs(t["SFC-4(4x4,3x3)"]["complexity_pct_hermitian"] - 31.94) < 0.01
+    assert abs(t["SFC-6(6x6,3x3)"]["complexity_pct_hermitian"] - 27.16) < 0.01
+    assert abs(t["SFC-6(7x7,3x3)"]["complexity_pct_hermitian"] - 29.93) < 0.01
+    assert abs(t["SFC-6(6x6,5x5)"]["complexity_pct_hermitian"] - 20.44) < 0.01
+
+
+def test_sfc_transforms_are_integer():
+    """The additions-only claim: B^T and G contain only integers."""
+    for name, algo in ALGOS.items():
+        if algo.kind == "sfc":
+            assert algo.is_integer_transform(), name
+            for row in algo.BT:
+                assert all(abs(v) <= 2 for v in row), name
+
+
+def test_winograd_vs_sfc_conditioning():
+    """SFC condition numbers stay O(1) while Winograd's grow with N."""
+    sfc_k = [ALGOS[n].condition_number_at() for n in ALGOS
+             if ALGOS[n].kind == "sfc"]
+    wino_big = ALGOS["Wino(4x4,3x3)"].condition_number_at()
+    assert max(sfc_k) < 4.0
+    assert wino_big > 2 * max(sfc_k)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.sampled_from([(4, 1, 3), (4, 2, 3), (4, 4, 3), (6, 2, 3),
+                        (6, 6, 3), (6, 7, 3), (6, 3, 4), (6, 6, 4),
+                        (6, 4, 5), (6, 6, 5), (6, 4, 7), (3, 2, 2),
+                        (6, 8, 3), (6, 5, 4), (4, 5, 3)]),
+       st.integers(0, 2 ** 31 - 1))
+def test_sfc_property_random_nm_r(nmr, seed):
+    """Property: every generatable SFC-N(M,R) is exact on random ints."""
+    N, M, R = nmr
+    algo = generate_sfc(N, M, R)
+    rng = np.random.RandomState(seed)
+    x = [Fraction(int(v)) for v in rng.randint(-50, 51, algo.L)]
+    w = [Fraction(int(v)) for v in rng.randint(-50, 51, algo.R)]
+    got = algo.conv1d_exact(x, w)
+    want = [sum(x[m + r] * w[r] for r in range(R)) for m in range(M)]
+    assert got == want
+
+
+def test_unsupported_dft_points_raise():
+    with pytest.raises(ValueError):
+        generate_sfc(8, 4, 3)
+
+
+def test_direct_algorithm_is_identity():
+    d = direct_algorithm(3)
+    assert d.mults_2d == 9
+    assert d.condition_number_at() == pytest.approx(1.0, abs=1e-9)

@@ -1,0 +1,97 @@
+"""Loop-aware HLO cost analyzer: trip counts, nested loops, dot flops."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import analyze
+
+
+def _compiled_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_scan_trip_count_multiplies_flops():
+    x = jnp.ones((64, 64))
+
+    def body(c, _):
+        return c @ x, None
+
+    def f(c):
+        out, _ = jax.lax.scan(body, c, None, length=10)
+        return out
+
+    s = analyze(_compiled_text(f, x))
+    assert s.flops == pytest.approx(10 * 2 * 64 ** 3, rel=1e-6)
+    assert 10 in s.loop_trips.values()
+
+
+def test_nested_scan():
+    x = jnp.ones((32, 32))
+
+    def inner(c, _):
+        return c @ x, None
+
+    def outer(c, _):
+        c, _ = jax.lax.scan(inner, c, None, length=5)
+        return c, None
+
+    def f(c):
+        out, _ = jax.lax.scan(outer, c, None, length=3)
+        return out
+
+    s = analyze(_compiled_text(f, x))
+    assert s.flops == pytest.approx(15 * 2 * 32 ** 3, rel=1e-6)
+    assert sorted(s.loop_trips.values()) == [3, 5]
+
+
+def test_cost_analysis_undercounts_loops():
+    """The motivating observation: XLA cost_analysis counts a while body
+    once; the analyzer corrects it."""
+    x = jnp.ones((64, 64))
+
+    def f(c):
+        out, _ = jax.lax.scan(lambda c, _: (c @ x, None), c, None, length=8)
+        return out
+
+    compiled = jax.jit(f).lower(x).compile()
+    raw = compiled.cost_analysis()["flops"]
+    corrected = analyze(compiled.as_text()).flops
+    assert corrected == pytest.approx(8 * 2 * 64 ** 3, rel=1e-6)
+    assert corrected > 5 * raw          # raw counted the body ~once
+
+
+def test_traffic_nonzero_and_param_bytes():
+    a = jnp.ones((128, 128))
+
+    def f(a):
+        return jnp.tanh(a @ a) @ a
+
+    s = analyze(_compiled_text(f, a))
+    assert s.flops == pytest.approx(2 * 2 * 128 ** 3, rel=1e-6)
+    assert s.traffic_bytes > 0
+    assert s.param_bytes == 128 * 128 * 4
+
+
+def test_model_train_step_flops_scale_with_layers():
+    """End-to-end: a 4-layer smoke model reports ~2x the flops of 2-layer."""
+    from repro.configs import get_smoke_config
+    from repro.models import build
+    from repro.optim.optimizers import AdamW
+    from repro.train.steps import abstract_train_state, make_train_step
+
+    flops = {}
+    for L in (2, 4):
+        cfg = get_smoke_config("stablelm-3b")
+        cfg = cfg.__class__(**{**cfg.__dict__, "n_layers": L})
+        model = build(cfg)
+        opt = AdamW(lr=1e-3)
+        state = abstract_train_state(model, opt)
+        batch = {"tokens": jax.ShapeDtypeStruct((2, 64), jnp.int32),
+                 "labels": jax.ShapeDtypeStruct((2, 64), jnp.int32)}
+        step = make_train_step(model, opt)
+        text = jax.jit(step).lower(state, batch).compile().as_text()
+        flops[L] = analyze(text).flops
+    # embed/lm_head are layer-independent; per-layer part must double
+    assert flops[4] > 1.5 * flops[2] - (flops[2] * 0.5)
+    assert flops[4] / flops[2] > 1.3

@@ -1,0 +1,139 @@
+"""Per-arch smoke tests (reduced configs): shapes, finiteness, decode parity,
+gradients, SFC-conv1d integration."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import build
+from repro.models import moe as moe_mod
+
+
+def _batch(cfg, B=2, S=16, seed=0):
+    rng = np.random.RandomState(seed)
+    batch = {
+        "tokens": jnp.asarray(rng.randint(0, cfg.vocab_size, (B, S)),
+                              jnp.int32),
+        "labels": jnp.asarray(rng.randint(0, cfg.vocab_size, (B, S)),
+                              jnp.int32),
+    }
+    if cfg.family == "vlm":
+        batch["vision"] = jnp.asarray(
+            rng.randn(B, cfg.n_vision_tokens, cfg.d_model), jnp.float32)
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(
+            rng.randn(B, S, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    """One forward + one grad step on CPU: output shapes + no NaNs."""
+    cfg = get_smoke_config(arch)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    loss, metrics = model.loss(params, batch)
+    assert jnp.isfinite(loss), arch
+    memory = batch.get("vision", batch.get("frames"))
+    logits = model.forward(params, batch["tokens"], memory)
+    assert logits.shape == (2, 16, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    grads = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+    gn = sum(float(jnp.sum(jnp.abs(g))) for g in
+             jax.tree_util.tree_leaves(grads))
+    assert np.isfinite(gn) and gn > 0, arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_forward(arch):
+    """Teacher-forced decode == full forward (lossless MoE capacity)."""
+    cfg = get_smoke_config(arch)
+    cfg = cfg.__class__(**{**cfg.__dict__, "compute_dtype": "float32"})
+    # lossless MoE so prefill and decode see identical dispatch
+    orig = moe_mod.moe_block
+    moe_mod.moe_block = lambda p, c, x, capacity_factor=None: orig(
+        p, c, x, capacity_factor=c.n_experts / max(c.n_experts_active, 1))
+    import repro.models.transformer as tfm
+    tfm.moe.moe_block = moe_mod.moe_block
+    try:
+        model = build(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        B, S = 2, 12
+        batch = _batch(cfg, B, S)
+        memory = batch.get("vision", batch.get("frames"))
+        full = model.forward(params, batch["tokens"], memory)
+        cache = model.init_cache(params, B, S, memory)
+        outs = []
+        for t in range(S):
+            lg, cache = model.decode_step(
+                params, cache, batch["tokens"][:, t:t + 1],
+                jnp.full((B,), t, jnp.int32))
+            outs.append(lg[:, 0])
+        dec = jnp.stack(outs, axis=1)
+        err = float(jnp.abs(full - dec).max())
+        assert err < 1e-3, (arch, err)
+    finally:
+        moe_mod.moe_block = orig
+        tfm.moe.moe_block = orig
+
+
+def test_full_config_values():
+    """The full (assigned) configs carry the exact published dimensions."""
+    c = get_config("qwen2.5-32b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (64, 5120, 40, 8, 27648, 152064)
+    c = get_config("deepseek-v3-671b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_experts,
+            c.n_experts_active) == (61, 7168, 128, 256, 8)
+    assert c.use_mla and c.mtp_depth == 1
+    c = get_config("mamba2-1.3b")
+    assert (c.n_layers, c.d_model, c.ssm_state) == (48, 2048, 128)
+    assert c.padded_vocab % 16 == 0
+    c = get_config("mixtral-8x7b")
+    assert c.sliding_window == 4096 and c.n_experts == 8
+    # ~param-count sanity (within 15% of the nominal sizes)
+    assert abs(get_config("deepseek-v3-671b").param_count() - 671e9) \
+        < 0.15 * 671e9
+    assert abs(get_config("mixtral-8x7b").param_count() - 46.7e9) \
+        < 0.15 * 46.7e9
+
+
+def test_mamba_sfc_conv_equals_direct_path():
+    """cfg.use_sfc_conv flips the conv1d to the paper's fast path — same math."""
+    cfg = get_smoke_config("mamba2-1.3b")
+    cfg32 = cfg.__class__(**{**cfg.__dict__, "compute_dtype": "float32"})
+    cfg_direct = cfg32.__class__(**{**cfg32.__dict__, "use_sfc_conv": False})
+    m1, m2 = build(cfg32), build(cfg_direct)
+    params = m1.init(jax.random.PRNGKey(0))
+    toks = jnp.asarray(np.random.RandomState(0).randint(0, 64, (2, 32)),
+                       jnp.int32)
+    y1 = m1.forward(params, toks)
+    y2 = m2.forward(params, toks)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_sliding_window_restricts_context():
+    """Single layer: the receptive field is exactly the window (deeper
+    stacks legitimately widen it through the residual stream; MoE archs
+    additionally couple tokens through capacity-limited dispatch, so a
+    dense arch isolates the attention mask)."""
+    cfg = get_smoke_config("qwen3-14b")
+    cfg = cfg.__class__(**{**cfg.__dict__, "compute_dtype": "float32",
+                           "sliding_window": 4, "n_layers": 1})
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    t1 = jnp.asarray(rng.randint(0, 64, (1, 12)), jnp.int32)
+    t2 = t1.at[0, 0].set((int(t1[0, 0]) + 1) % 64)   # differ far in the past
+    l1 = model.forward(params, t1)
+    l2 = model.forward(params, t2)
+    # final position attends only to the last 4 tokens -> logits identical
+    np.testing.assert_allclose(np.asarray(l1[0, -1]), np.asarray(l2[0, -1]),
+                               rtol=1e-4, atol=1e-4)
+    # ...while a within-window change does alter them
+    t3 = t1.at[0, 11].set((int(t1[0, 11]) + 1) % 64)
+    l3 = model.forward(params, t3)
+    assert float(jnp.abs(l1[0, -1] - l3[0, -1]).max()) > 1e-4

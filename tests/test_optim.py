@@ -1,0 +1,80 @@
+"""Optimizers + gradient compression invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import (AdamW, compress_with_feedback, cosine_schedule,
+                         global_norm, init_residuals)
+
+
+def test_adamw_converges_quadratic():
+    opt = AdamW(lr=0.1, weight_decay=0.0, clip_norm=100.0)
+    params = {"x": jnp.asarray([5.0, -3.0])}
+    state = opt.init(params)
+    target = jnp.asarray([1.0, 2.0])
+    for _ in range(200):
+        g = {"x": 2 * (params["x"] - target)}
+        params, state, _ = opt.apply(params, g, state)
+    np.testing.assert_allclose(np.asarray(params["x"]), np.asarray(target),
+                               atol=1e-2)
+
+
+def test_adamw_bf16_params_f32_moments():
+    opt = AdamW(lr=0.01)
+    params = {"w": jnp.zeros((4,), jnp.bfloat16)}
+    state = opt.init(params)
+    assert state.mu["w"].dtype == jnp.float32
+    params, state, _ = opt.apply(params, {"w": jnp.ones((4,), jnp.bfloat16)},
+                                 state)
+    assert params["w"].dtype == jnp.bfloat16
+
+
+def test_clip_norm():
+    opt = AdamW(lr=1.0, clip_norm=1.0, weight_decay=0.0)
+    params = {"x": jnp.zeros((3,))}
+    state = opt.init(params)
+    _, _, metrics = opt.apply(params, {"x": jnp.full((3,), 100.0)}, state)
+    assert float(metrics["grad_norm"]) > 100
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1.0, warmup=10, total=100)
+    assert float(lr(jnp.asarray(0))) == 0.0
+    assert float(lr(jnp.asarray(10))) == pytest.approx(1.0, rel=1e-3)
+    assert float(lr(jnp.asarray(100))) == pytest.approx(0.0, abs=1e-3)
+
+
+def test_error_feedback_unbiased_accumulation():
+    """Sum of compressed grads + final residual == sum of true grads."""
+    rng = np.random.RandomState(0)
+    params = {"w": jnp.zeros((32,))}
+    res = init_residuals(params)
+    total_true = np.zeros(32)
+    total_sent = np.zeros(32)
+    key = jax.random.PRNGKey(0)
+    for i in range(20):
+        g = {"w": jnp.asarray(rng.randn(32), jnp.float32)}
+        key, sub = jax.random.split(key)
+        cg, res = compress_with_feedback(g, res, sub)
+        total_true += np.asarray(g["w"])
+        total_sent += np.asarray(cg["w"])
+    gap = np.abs(total_true - (total_sent + np.asarray(res["w"])))
+    assert gap.max() < 1e-4
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_compression_bounded_error(seed):
+    rng = np.random.RandomState(seed)
+    g = {"w": jnp.asarray(rng.randn(64), jnp.float32)}
+    res = init_residuals(g)
+    cg, new_res = compress_with_feedback(g, res, jax.random.PRNGKey(seed))
+    scale = float(jnp.abs(g["w"]).max()) / 127
+    assert float(jnp.abs(new_res["w"]).max()) <= scale + 1e-6
+
+
+def test_global_norm():
+    t = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+    assert float(global_norm(t)) == pytest.approx(5.0)

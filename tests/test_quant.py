@@ -1,0 +1,101 @@
+"""Quantization: granularities, PTQ calibration, BOPs accounting."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import conv2d_direct, fastconv2d, generate_sfc
+from repro.core import conv2d as c2d
+from repro.quant import (ConvWorkload, INT4_FREQ, INT8_FREQ, INT8_TENSOR,
+                         PTQLayer, bops_reduction, direct_conv_bops,
+                         fake_quant_activation, fake_quant_weight,
+                         fastconv_bops, mse_scale_search)
+from repro.quant.fake_quant import QuantConfig
+
+
+def _setup():
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(2, 14, 14, 16), jnp.float32)
+    w = jnp.asarray(rng.randn(3, 3, 16, 32) * 0.1, jnp.float32)
+    return x, w, generate_sfc(6, 6, 3)
+
+
+def test_frequency_beats_tensor_granularity():
+    """Paper §5/§6.3: frequency-wise scales -> lower error than tensor-wise."""
+    x, w, algo = _setup()
+    y_fp = conv2d_direct(x, w)
+
+    def err(qc):
+        y = fastconv2d(x, w, algo, elementwise_hook=qc.hook())
+        return float(jnp.linalg.norm(y - y_fp) / jnp.linalg.norm(y_fp))
+
+    assert err(INT8_FREQ) < err(INT8_TENSOR)
+    assert err(INT8_FREQ) < 0.03
+    assert err(INT4_FREQ) > err(INT8_FREQ)          # fewer bits, more error
+
+
+def test_bits_monotonic():
+    x, w, algo = _setup()
+    y_fp = conv2d_direct(x, w)
+    errs = []
+    for bits in (4, 6, 8):
+        qc = QuantConfig(bits, bits, "frequency", "channel+frequency")
+        y = fastconv2d(x, w, algo, elementwise_hook=qc.hook())
+        errs.append(float(jnp.linalg.norm(y - y_fp)))
+    assert errs[0] > errs[1] > errs[2]
+
+
+def test_fake_quant_roundtrip_levels():
+    x = jnp.linspace(-1, 1, 257)[None, :]
+    q = fake_quant_activation(x, 8, "tensor")
+    assert len(np.unique(np.asarray(q))) <= 255
+    q4 = fake_quant_activation(x, 4, "tensor")
+    assert len(np.unique(np.asarray(q4))) <= 15
+
+
+def test_mse_scale_search_improves():
+    rng = np.random.RandomState(0)
+    # heavy-tailed tensor: absmax scale is wasteful, search should win
+    x = jnp.asarray(rng.standard_t(df=2, size=(64, 64)), jnp.float32)
+    amax = jnp.abs(x).max() / 127
+    s = mse_scale_search(x, 8, (0, 1))
+
+    def qerr(scale):
+        q = jnp.clip(jnp.round(x / scale), -127, 127) * scale
+        return float(jnp.mean((q - x) ** 2))
+    assert qerr(s) <= qerr(amax) + 1e-12
+
+
+def test_ptq_layer_calibrate_then_deploy():
+    x, w, algo = _setup()
+    layer = PTQLayer(config=INT8_FREQ)
+    # calibration pass observes transform-domain tensors
+    fastconv2d(x, w, algo, elementwise_hook=layer.calibration_hook())
+    y_fp = conv2d_direct(x, w)
+    y_q = fastconv2d(x, w, algo, elementwise_hook=layer.quantized_hook())
+    rel = float(jnp.linalg.norm(y_q - y_fp) / jnp.linalg.norm(y_fp))
+    assert rel < 0.03
+    # deploys on unseen data too
+    x2 = jnp.asarray(np.random.RandomState(7).randn(2, 14, 14, 16),
+                     jnp.float32)
+    y2 = fastconv2d(x2, w, algo, elementwise_hook=layer.quantized_hook())
+    rel2 = float(jnp.linalg.norm(y2 - conv2d_direct(x2, w))
+                 / jnp.linalg.norm(conv2d_direct(x2, w)))
+    assert rel2 < 0.06
+
+
+def test_bops_sfc_beats_direct():
+    """Paper Fig. 4: SFC cuts BOPs 1.6-2.5x+ vs int8 direct convolution."""
+    wl = ConvWorkload(H=56, W=56, C_in=64, C_out=64, R=3)
+    for nmr in [(6, 6, 3), (6, 7, 3), (4, 4, 3)]:
+        r = bops_reduction(wl, generate_sfc(*nmr))
+        assert r > 1.6, (nmr, r)
+
+
+def test_bops_accounting_sane():
+    wl = ConvWorkload(H=28, W=28, C_in=32, C_out=32, R=3)
+    algo = generate_sfc(6, 6, 3)
+    assert fastconv_bops(wl, algo) < direct_conv_bops(wl)
+    # transform cost is included: tiny channel counts favor direct
+    wl_tiny = ConvWorkload(H=28, W=28, C_in=1, C_out=1, R=3)
+    assert (fastconv_bops(wl_tiny, algo) / direct_conv_bops(wl_tiny)
+            > fastconv_bops(wl, algo) / direct_conv_bops(wl))

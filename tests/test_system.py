@@ -1,0 +1,122 @@
+"""End-to-end behaviour of the full system (paper pipeline on a real model).
+
+Covers the deployment story: train a small CNN -> PTQ-calibrate SFC int8
+convs -> accuracy parity; and the LM side: train, checkpoint, serve with
+the production decode path.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.configs.resnet18 import SMOKE_CNN
+from repro.data import (ImagePipelineConfig, SyntheticImagePipeline,
+                        SyntheticTokenPipeline, TokenPipelineConfig)
+from repro.models import build
+from repro.models.cnn import cnn_loss, init_resnet, resnet_forward
+from repro.optim.optimizers import AdamW
+from repro.train import Trainer, TrainerConfig
+
+
+@pytest.fixture(scope="module")
+def trained_cnn():
+    """Train the smoke CNN on structured synthetic images until it beats
+    chance comfortably."""
+    cfg = SMOKE_CNN
+    pipe = SyntheticImagePipeline(ImagePipelineConfig(
+        image_size=cfg.image_size, n_classes=cfg.n_classes, global_batch=32,
+        seed=3))
+    params = init_resnet(jax.random.PRNGKey(0), cfg)
+    opt = AdamW(lr=3e-3, weight_decay=1e-4)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state, batch):
+        (loss, metrics), g = jax.value_and_grad(
+            lambda p: cnn_loss(p, cfg, batch), has_aux=True)(params)
+        params, state, _ = opt.apply(params, g, state)
+        return params, state, metrics
+
+    for i in range(160):
+        b = pipe.batch(i)
+        batch = {"images": jnp.asarray(b["images"]),
+                 "labels": jnp.asarray(b["labels"])}
+        params, state, metrics = step(params, state, batch)
+    return cfg, params, pipe
+
+
+def _accuracy(cfg, params, pipe, n_batches=4, start=1000):
+    correct = total = 0
+    for i in range(start, start + n_batches):
+        b = pipe.batch(i)
+        logits = resnet_forward(params, cfg, jnp.asarray(b["images"]))
+        correct += int((np.argmax(np.asarray(logits), -1)
+                        == b["labels"]).sum())
+        total += len(b["labels"])
+    return correct / total
+
+
+def test_sfc_int8_preserves_accuracy(trained_cnn):
+    """The paper's claim end-to-end: swapping direct fp32 convs for
+    quantized SFC convs keeps accuracy (±small delta)."""
+    cfg, params, pipe = trained_cnn
+    acc_fp = _accuracy(cfg, params, pipe)
+    assert acc_fp > 0.5, f"baseline failed to learn: {acc_fp}"
+    cfg_sfc8 = dataclasses.replace(cfg, conv_algo="sfc6_6", quant="int8")
+    acc_sfc8 = _accuracy(cfg_sfc8, params, pipe)
+    assert acc_sfc8 > acc_fp - 0.05, (acc_fp, acc_sfc8)
+
+
+def test_winograd_int8_degrades_more_than_sfc(trained_cnn):
+    """Relative claim of Table 2: Wino F(4x4) int8 degrades more than
+    SFC int8 (tensor-granularity quantization to stress the difference)."""
+    cfg, params, pipe = trained_cnn
+    sfc = dataclasses.replace(cfg, conv_algo="sfc6_6", quant="int6",
+                              act_granularity="tensor",
+                              weight_granularity="channel")
+    win = dataclasses.replace(cfg, conv_algo="wino4", quant="int6",
+                              act_granularity="tensor",
+                              weight_granularity="channel")
+    acc_sfc = _accuracy(sfc, params, pipe)
+    acc_win = _accuracy(win, params, pipe)
+    assert acc_sfc >= acc_win, (acc_sfc, acc_win)
+
+
+def test_lm_train_checkpoint_serve(tmp_path):
+    """LM end-to-end: train w/ checkpoints -> reload -> batched serving."""
+    cfg = get_smoke_config("qwen3-14b")
+    model = build(cfg)
+    pipe = SyntheticTokenPipeline(TokenPipelineConfig(
+        vocab_size=cfg.vocab_size, seq_len=32, global_batch=4))
+
+    def batches(i):
+        b = pipe.batch(i)
+        return {"tokens": jnp.asarray(b["tokens"]),
+                "labels": jnp.asarray(b["labels"])}
+
+    trainer = Trainer(model, AdamW(lr=5e-3), TrainerConfig(
+        total_steps=20, checkpoint_every=10, checkpoint_dir=str(tmp_path),
+        log_every=1000))
+    rep = trainer.run(batches, jax.random.PRNGKey(0))
+    assert rep.losses[-1] < rep.losses[0]
+
+    # reload into a fresh process-level state and serve greedily
+    state, step = trainer.init_or_restore(jax.random.PRNGKey(0))
+    assert step == 20
+    B, prompt_len, gen_len = 4, 8, 8
+    prompt = batches(99)["tokens"][:, :prompt_len]
+    cache = model.init_cache(state.params, B, prompt_len + gen_len)
+    tok = prompt[:, 0:1]
+    generated = []
+    for t in range(prompt_len + gen_len - 1):
+        logits, cache = model.decode_step(
+            state.params, cache, tok, jnp.full((B,), t, jnp.int32))
+        nxt = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        tok = prompt[:, t + 1:t + 2] if t + 1 < prompt_len else nxt
+        generated.append(tok)
+    out = jnp.concatenate(generated, axis=1)
+    assert out.shape == (B, prompt_len + gen_len - 1)
+    assert bool(jnp.all((out >= 0) & (out < cfg.padded_vocab)))
