@@ -17,7 +17,8 @@ import numpy as np
 from repro.configs.resnet18 import CNNConfig
 from repro.core.generator import generate_sfc, generate_winograd
 from repro.data import ImagePipelineConfig, SyntheticImagePipeline
-from repro.models.cnn import cnn_loss, conv_algo, init_resnet, resnet_forward
+from repro.api import get_algorithm
+from repro.models.cnn import cnn_loss, init_resnet, resnet_forward
 from repro.optim.optimizers import AdamW
 from repro.quant import ConvWorkload, direct_conv_bops, fastconv_bops
 
@@ -64,7 +65,7 @@ def _bops(algo_name, bits):
         if algo_name == "direct":
             total += direct_conv_bops(wl)
         else:
-            total += fastconv_bops(wl, conv_algo(algo_name))
+            total += fastconv_bops(wl, get_algorithm(algo_name))
     return total
 
 

@@ -11,10 +11,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import ConvSpec, plan
 from repro.configs.resnet18 import SMOKE_CNN
-from repro.core import conv2d_direct, fastconv2d
 from repro.data import ImagePipelineConfig, SyntheticImagePipeline
-from repro.models.cnn import conv_algo, init_resnet
+from repro.models.cnn import init_resnet
 from repro.quant.fake_quant import QuantConfig
 
 
@@ -38,7 +38,9 @@ def run(log=print):
         cin = w.shape[2]
         feat = jnp.asarray(np.maximum(
             rng.randn(4, 14, 14, cin), 0), jnp.float32)
-        ref = conv2d_direct(feat, w)
+        spec = ConvSpec.for_conv2d(feat.shape, w.shape)
+        direct_plan = plan(spec, algo="direct")
+        ref = direct_plan.apply(feat, w)
 
         def mse(algo_name, qc):
             if algo_name == "direct":
@@ -46,10 +48,10 @@ def run(log=print):
                                                     fake_quant_weight)
                 xq = fake_quant_activation(feat, 8, "tensor")
                 wq = fake_quant_weight(w, 8, "channel")
-                y = conv2d_direct(xq, wq)
+                y = direct_plan.apply(xq, wq)
             else:
-                y = fastconv2d(feat, w, conv_algo(algo_name),
-                               elementwise_hook=qc.hook())
+                y = plan(spec, algo=algo_name).apply(
+                    feat, w, elementwise_hook=qc.hook())
             return float(jnp.mean((y - ref) ** 2))
 
         qc = QuantConfig(8, 8, "frequency", "channel+frequency")

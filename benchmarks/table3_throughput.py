@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import conv2d_direct, fastconv2d, generate_sfc
+from repro.api import ConvSpec, get_algorithm, plan
 from repro.quant import ConvWorkload, bops_reduction, INT8_FREQ
 
 # VGG-16 conv layers (HxW, Cin, Cout) at 224 input — per paper §6.2
@@ -34,7 +34,7 @@ def _time(fn, *args, reps=3):
 
 
 def run(log=print):
-    algo = generate_sfc(6, 7, 3)
+    algo = get_algorithm("sfc6_7")
     total_direct_bops = total_sfc_bops = 0.0
     for hw, cin, cout in VGG_LAYERS:
         wl = ConvWorkload(hw, hw, cin, cout, 3)
@@ -47,11 +47,13 @@ def run(log=print):
     rng = np.random.RandomState(0)
     x = jnp.asarray(rng.randn(1, 56, 56, 64), jnp.float32)
     w = jnp.asarray(rng.randn(3, 3, 64, 64) * 0.05, jnp.float32)
-    direct = jax.jit(lambda x, w: conv2d_direct(x, w))
-    sfc_fp = jax.jit(lambda x, w: fastconv2d(x, w, algo))
+    spec = ConvSpec.for_conv2d(x.shape, w.shape)
+    p_direct = plan(spec, algo="direct")
+    p_sfc = plan(spec, algo="sfc6_7")
+    direct = jax.jit(lambda x, w: p_direct.apply(x, w))
+    sfc_fp = jax.jit(lambda x, w: p_sfc.apply(x, w))
     hook = INT8_FREQ.hook()
-    sfc_q = jax.jit(lambda x, w: fastconv2d(x, w, algo,
-                                            elementwise_hook=hook))
+    sfc_q = jax.jit(lambda x, w: p_sfc.apply(x, w, elementwise_hook=hook))
     td = _time(direct, x, w)
     tf = _time(sfc_fp, x, w)
     tq = _time(sfc_q, x, w)

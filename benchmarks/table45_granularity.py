@@ -11,7 +11,7 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import conv2d_direct, fastconv2d, generate_sfc, generate_winograd
+from repro.api import ConvSpec, plan
 from repro.quant.fake_quant import QuantConfig
 
 
@@ -28,21 +28,20 @@ def run(log=print):
     rng = np.random.RandomState(0)
     x = _feature_batch(rng)
     w = jnp.asarray(rng.randn(3, 3, 32, 32) * 0.1, jnp.float32)
-    ref = conv2d_direct(x, w)
+    spec = ConvSpec.for_conv2d(x.shape, w.shape)
+    ref = plan(spec, algo="direct").apply(x, w)
 
-    def rel_err(algo, qc):
-        y = fastconv2d(x, w, algo, elementwise_hook=qc.hook())
+    def rel_err(name, qc):
+        y = plan(spec, algo=name).apply(x, w, elementwise_hook=qc.hook())
         return float(jnp.linalg.norm(y - ref) / jnp.linalg.norm(ref))
 
-    sfc = generate_sfc(6, 7, 3)
-    wino = generate_winograd(4, 3)
     log("algo,bits,act_gran,w_gran,rel_err")
     table4 = {}
-    for algo_name, algo in [("sfc6_7", sfc), ("wino4", wino)]:
+    for algo_name in ("sfc6_7", "wino4"):
         for act_g, w_g in [("tensor", "channel"), ("frequency", "channel"),
                            ("frequency", "frequency"),
                            ("frequency", "channel+frequency")]:
-            e = rel_err(algo, QuantConfig(8, 8, act_g, w_g))
+            e = rel_err(algo_name, QuantConfig(8, 8, act_g, w_g))
             table4[(algo_name, act_g, w_g)] = e
             log(f"{algo_name},8,{act_g},{w_g},{e:.4f}")
     table5 = {}
@@ -50,7 +49,7 @@ def run(log=print):
         for act_g, w_g in [("tensor", "channel"),
                            ("frequency", "channel"),
                            ("frequency", "channel+frequency")]:
-            e = rel_err(sfc, QuantConfig(bits, bits, act_g, w_g))
+            e = rel_err("sfc6_7", QuantConfig(bits, bits, act_g, w_g))
             table5[(bits, act_g, w_g)] = e
             log(f"sfc6_7,{bits},{act_g},{w_g},{e:.4f}")
     # paper's qualitative claims as assertions

@@ -3,9 +3,10 @@
     PYTHONPATH=src python examples/mamba_sfc_conv.py
 
 The only convolution in the assigned LM pool is Mamba2/Zamba2's causal
-depthwise conv1d (R=4).  This example shows the SFC-6(6,4) fast path is
-numerically identical, counts its multiplication savings, and benchmarks
-the standalone op.
+depthwise conv1d (R=4).  This example runs it through the unified
+``repro.api`` planner — auto-selection picks the SFC-6(6,4) fast path —
+shows it is numerically identical to the direct path, counts the
+multiplication savings, and benchmarks the standalone op.
 """
 import time
 
@@ -13,27 +14,30 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (conv1d_depthwise_causal_direct,
-                        fastconv1d_depthwise_causal, generate_sfc)
+from repro.api import ConvSpec, plan
 from repro.configs import get_smoke_config
 from repro.models import build
 
 
 def main():
-    algo = generate_sfc(6, 6, 4)
-    print(f"algorithm {algo.name}: {algo.t} mults per {algo.M} outputs "
-          f"(direct: {algo.M * algo.R}) -> "
-          f"{algo.M*algo.R/algo.t:.2f}x multiplication reduction")
-
     rng = np.random.RandomState(0)
     x = jnp.asarray(rng.randn(8, 2048, 256), jnp.float32)
     w = jnp.asarray(rng.randn(4, 256) * 0.3, jnp.float32)
-    y_fast = fastconv1d_depthwise_causal(x, w, algo)
-    y_ref = conv1d_depthwise_causal_direct(x, w)
+
+    spec = ConvSpec.for_conv1d_depthwise(x.shape, w.shape)
+    p_fast = plan(spec, algo="auto")       # resolves to SFC-6(6,4)
+    p_ref = plan(spec, algo="direct")
+    algo = p_fast.algorithm
+    print(f"planner picked {p_fast.algo_name} ({algo.name}): {algo.t} mults "
+          f"per {algo.M} outputs (direct: {algo.M * algo.R}) -> "
+          f"{algo.M*algo.R/algo.t:.2f}x multiplication reduction")
+
+    y_fast = p_fast.apply(x, w)
+    y_ref = p_ref.apply(x, w)
     print(f"max abs err vs direct: {float(jnp.abs(y_fast-y_ref).max()):.2e}")
 
-    fast = jax.jit(lambda x, w: fastconv1d_depthwise_causal(x, w, algo))
-    ref = jax.jit(conv1d_depthwise_causal_direct)
+    fast = jax.jit(lambda x, w: p_fast.apply(x, w))
+    ref = jax.jit(lambda x, w: p_ref.apply(x, w))
     for name, fn in [("direct", ref), ("sfc", fast)]:
         fn(x, w).block_until_ready()
         t0 = time.perf_counter()

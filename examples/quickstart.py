@@ -1,17 +1,19 @@
-"""Quickstart: SFC fast convolution as a drop-in, with int8 quantization.
+"""Quickstart: one convolution API — ConvSpec -> plan -> apply.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Shows the paper's core loop: generate an SFC algorithm, run a convolution
-through the three-stage transform flow, quantize the transform domain to
-int8 with frequency-wise scales, and compare accuracy + multiplication
-counts against direct convolution and Winograd.
+Shows the paper's deployment story through the unified ``repro.api``
+front-end: describe the convolution once (``ConvSpec``), let the planner
+pick the algorithm with the BOPs cost model (or name one from the public
+registry), pre-transform + int8-quantize the weights offline
+(``ConvPlan.prepare_weights``), and execute the same plan on the
+``reference`` (pure jnp) or ``pallas`` (TPU kernel) backend.
 """
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (conv2d_direct, fastconv2d, generate_sfc,
-                        generate_winograd)
+from repro.api import ConvSpec, list_algorithms, plan
+from repro.core import conv2d as c2d
 from repro.quant import INT8_FREQ, ConvWorkload, bops_reduction
 
 
@@ -20,15 +22,22 @@ def main():
     x = jnp.asarray(rng.randn(1, 56, 56, 32), jnp.float32)   # NHWC
     w = jnp.asarray(rng.randn(3, 3, 32, 64) * 0.1, jnp.float32)
 
-    y_ref = conv2d_direct(x, w)
+    # --- 1. describe the convolution once --------------------------------
+    spec = ConvSpec.for_conv2d(x.shape, w.shape)
+    spec_q = ConvSpec.for_conv2d(x.shape, w.shape, quant=INT8_FREQ)
+
+    # --- 2. plan: registry names or cost-model auto-selection ------------
+    p_direct = plan(spec, algo="direct")
+    y_ref = p_direct.apply(x, w)
 
     print("algorithm            mults/tile  complexity  rel.err(fp32)  "
           "rel.err(int8-freq)")
-    for algo in [generate_sfc(6, 6, 3), generate_sfc(6, 7, 3),
-                 generate_sfc(4, 4, 3), generate_winograd(4, 3),
-                 generate_winograd(2, 3)]:
-        y_fp = fastconv2d(x, w, algo)
-        y_q = fastconv2d(x, w, algo, elementwise_hook=INT8_FREQ.hook())
+    for name in list_algorithms(taps=3, include_direct=False):
+        p = plan(spec, algo=name)
+        pq = plan(spec_q, algo=name)
+        algo = p.algorithm
+        y_fp = p.apply(x, w)
+        y_q = pq.apply(x, w, elementwise_hook=INT8_FREQ.hook())
         err_fp = float(jnp.linalg.norm(y_fp - y_ref)
                        / jnp.linalg.norm(y_ref))
         err_q = float(jnp.linalg.norm(y_q - y_ref) / jnp.linalg.norm(y_ref))
@@ -36,9 +45,37 @@ def main():
               f"{100*algo.arithmetic_complexity_2d:9.2f}%  "
               f"{err_fp:13.2e}  {err_q:12.4f}")
 
+    auto = plan(spec_q, algo="auto")
+    print(f"\nauto-selected (int8 BOPs cost model): {auto.algo_name} "
+          f"(~{auto.cost/1e6:.0f} MBOPs; direct would be "
+          f"~{plan(spec_q, algo='direct').cost/1e6:.0f} MBOPs)")
+    # strided / pointwise shapes degrade to direct in the planner — no
+    # caller-side branching:
+    print("stride-2 resolves to:",
+          plan(ConvSpec.for_conv2d(x.shape, w.shape, stride=2)).algo_name)
+
+    # --- 3. offline weight prep + static-int8 deployment -----------------
+    # calibrate frequency-wise activation scales on one batch (see
+    # repro.quant.ptq.PTQLayer for the full running-stats recipe)
+    tx, _ = c2d.transform_input_2d(x, auto.algorithm)
+    act_scale = jnp.abs(tx).max(axis=(0, 1, 2, 5)) / 127 + 1e-9
+    prepared = auto.prepare_weights(w, act_scale=act_scale)
+    y_int8 = auto.apply(x, prepared)        # int8 ints, static scales
+    err = float(jnp.linalg.norm(y_int8 - y_ref) / jnp.linalg.norm(y_ref))
+    print(f"static-int8 deployment path ({auto.algo_name}): "
+          f"rel.err {err:.4f}")
+
+    # same plan, Pallas kernel backend (interpret mode on CPU)
+    p_pallas = plan(spec_q, backend="pallas", algo=auto.algo_name)
+    y_pal = p_pallas.apply(x, p_pallas.prepare_weights(
+        w, act_scale=act_scale))
+    print(f"pallas backend agrees with reference to "
+          f"{float(jnp.abs(y_pal - y_int8).max()):.1e}")
+
     wl = ConvWorkload(56, 56, 32, 64, 3)
     print(f"\nBOPs reduction (int8, 56x56x32->64):")
-    for algo in [generate_sfc(6, 7, 3), generate_sfc(6, 6, 3)]:
+    for name in ("sfc6_7", "sfc6_6"):
+        algo = plan(spec_q, algo=name).algorithm
         print(f"  {algo.name}: {bops_reduction(wl, algo):.2f}x vs "
               "direct int8")
     print("\nKey claim: SFC-6 reaches Winograd-class multiplication "

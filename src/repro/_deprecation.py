@@ -1,0 +1,16 @@
+"""Shared warn-and-forward helper for the legacy conv entry points."""
+from __future__ import annotations
+
+import functools
+import warnings
+
+
+def deprecated(fn, owner: str, replacement: str):
+    """Wrap ``fn`` so calls warn that ``owner.<name>`` moved to ``replacement``."""
+    @functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        warnings.warn(
+            f"{owner}.{fn.__name__} is deprecated; use {replacement}",
+            DeprecationWarning, stacklevel=2)
+        return fn(*args, **kwargs)
+    return wrapper

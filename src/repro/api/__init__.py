@@ -1,0 +1,28 @@
+"""``repro.api`` — the one way to run a convolution.
+
+    spec = ConvSpec.for_conv2d(x.shape, w.shape, quant=INT8_FREQ)
+    p = plan(spec, backend="pallas", algo="auto")
+    prepared = p.prepare_weights(w, act_scale=calibrated_scale)  # offline
+    y = p.apply(x, prepared)                                     # online
+
+The planner resolves the algorithm (registry name or BOPs-cost-model
+auto-selection), degrades to direct convolution where fast algorithms do
+not apply, and dispatches execution to the ``reference`` (pure jnp) or
+``pallas`` (TPU kernels) backend behind one signature.  This module is the
+extension seam for future backends — register new ones with
+``register_backend`` and new algorithms with ``register_algorithm``.
+"""
+from repro.api.backends import (get_backend, list_backends,
+                                register_backend)
+from repro.api.plan import ConvPlan, PreparedWeights
+from repro.api.planner import estimate_cost, plan, select_algorithm
+from repro.api.registry import (get_algorithm, list_algorithms,
+                                register_algorithm)
+from repro.api.spec import ConvSpec
+
+__all__ = [
+    "ConvSpec", "ConvPlan", "PreparedWeights", "plan",
+    "select_algorithm", "estimate_cost",
+    "register_algorithm", "get_algorithm", "list_algorithms",
+    "register_backend", "get_backend", "list_backends",
+]

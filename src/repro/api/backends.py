@@ -1,0 +1,146 @@
+"""Execution backends behind ``ConvPlan.apply``.
+
+Two backends ship today, both consuming the same ``PreparedWeights``:
+
+  * ``reference`` — pure jnp, built from the ``repro.core.conv2d``
+    primitives.  Supports elementwise hooks (dynamic fake quantization,
+    PTQ calibration observers) and is the numerical oracle.
+  * ``pallas``    — the ``repro.kernels`` TPU kernels (interpret mode on
+    CPU).  Static precision only: fp, or int8 with PTQ-calibrated scales
+    baked into the prepared weights.
+
+Both degrade identically: the direct path (stride != 1, pointwise, taps
+mismatch) runs XLA's native convolution — already optimal there, so the
+Pallas backend deliberately reuses it rather than shipping a worse kernel.
+The registry is open so future backends (GPU pallas, sharded, batched
+serving) plug in via :func:`register_backend` without touching call sites.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import conv2d as c2d
+import repro.quant.fake_quant as fq
+
+
+def _add_bias(y: jnp.ndarray, bias) -> jnp.ndarray:
+    return y if bias is None else y + bias
+
+
+def _check_hook_supported(plan, elementwise_hook, prep) -> None:
+    if elementwise_hook is None:
+        return
+    if plan.algorithm is None:
+        raise ValueError(
+            "elementwise_hook requires the fast path; this plan resolved "
+            f"to direct ({plan.spec})")
+    if prep.quantized:
+        raise ValueError("elementwise_hook cannot be combined with "
+                         "static-int8 prepared weights")
+
+
+def _direct(plan, x, prep, bias) -> jnp.ndarray:
+    spec = plan.spec
+    if spec.rank == 1:
+        return _add_bias(
+            c2d.conv1d_depthwise_causal_direct(x, prep.w), bias)
+    y = jax.lax.conv_general_dilated(
+        x, prep.w.astype(x.dtype), (spec.stride, spec.stride), spec.padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return _add_bias(y, bias)
+
+
+class ReferenceBackend:
+    """Portable jnp path (the oracle); full hook support."""
+
+    name = "reference"
+
+    def apply(self, plan, x, prep, *, bias=None, elementwise_hook=None):
+        _check_hook_supported(plan, elementwise_hook, prep)
+        if plan.algorithm is None:
+            return _direct(plan, x, prep, bias)
+        algo = plan.algorithm
+        if plan.spec.rank == 1:
+            if elementwise_hook is not None:
+                raise NotImplementedError(
+                    "elementwise_hook is not supported on the rank-1 "
+                    "depthwise fast path")
+            return _add_bias(c2d.fastconv1d_depthwise_causal_pretransformed(
+                x, prep.tw, algo), bias)
+        tx, geom = c2d.transform_input_2d(x, algo, plan.spec.padding)
+        tw = prep.tw
+        if prep.quantized:
+            # static-int8 simulation with the same scales/integer grid as
+            # the Pallas datapath: quantize tx with the calibrated
+            # frequency scales, use the offline-quantized weights.
+            qc = plan.spec.quant
+            s_act = prep.act_scale[None, None, None, :, :, None]
+            tx = fq.dequantize(
+                fq.quantize(tx, s_act, qc.bits_act), s_act)
+            tw = (prep.wq.astype(jnp.float32).reshape(tw.shape)
+                  * prep.w_scale[:, :, None, :]).astype(tx.dtype)
+        elif elementwise_hook is not None:
+            tx, tw = elementwise_hook(tx, tw)
+        ty = c2d.transform_domain_matmul(tx, tw)
+        return _add_bias(c2d.inverse_transform_2d(ty, algo, geom), bias)
+
+
+class PallasBackend:
+    """``repro.kernels`` datapath; static precision, no hooks."""
+
+    name = "pallas"
+
+    def apply(self, plan, x, prep, *, bias=None, elementwise_hook=None):
+        if elementwise_hook is not None:
+            raise ValueError(
+                "the pallas backend takes no elementwise_hook; bake "
+                "quantization into the plan (spec.quant + calibrated "
+                "prepare_weights) or use backend='reference'")
+        if plan.algorithm is None or plan.spec.rank == 1:
+            # no Pallas kernels for these; the reference impls are optimal
+            # (XLA native conv) or trivially bandwidth-bound.
+            return _REFERENCE.apply(plan, x, prep, bias=bias)
+        from repro.kernels import ops
+        algo = plan.algorithm
+        if prep.quantized:
+            y = ops.quantized_fastconv2d(
+                x, prep.wq, prep.act_scale, prep.w_scale, algo,
+                padding=plan.spec.padding, interpret=plan.interpret)
+            return _add_bias(y, bias)
+        from repro.kernels.sfc_inverse import sfc_inverse
+        from repro.kernels.sfc_transform import sfc_transform
+        bt = jnp.asarray(algo.bt(), x.dtype)
+        at = jnp.asarray(algo.at(), x.dtype)
+        tiles, geom = ops.extract_tiles(x, algo, plan.spec.padding)
+        tx = sfc_transform(tiles, bt, interpret=plan.interpret)
+        ty = jnp.einsum("ntuc,tuco->ntuo", tx, prep.tw.astype(x.dtype))
+        y_tiles = sfc_inverse(ty, at, interpret=plan.interpret)
+        return _add_bias(ops.untile(y_tiles, algo, geom), bias)
+
+
+_REFERENCE = ReferenceBackend()
+_BACKENDS: Dict[str, object] = {
+    "reference": _REFERENCE,
+    "pallas": PallasBackend(),
+}
+
+
+def register_backend(name: str, backend, overwrite: bool = False) -> None:
+    if name in _BACKENDS and not overwrite:
+        raise ValueError(f"backend {name!r} already registered")
+    _BACKENDS[name] = backend
+
+
+def get_backend(name: str):
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise KeyError(f"unknown backend {name!r}; "
+                       f"registered: {sorted(_BACKENDS)}") from None
+
+
+def list_backends():
+    return tuple(sorted(_BACKENDS))

@@ -1,0 +1,174 @@
+"""``ConvPlan`` — a resolved (spec, algorithm, backend) ready to execute.
+
+A plan is produced by ``repro.api.plan()`` and owns the two halves of the
+deployment story:
+
+  * :meth:`ConvPlan.prepare_weights` — the offline half: transform weights
+    into the algorithm's domain once, optionally quantizing them to int8
+    with PTQ-calibrated static scales (paper §5-6: weights are stored in
+    the transform domain, avoiding double quantization).  Prepared weights
+    are memoized per plan, keyed on the concrete weight array.
+  * :meth:`ConvPlan.apply` — the online half: one signature for every
+    backend and precision.  ``apply(x, w)`` accepts either raw weights
+    (prepared on the fly) or a :class:`PreparedWeights`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.spec import ConvSpec
+from repro.core.conv2d import transform_weights_2d
+from repro.core.generator import BilinearAlgorithm
+import repro.quant.fake_quant as fq
+
+# FIFO bound on prepared weights retained per plan.  Entries pin the raw
+# weights plus their ~(t/R)^2-times-larger transform-domain copies, so this
+# trades memory for re-prepare cost; 16 covers every same-spec layer of the
+# paper's evaluation CNNs.
+_PREP_CACHE_MAX = 16
+
+
+def _normalize_w_scale(w_scale: jnp.ndarray, t: int, cout: int
+                       ) -> jnp.ndarray:
+    """Accept any weight-granularity scale shape; return (t, t, Cout)."""
+    s = jnp.asarray(w_scale, jnp.float32)
+    if s.ndim == 4:                       # keepdims (t|1, t|1, 1, Cout|1)
+        return jnp.broadcast_to(s, (t, t, 1, cout))[:, :, 0, :]
+    if s.shape == (t, t, cout):
+        return s
+    if s.shape == (t, t):                 # frequency-wise
+        return jnp.broadcast_to(s[:, :, None], (t, t, cout))
+    if s.ndim <= 1:                       # scalar or per-channel
+        return jnp.broadcast_to(s, (t, t, cout))
+    raise ValueError(f"cannot interpret w_scale shape {s.shape} "
+                     f"for t={t}, Cout={cout}")
+
+
+@dataclasses.dataclass(frozen=True)
+class PreparedWeights:
+    """Offline-processed weights for one plan.
+
+    ``tw`` is the transform-domain fp tensor ((t, t, Cin, Cout) for rank 2,
+    (t, C) for rank 1 depthwise); for int8 plans ``wq``/``w_scale``/
+    ``act_scale`` additionally hold the offline-quantized weights and the
+    static scales both backends consume.
+    """
+
+    w: Any                                   # raw weights as passed in
+    tw: Optional[jnp.ndarray] = None
+    wq: Optional[jnp.ndarray] = None         # (t^2, Cin, Cout) int8
+    w_scale: Optional[jnp.ndarray] = None    # (t, t, Cout)
+    act_scale: Optional[jnp.ndarray] = None  # (t, t)
+
+    @property
+    def quantized(self) -> bool:
+        return self.wq is not None
+
+
+@dataclasses.dataclass(eq=False)
+class ConvPlan:
+    """Executable plan: call :meth:`apply`; inspect ``algorithm``/``cost``."""
+
+    spec: ConvSpec
+    backend: str
+    algo_name: str                            # registry name or 'direct'
+    algorithm: Optional[BilinearAlgorithm]    # None = direct path
+    interpret: bool = True                    # Pallas interpret mode (CPU)
+    cost: Optional[float] = None              # planner's BOPs estimate
+    _prep_cache: Dict[tuple, Any] = dataclasses.field(
+        default_factory=dict, repr=False)
+    _prep_lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False)
+
+    @property
+    def path(self) -> str:
+        return "direct" if self.algorithm is None else "fast"
+
+    # ------------------------------------------------------------------
+    # offline: weight preparation
+    # ------------------------------------------------------------------
+    def prepare_weights(self, w: jnp.ndarray, *,
+                        act_scale: Optional[jnp.ndarray] = None,
+                        w_scale: Optional[jnp.ndarray] = None
+                        ) -> PreparedWeights:
+        """Pre-transform (and for int8 plans, pre-quantize) weights.
+
+        ``act_scale`` (t, t) comes from PTQ calibration
+        (``PTQLayer.static_scales``); it is required for the static-int8
+        execution path.  ``w_scale`` defaults to absmax scales at the
+        spec's weight granularity, broadcast to (t, t, Cout).
+        Results are cached per concrete weight array.
+        """
+        operands = (w, act_scale, w_scale)
+        cacheable = not any(isinstance(o, jax.core.Tracer) for o in operands)
+        key = tuple(id(o) for o in operands) if cacheable else None
+        if key is not None:
+            with self._prep_lock:
+                entry = self._prep_cache.get(key)
+            if entry is not None and \
+                    all(a is b for a, b in zip(entry[0], operands)):
+                return entry[1]
+        prep = self._prepare_uncached(w, act_scale, w_scale)
+        if key is not None:
+            with self._prep_lock:
+                while len(self._prep_cache) >= _PREP_CACHE_MAX:
+                    self._prep_cache.pop(next(iter(self._prep_cache)))
+                # the cache entry keeps the operands alive: ids stay valid
+                self._prep_cache[key] = (operands, prep)
+        return prep
+
+    def _prepare_uncached(self, w, act_scale, w_scale) -> PreparedWeights:
+        if self.algorithm is None:
+            return PreparedWeights(w=w)
+        algo = self.algorithm
+        if self.spec.rank == 1:
+            if self.spec.quant.enabled:
+                raise NotImplementedError(
+                    "quantized rank-1 depthwise convolution is not "
+                    "implemented; use quant=FP32")
+            g = jnp.asarray(algo.g(), dtype=w.dtype)
+            return PreparedWeights(w=w, tw=jnp.einsum("tr,rc->tc", g, w))
+        tw = transform_weights_2d(w, algo)
+        if not self.spec.quant.enabled or act_scale is None:
+            return PreparedWeights(w=w, tw=tw)
+        t = algo.t
+        cout = tw.shape[-1]
+        if w_scale is None:
+            axes = fq.weight_reduce_axes(
+                tw.ndim, self.spec.quant.weight_granularity)
+            amax = jnp.max(jnp.abs(tw), axis=tuple(axes), keepdims=True)
+            w_scale = amax / fq.qmax_for_bits(self.spec.quant.bits_weight) \
+                + 1e-12
+        w_scale = _normalize_w_scale(w_scale, t, cout)
+        wq = fq.quantize_transformed_weights(
+            tw, w_scale, self.spec.quant.bits_weight)
+        act_scale = jnp.asarray(act_scale, jnp.float32).reshape(t, t)
+        return PreparedWeights(w=w, tw=tw, wq=wq, w_scale=w_scale,
+                               act_scale=act_scale)
+
+    # ------------------------------------------------------------------
+    # online: execution
+    # ------------------------------------------------------------------
+    def apply(self, x: jnp.ndarray, w, *,
+              bias: Optional[jnp.ndarray] = None,
+              elementwise_hook: Optional[Callable] = None) -> jnp.ndarray:
+        """Run the convolution.  ``w`` is raw weights or PreparedWeights.
+
+        ``elementwise_hook(tx, tw) -> (tx, tw)`` injects transform-domain
+        processing (fake quantization, calibration observers) on the
+        reference backend's fast path; static-int8 plans and the Pallas
+        backend do not take hooks — quantization is baked into the plan.
+        """
+        from repro.api import backends  # late: avoids import cycle
+        prep = w if isinstance(w, PreparedWeights) else \
+            self.prepare_weights(w)
+        return backends.get_backend(self.backend).apply(
+            self, x, prep, bias=bias, elementwise_hook=elementwise_hook)
+
+    def __call__(self, x, w, **kwargs):
+        return self.apply(x, w, **kwargs)

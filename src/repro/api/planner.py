@@ -1,0 +1,107 @@
+"""The planner: ``plan(spec, *, backend, algo="auto") -> ConvPlan``.
+
+Algorithm resolution happens in one place, for every call site:
+
+  * shapes a fast algorithm cannot serve (stride != 1, pointwise 1x1,
+    kernel-tap mismatch with the requested algorithm) degrade gracefully
+    to the direct path — callers never re-implement that branch;
+  * ``algo="auto"`` ranks the registered candidates with the paper's BOPs
+    cost model (``repro.quant.bops``: transform adds + element-wise MACs
+    + inverse adds, tile geometry included via ceil(H/M) tiling) against
+    the direct baseline, at the spec's precision.  Under int8-or-lower
+    transform-domain quantization, Winograd candidates are excluded: their
+    transform dynamic range makes low-precision execution inaccurate
+    (paper Fig. 5; Fernandez-Marques et al., 2020), so selecting them on
+    BOPs alone would win the cost model and lose the model accuracy.
+
+Plans are memoized on (spec, backend, algo, interpret) — specs are frozen
+dataclasses, so repeated call sites share one plan and its prepared-weight
+cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+from repro.api import registry
+from repro.api.plan import ConvPlan
+from repro.api.spec import ConvSpec
+from repro.quant.bops import ConvWorkload, direct_conv_bops, fastconv_bops
+
+_FP_SURROGATE_BITS = 16   # cost-model bit width for unquantized specs
+
+
+def _spec_bits(spec: ConvSpec):
+    if spec.quant.enabled:
+        return spec.quant.bits_act, spec.quant.bits_weight
+    return _FP_SURROGATE_BITS, _FP_SURROGATE_BITS
+
+
+def _workload(spec: ConvSpec) -> Optional[ConvWorkload]:
+    if spec.rank != 2 or spec.in_channels is None \
+            or spec.out_channels is None or spec.spatial is None:
+        return None
+    ba, bw = _spec_bits(spec)
+    return ConvWorkload(spec.spatial[0], spec.spatial[1], spec.in_channels,
+                        spec.out_channels, spec.kernel_size,
+                        bits_act=ba, bits_weight=bw)
+
+
+def estimate_cost(spec: ConvSpec, algo_name: str) -> float:
+    """BOPs (or a dimensionless surrogate) of running ``spec`` one way."""
+    algo = registry.get_algorithm(algo_name)
+    if spec.rank == 1:
+        # depthwise: no channel contraction — cost is multiplications per
+        # output per channel (paper's 1-D counting): R direct, t/M fast.
+        return float(spec.kernel_size if algo is None else algo.t / algo.M)
+    wl = _workload(spec)
+    if wl is not None:
+        return direct_conv_bops(wl) if algo is None \
+            else fastconv_bops(wl, algo)
+    # no shape hints: rank by arithmetic complexity (direct == 1.0)
+    return 1.0 if algo is None else algo.arithmetic_complexity_2d
+
+
+def select_algorithm(spec: ConvSpec) -> str:
+    """Cheapest eligible algorithm for the spec (may be 'direct')."""
+    if not spec.fast_eligible:
+        return registry.DIRECT
+    candidates = registry.entries(taps=spec.kernel_size)
+    ba, bw = _spec_bits(spec)
+    if spec.quant.enabled and min(ba, bw) <= 8:
+        candidates = [e for e in candidates if e.kind != "winograd"]
+    best_name = registry.DIRECT
+    best_cost = estimate_cost(spec, registry.DIRECT)
+    for entry in candidates:
+        cost = estimate_cost(spec, entry.name)
+        if cost < best_cost:
+            best_name, best_cost = entry.name, cost
+    return best_name
+
+
+@functools.lru_cache(maxsize=512)
+def _plan_cached(spec: ConvSpec, backend: str, algo: str,
+                 interpret: bool) -> ConvPlan:
+    from repro.api import backends
+    backends.get_backend(backend)          # fail fast on unknown backend
+    if algo not in ("auto", registry.DIRECT):
+        # raises on unknown names even when the spec degrades to direct —
+        # a typo'd config must not silently train on the direct path
+        resolved = registry.get_algorithm(algo)
+    if not spec.fast_eligible:
+        name = registry.DIRECT
+    elif algo == "auto":
+        name = select_algorithm(spec)
+    elif algo == registry.DIRECT:
+        name = registry.DIRECT
+    else:
+        name = algo if resolved.R == spec.kernel_size else registry.DIRECT
+    return ConvPlan(spec=spec, backend=backend, algo_name=name,
+                    algorithm=registry.get_algorithm(name),
+                    interpret=interpret, cost=estimate_cost(spec, name))
+
+
+def plan(spec: ConvSpec, *, backend: str = "reference", algo: str = "auto",
+         interpret: bool = True) -> ConvPlan:
+    """Resolve a :class:`ConvSpec` into an executable :class:`ConvPlan`."""
+    return _plan_cached(spec, backend, algo, interpret)

@@ -1,0 +1,91 @@
+"""``ConvSpec`` — the frozen, hashable description of one convolution.
+
+A spec captures everything the planner needs to pick an algorithm and an
+execution path: spatial rank, kernel taps, stride, padding, dense vs
+depthwise, dtype, and the quantization policy.  Channel counts and spatial
+extents are optional *cost-model hints* — planning works without them but
+auto-selection degrades to arithmetic-complexity ranking.
+
+Specs are frozen dataclasses so ``plan()`` can memoize on them directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.quant.fake_quant import FP32, QuantConfig
+
+PADDINGS_2D = ("SAME", "VALID")
+PADDING_CAUSAL = "CAUSAL"
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    """One convolution workload, independent of backend and algorithm."""
+
+    rank: int = 2                    # spatial rank: 1 (sequence) | 2 (image)
+    kernel_size: int = 3             # taps R per spatial dim
+    stride: int = 1
+    padding: str = "SAME"            # SAME | VALID | CAUSAL (rank-1 only)
+    depthwise: bool = False
+    in_channels: Optional[int] = None
+    out_channels: Optional[int] = None
+    spatial: Optional[Tuple[int, ...]] = None   # (H, W) / (T,) hint
+    dtype: str = "float32"
+    quant: QuantConfig = FP32
+
+    def __post_init__(self):
+        if self.rank not in (1, 2):
+            raise ValueError(f"rank must be 1 or 2, got {self.rank}")
+        if self.kernel_size < 1:
+            raise ValueError(f"kernel_size must be >= 1: {self.kernel_size}")
+        if self.stride < 1:
+            raise ValueError(f"stride must be >= 1: {self.stride}")
+        if self.rank == 2 and self.padding not in PADDINGS_2D:
+            raise ValueError(
+                f"rank-2 padding must be one of {PADDINGS_2D}: {self.padding}")
+        if self.rank == 1:
+            if not self.depthwise or self.padding != PADDING_CAUSAL \
+                    or self.stride != 1:
+                raise ValueError(
+                    "rank-1 convs are supported as stride-1 depthwise "
+                    f"CAUSAL only (got depthwise={self.depthwise}, "
+                    f"padding={self.padding!r}, stride={self.stride})")
+        if self.rank == 2 and self.depthwise:
+            raise ValueError("2-D depthwise convolution is not supported; "
+                             "use rank=2 dense or rank=1 depthwise")
+        if self.spatial is not None and len(self.spatial) != self.rank:
+            raise ValueError(
+                f"spatial hint {self.spatial} does not match rank {self.rank}")
+
+    # ---- planner predicates ----
+    @property
+    def fast_eligible(self) -> bool:
+        """Whether a bilinear fast algorithm can apply at all.
+
+        Fast algorithms are stride-1 constructs over >=2-tap kernels; every
+        other shape (strided, 1x1/pointwise) runs the direct path — this is
+        the single place that branch lives, instead of every call site.
+        """
+        return self.stride == 1 and self.kernel_size > 1
+
+    @classmethod
+    def for_conv2d(cls, x_shape, w_shape, *, stride: int = 1,
+                   padding: str = "SAME", dtype: str = "float32",
+                   quant: QuantConfig = FP32) -> "ConvSpec":
+        """Spec from concrete NHWC input / HWIO weight shapes."""
+        return cls(rank=2, kernel_size=int(w_shape[0]), stride=stride,
+                   padding=padding, in_channels=int(w_shape[2]),
+                   out_channels=int(w_shape[3]),
+                   spatial=(int(x_shape[1]), int(x_shape[2])),
+                   dtype=dtype, quant=quant)
+
+    @classmethod
+    def for_conv1d_depthwise(cls, x_shape, w_shape, *,
+                             dtype: str = "float32",
+                             quant: QuantConfig = FP32) -> "ConvSpec":
+        """Spec from (B, T, C) input / (R, C) weight shapes (causal)."""
+        return cls(rank=1, kernel_size=int(w_shape[0]), depthwise=True,
+                   padding=PADDING_CAUSAL, in_channels=int(w_shape[1]),
+                   out_channels=int(w_shape[1]), spatial=(int(x_shape[1]),),
+                   dtype=dtype, quant=quant)

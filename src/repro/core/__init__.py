@@ -1,13 +1,36 @@
-"""SFC core: the paper's contribution as a composable JAX module."""
+"""SFC core: the paper's contribution as a composable JAX module.
+
+The conv *entry points* re-exported here (``fastconv2d``,
+``fastconv1d_depthwise_causal``, ``conv2d_direct``, ...) are deprecation
+shims: new code should go through ``repro.api``
+(``ConvSpec`` -> ``plan`` -> ``ConvPlan.apply``), which owns algorithm
+selection, weight preparation, and backend dispatch.  The transform
+primitives (``transform_input_2d`` etc.) remain the supported low-level
+building blocks the API backends are made of.
+"""
+from repro._deprecation import deprecated as _deprecated
+
 from repro.core.generator import (BilinearAlgorithm, direct_algorithm,
                                   generate_sfc, generate_winograd,
                                   paper_algorithms)
-from repro.core.conv2d import (conv1d_depthwise_causal_direct, conv2d_direct,
-                               fastconv1d_depthwise_causal, fastconv2d,
-                               transform_domain_matmul, transform_input_2d,
+from repro.core import conv2d as _conv2d
+from repro.core.conv2d import (transform_domain_matmul, transform_input_2d,
                                transform_weights_2d, inverse_transform_2d)
 from repro.core.generator2d import Bilinear2D, generate_sfc_2d_hermitian
 from repro.core import error_analysis, iterative, symbolic
+
+fastconv2d = _deprecated(
+    _conv2d.fastconv2d, "repro.core",
+    "repro.api.plan(ConvSpec(...)).apply")
+conv2d_direct = _deprecated(
+    _conv2d.conv2d_direct, "repro.core",
+    "repro.api.plan(ConvSpec(...), algo='direct')")
+fastconv1d_depthwise_causal = _deprecated(
+    _conv2d.fastconv1d_depthwise_causal, "repro.core",
+    "repro.api.plan(ConvSpec.for_conv1d_depthwise(...)).apply")
+conv1d_depthwise_causal_direct = _deprecated(
+    _conv2d.conv1d_depthwise_causal_direct, "repro.core",
+    "repro.api.plan(ConvSpec.for_conv1d_depthwise(...), algo='direct')")
 
 __all__ = [
     "BilinearAlgorithm", "direct_algorithm", "generate_sfc",

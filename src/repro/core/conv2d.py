@@ -144,18 +144,27 @@ def fastconv1d_depthwise_causal(x: jnp.ndarray, w: jnp.ndarray,
     true element-wise product — exactly the regime the paper's
     multiplication counting addresses (t/M mults per output vs R direct).
     """
+    assert w.shape == (algo.R, x.shape[-1]), (w.shape, algo.R, x.shape)
+    g = jnp.asarray(algo.g(), dtype=w.dtype)
+    tw = jnp.einsum("tr,rc->tc", g, w)
+    return fastconv1d_depthwise_causal_pretransformed(x, tw, algo)
+
+
+def fastconv1d_depthwise_causal_pretransformed(
+        x: jnp.ndarray, tw: jnp.ndarray, algo: BilinearAlgorithm
+        ) -> jnp.ndarray:
+    """Same flow with offline-transformed weights tw (t, C) — the form
+    ``repro.api`` prepared weights feed."""
     B, T, C = x.shape
+    assert tw.shape == (algo.t, C), (tw.shape, algo.t, x.shape)
     R, M, L = algo.R, algo.M, algo.L
-    assert w.shape == (R, C)
     n_tiles = -(-T // M)
     xp = jnp.pad(x, ((0, 0), (R - 1, n_tiles * M - T), (0, 0)))
     idx = _overlap_tiles_1d(n_tiles, M, L)
     tiles = xp[:, idx, :]                                   # (B, nT, L, C)
     bt = jnp.asarray(algo.bt(), dtype=x.dtype)
-    g = jnp.asarray(algo.g(), dtype=w.dtype)
     at = jnp.asarray(algo.at(), dtype=x.dtype)
     tx = jnp.einsum("ti,bnic->bntc", bt, tiles)
-    tw = jnp.einsum("tr,rc->tc", g, w)
     ty = tx * tw[None, None, :, :]
     y = jnp.einsum("mt,bntc->bnmc", at, ty)                 # (B,nT,M,C)
     y = y.reshape(B, n_tiles * M, C)

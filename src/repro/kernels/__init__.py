@@ -1,10 +1,27 @@
-"""Pallas TPU kernels for the SFC hot spots (+ pure-jnp oracles in ref.py)."""
-from repro.kernels.ops import (extract_tiles, fastconv2d_fp,
-                               quantized_fastconv2d, quantize_weights, untile)
+"""Pallas TPU kernels for the SFC hot spots (+ pure-jnp oracles in ref.py).
+
+``quantized_fastconv2d`` / ``fastconv2d_fp`` re-exported here are
+deprecation shims: new code should run convolutions through ``repro.api``
+with ``backend="pallas"`` — the API owns weight preparation (offline int8
+quantization) and falls back to direct convolution where these kernels do
+not apply.  The individual kernels (``sfc_transform``, ``tdmm_int8``,
+``sfc_inverse``) remain the supported building blocks.
+"""
+from repro._deprecation import deprecated as _deprecated
+
+from repro.kernels import ops as _ops
+from repro.kernels.ops import extract_tiles, quantize_weights, untile
 from repro.kernels.sfc_transform import sfc_transform, sfc_transform_quantize
 from repro.kernels.sfc_tdmm import tdmm_int8
 from repro.kernels.sfc_inverse import sfc_inverse
 from repro.kernels import ref
+
+quantized_fastconv2d = _deprecated(
+    _ops.quantized_fastconv2d, "repro.kernels",
+    "repro.api.plan(spec, backend='pallas') with int8 prepared weights")
+fastconv2d_fp = _deprecated(
+    _ops.fastconv2d_fp, "repro.kernels",
+    "repro.api.plan(spec, backend='pallas').apply")
 
 __all__ = [
     "sfc_transform", "sfc_transform_quantize", "tdmm_int8", "sfc_inverse",

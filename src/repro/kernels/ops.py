@@ -56,12 +56,11 @@ def untile(y_tiles: jnp.ndarray, algo: BilinearAlgorithm,
 
 
 def quantize_weights(w: jnp.ndarray, algo: BilinearAlgorithm,
-                     w_scale: jnp.ndarray) -> jnp.ndarray:
+                     w_scale: jnp.ndarray, bits: int = 8) -> jnp.ndarray:
     """(R,R,Cin,Cout) f32 -> (t^2, Cin, Cout) int8 — offline, once."""
+    from repro.quant.fake_quant import quantize_transformed_weights
     tw = c2d.transform_weights_2d(w, algo)            # (t,t,Cin,Cout)
-    q = jnp.clip(jnp.round(tw / w_scale[:, :, None, :]), -127, 127)
-    t = tw.shape[0]
-    return q.astype(jnp.int8).reshape(t * t, w.shape[2], w.shape[3])
+    return quantize_transformed_weights(tw, w_scale, bits)
 
 
 @functools.partial(jax.jit, static_argnames=("algo", "padding", "interpret"))

@@ -147,7 +147,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool):
                                    dec["pos"])
 
         compiled = lowered.compile()
-        cost = compiled.cost_analysis() or {}
+        from repro.launch import hlo_analysis
+        cost = hlo_analysis.normalize_cost_analysis(compiled.cost_analysis())
         try:
             mem = compiled.memory_analysis()
             mem_info = {
@@ -166,7 +167,6 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool):
         coll, coll_counts = collective_bytes(hlo)
         # loop-aware analysis (cost_analysis counts while bodies once; see
         # repro/launch/hlo_analysis.py) + archive the HLO for §Perf work
-        from repro.launch import hlo_analysis
         summary = hlo_analysis.analyze(hlo)
         import gzip
         hlo_dir = OUT_DIR.parent / "hlo"

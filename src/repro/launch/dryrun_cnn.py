@@ -89,9 +89,9 @@ def lower_cnn(model_name: str, algo: str, multi_pod: bool):
         t0 = time.time()
         lowered = jitted.lower(params_abs, opt_abs, batch_abs)
         compiled = lowered.compile()
-        cost = compiled.cost_analysis() or {}
-        hlo = compiled.as_text()
         from repro.launch import hlo_analysis
+        cost = hlo_analysis.normalize_cost_analysis(compiled.cost_analysis())
+        hlo = compiled.as_text()
         s = hlo_analysis.analyze(hlo)
         coll, _ = collective_bytes(hlo)
         mesh_tag = "pod2" if multi_pod else "pod1"

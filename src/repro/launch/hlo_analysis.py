@@ -36,6 +36,19 @@ _DTYPE_BYTES = {
 _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                 "collective-permute")
 
+def normalize_cost_analysis(cost) -> Dict[str, float]:
+    """Normalize ``compiled.cost_analysis()`` across JAX versions.
+
+    Older JAX returned a list with one properties-dict per partition
+    (``[{"flops": ...}]``); newer JAX returns the dict directly (and may
+    return ``None`` on backends without cost analysis).  Always returns a
+    dict, possibly empty.
+    """
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else None
+    return dict(cost) if cost else {}
+
+
 _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 _COMP_HEAD = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
 _OP_RE = re.compile(

@@ -15,29 +15,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import ConvSpec, plan
+from repro.api import registry as algo_registry
 from repro.configs.resnet18 import CNNConfig
-from repro.core import conv2d as c2d
-from repro.core.generator import (BilinearAlgorithm, generate_sfc,
-                                  generate_winograd)
+from repro.core.generator import BilinearAlgorithm
 import repro.quant.fake_quant as fq
 
 Params = Dict[str, Any]
 
-_ALGOS = {}
-
 
 def conv_algo(name: str) -> Optional[BilinearAlgorithm]:
-    if name == "direct":
-        return None
-    if name not in _ALGOS:
-        _ALGOS[name] = {
-            "sfc6_7": lambda: generate_sfc(6, 7, 3),
-            "sfc6_6": lambda: generate_sfc(6, 6, 3),
-            "sfc4_4": lambda: generate_sfc(4, 4, 3),
-            "wino4": lambda: generate_winograd(4, 3),
-            "wino2": lambda: generate_winograd(2, 3),
-        }[name]()
-    return _ALGOS[name]
+    """Deprecated shim: resolve via the public ``repro.api`` registry."""
+    return algo_registry.get_algorithm(name)
 
 
 def quant_config(cfg: CNNConfig) -> fq.QuantConfig:
@@ -50,17 +39,17 @@ def quant_config(cfg: CNNConfig) -> fq.QuantConfig:
 
 def conv_apply(x, w, b, cfg: CNNConfig, stride: int = 1,
                qhook=None) -> jnp.ndarray:
-    """Algorithm-dispatched conv; fast path only for 3x3 stride-1."""
-    R = w.shape[0]
-    algo = conv_algo(cfg.conv_algo)
-    if stride == 1 and R == 3 and algo is not None:
-        y = c2d.fastconv2d(x, w, algo, padding="SAME",
-                           elementwise_hook=qhook)
-    else:
-        y = jax.lax.conv_general_dilated(
-            x, w, (stride, stride), "SAME",
-            dimension_numbers=("NHWC", "HWIO", "NHWC"))
-    return y + b
+    """Algorithm-dispatched conv through the unified ``repro.api`` planner.
+
+    The planner degrades stride-2 / 1x1 / tap-mismatched convs to the
+    direct path; quantization stays hook-driven (dynamic fake quant for
+    training and PTQ simulation), so the spec itself is fp.
+    """
+    spec = ConvSpec.for_conv2d(x.shape, w.shape, stride=stride,
+                               padding="SAME")
+    p = plan(spec, backend="reference", algo=cfg.conv_algo)
+    hook = qhook if p.path == "fast" else None
+    return p.apply(x, w, bias=b, elementwise_hook=hook)
 
 
 def _conv_init(key, r, cin, cout):

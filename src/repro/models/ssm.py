@@ -22,17 +22,6 @@ import numpy as np
 from repro.models import layers
 from repro.models.layers import Params
 
-_SFC_CONV1D_ALGO = None
-
-
-def _sfc_conv1d_algo():
-    """SFC-6(6,4) for the R=4 depthwise conv: 12 mults / 6 outputs vs 24."""
-    global _SFC_CONV1D_ALGO
-    if _SFC_CONV1D_ALGO is None:
-        from repro.core.generator import generate_sfc
-        _SFC_CONV1D_ALGO = generate_sfc(6, 6, 4)
-    return _SFC_CONV1D_ALGO
-
 
 def init_mamba2(key, cfg, dtype) -> Params:
     d = cfg.d_model
@@ -54,12 +43,13 @@ def init_mamba2(key, cfg, dtype) -> Params:
 
 def _causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
                    use_sfc: bool) -> jnp.ndarray:
-    from repro.core import conv2d as c2d
-    if use_sfc:
-        y = c2d.fastconv1d_depthwise_causal(x, w, _sfc_conv1d_algo())
-    else:
-        y = c2d.conv1d_depthwise_causal_direct(x, w)
-    return jax.nn.silu(y + b)
+    from repro.api import ConvSpec, plan
+    # auto planning picks the SFC fast path when an algorithm matching the
+    # tap count is registered (SFC-6(6,4) for the default R=4: 12 mults /
+    # 6 outputs vs 24 direct) and degrades to direct otherwise.
+    spec = ConvSpec.for_conv1d_depthwise(x.shape, w.shape)
+    p = plan(spec, algo="auto" if use_sfc else "direct")
+    return jax.nn.silu(p.apply(x, w, bias=b))
 
 
 def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,

@@ -109,6 +109,21 @@ def fake_quant_weight(w: jnp.ndarray, bits: int, granularity: str,
     return fake_quant(w, bits, axes, scale)
 
 
+def quantize_transformed_weights(tw: jnp.ndarray, w_scale: jnp.ndarray,
+                                 bits: int = 8) -> jnp.ndarray:
+    """Offline weight quantization for the static deployment path.
+
+    (t, t, Cin, Cout) fp transform-domain weights + (t, t, Cout) scales
+    -> (t^2, Cin, Cout) int8, the layout ``tdmm_int8`` consumes.  The one
+    implementation shared by ``repro.api`` weight preparation and
+    ``repro.kernels.quantize_weights``.
+    """
+    q = qmax_for_bits(bits)
+    t = tw.shape[0]
+    wq = jnp.clip(jnp.round(tw / w_scale[:, :, None, :]), -q, q)
+    return wq.astype(jnp.int8).reshape(t * t, tw.shape[2], tw.shape[3])
+
+
 @dataclasses.dataclass(frozen=True)
 class QuantConfig:
     """Transform-domain quantization recipe (paper Eq. 17 + §6.3 ablation)."""
@@ -120,7 +135,7 @@ class QuantConfig:
     enabled: bool = True
 
     def hook(self):
-        """elementwise_hook for ``repro.core.conv2d.fastconv2d``."""
+        """elementwise_hook for ``repro.api`` ConvPlan.apply (reference)."""
         if not self.enabled:
             return None
 

@@ -11,7 +11,20 @@ robust core of that recipe:
     over calibration batches, producing *static* scales for deployment (the
     paper stores transform-domain tensors, avoiding double quantization);
   * a hook factory that plugs the calibrated static scales into the
-    ``fastconv2d`` element-wise stage.
+    element-wise stage of a ``repro.api`` ConvPlan (reference backend),
+    and :meth:`PTQLayer.prepare` / :meth:`PTQLayer.static_scales`, which
+    export those scales into ``ConvPlan.prepare_weights`` for the offline
+    int8 deployment path (both backends).
+
+Typical flow::
+
+    p = plan(spec, backend="pallas")
+    layer = PTQLayer(config=spec.quant)
+    ref = plan(spec, backend="reference", algo=p.algo_name)
+    for batch in calib:                       # calibration (reference)
+        ref.apply(batch, w, elementwise_hook=layer.calibration_hook())
+    prepared = layer.prepare(p, w)            # offline int8 weights
+    y = p.apply(x, prepared)                  # deployment
 """
 from __future__ import annotations
 
@@ -92,3 +105,28 @@ class PTQLayer:
                                 reduce_axes=(), scale=self.weight_scale)
             return txq, twq
         return _hook
+
+    # ---- offline deployment (repro.api integration) ----
+    def static_scales(self, t: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Calibrated (act_scale (t, t), weight_scale) for prepare_weights.
+
+        Frequency-wise activation scales are the paper's s_Tx (Eq. 17);
+        tensor-granularity calibration broadcasts to the same shape so the
+        static datapath is granularity-agnostic.
+        """
+        act = np.squeeze(np.asarray(
+            self.act_state.scale(self.config.bits_act)))
+        if act.ndim == 0:
+            act = np.full((t, t), float(act))
+        if act.shape != (t, t):
+            raise ValueError(
+                f"calibrated activation scale has shape {act.shape}, "
+                f"expected broadcastable to ({t}, {t})")
+        return jnp.asarray(act, jnp.float32), self.weight_scale
+
+    def prepare(self, plan, w: jnp.ndarray):
+        """Offline-quantize ``w`` for ``plan`` using the calibrated scales."""
+        if plan.algorithm is None:
+            return plan.prepare_weights(w)
+        act_scale, w_scale = self.static_scales(plan.algorithm.t)
+        return plan.prepare_weights(w, act_scale=act_scale, w_scale=w_scale)

@@ -1,0 +1,311 @@
+"""Unified conv front-end: ConvSpec -> plan -> ConvPlan.apply.
+
+Covers the acceptance surface of the API: reference-vs-pallas parity for
+fp32 and int8, cost-model auto-selection, graceful direct degradation,
+prepared-weight caching, the thread-safe registry, and the deprecation
+shims over the legacy entry points.
+"""
+import threading
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (ConvSpec, PreparedWeights, get_algorithm,
+                       list_algorithms, list_backends, plan,
+                       register_algorithm, select_algorithm)
+from repro.core import conv2d as c2d
+from repro.quant.fake_quant import INT8_FREQ
+from repro.quant.ptq import PTQLayer
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _registry_isolation():
+    """Restore the process-wide registry after this module's mutations."""
+    from repro.api import planner, registry as reg
+    with reg._LOCK:
+        entries, instances = dict(reg._ENTRIES), dict(reg._INSTANCES)
+    yield
+    with reg._LOCK:
+        reg._ENTRIES.clear()
+        reg._ENTRIES.update(entries)
+        reg._INSTANCES.clear()
+        reg._INSTANCES.update(instances)
+    planner._plan_cached.cache_clear()
+
+
+def _data(cout=8, cin=8, hw=12, seed=0):
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(2, hw, hw, cin), jnp.float32)
+    w = jnp.asarray(rng.randn(3, 3, cin, cout) * 0.2, jnp.float32)
+    return x, w
+
+
+# ----------------------------------------------------------------------
+# (a) reference vs pallas parity through ConvPlan.apply
+# ----------------------------------------------------------------------
+def test_parity_fp32_reference_vs_pallas():
+    x, w = _data()
+    spec = ConvSpec.for_conv2d(x.shape, w.shape)
+    y_ref = plan(spec, backend="reference", algo="sfc6_6").apply(x, w)
+    y_pal = plan(spec, backend="pallas", algo="sfc6_6").apply(x, w)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_pal),
+                               rtol=1e-5, atol=1e-5)
+    # both must agree with the direct oracle
+    y_direct = plan(spec, algo="direct").apply(x, w)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_direct),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_parity_int8_reference_vs_pallas():
+    x, w = _data(seed=1)
+    spec = ConvSpec.for_conv2d(x.shape, w.shape, quant=INT8_FREQ)
+    p_ref = plan(spec, backend="reference", algo="sfc6_6")
+    p_pal = plan(spec, backend="pallas", algo="sfc6_6")
+    algo = p_ref.algorithm
+    tx, _ = c2d.transform_input_2d(x, algo)
+    act_scale = jnp.abs(tx).max(axis=(0, 1, 2, 5)) / 127 + 1e-9
+    y_ref = p_ref.apply(x, p_ref.prepare_weights(w, act_scale=act_scale))
+    y_pal = p_pal.apply(x, p_pal.prepare_weights(w, act_scale=act_scale))
+    # same integer grid on both backends; only accumulation order differs
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_pal),
+                               rtol=1e-4, atol=1e-4)
+    # and the int8 path stays close to the fp oracle (paper's accuracy claim)
+    y_fp = plan(ConvSpec.for_conv2d(x.shape, w.shape),
+                algo="direct").apply(x, w)
+    rel = float(jnp.linalg.norm(y_ref - y_fp) / jnp.linalg.norm(y_fp))
+    assert rel < 0.05
+
+
+def test_int8_via_ptq_calibration():
+    """PTQLayer calibration -> static scales -> both backends agree."""
+    x, w = _data(seed=2)
+    spec = ConvSpec.for_conv2d(x.shape, w.shape, quant=INT8_FREQ)
+    p_ref = plan(spec, algo="sfc6_6")
+    layer = PTQLayer(config=INT8_FREQ)
+    p_ref.apply(x, w, elementwise_hook=layer.calibration_hook())
+    p_pal = plan(spec, backend="pallas", algo="sfc6_6")
+    y_ref = p_ref.apply(x, layer.prepare(p_ref, w))
+    y_pal = p_pal.apply(x, layer.prepare(p_pal, w))
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_pal),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_conv1d_depthwise_parity():
+    rng = np.random.RandomState(3)
+    x = jnp.asarray(rng.randn(2, 37, 16), jnp.float32)
+    w = jnp.asarray(rng.randn(4, 16) * 0.3, jnp.float32)
+    spec = ConvSpec.for_conv1d_depthwise(x.shape, w.shape)
+    p = plan(spec, algo="auto")
+    assert p.algo_name == "sfc6_6_r4"
+    y = p.apply(x, w)
+    y_ref = c2d.conv1d_depthwise_causal_direct(x, w)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+    # pallas backend falls back to the same reference impl for rank 1
+    y_pal = plan(spec, backend="pallas", algo="auto").apply(x, w)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_pal),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ----------------------------------------------------------------------
+# (b) auto algorithm selection
+# ----------------------------------------------------------------------
+def test_auto_picks_sfc_for_3x3_stride1_int8():
+    spec = ConvSpec(rank=2, kernel_size=3, stride=1, in_channels=64,
+                    out_channels=64, spatial=(56, 56), quant=INT8_FREQ)
+    p = plan(spec, algo="auto")
+    assert p.algorithm is not None and p.algorithm.kind == "sfc"
+    assert p.cost < plan(spec, algo="direct").cost
+
+
+def test_auto_picks_fast_for_fp32():
+    spec = ConvSpec(rank=2, kernel_size=3, in_channels=64,
+                    out_channels=64, spatial=(56, 56))
+    assert plan(spec, algo="auto").path == "fast"
+
+
+def test_auto_picks_direct_for_stride2_and_1x1():
+    s2 = ConvSpec(rank=2, kernel_size=3, stride=2, in_channels=64,
+                  out_channels=64, spatial=(56, 56), quant=INT8_FREQ)
+    p1x1 = ConvSpec(rank=2, kernel_size=1, in_channels=64,
+                    out_channels=64, spatial=(56, 56), quant=INT8_FREQ)
+    assert plan(s2, algo="auto").path == "direct"
+    assert plan(p1x1, algo="auto").path == "direct"
+    assert select_algorithm(s2) == "direct"
+
+
+def test_explicit_algo_degrades_gracefully():
+    # stride-2 and tap mismatch silently resolve to direct, as each call
+    # site used to hand-roll
+    s2 = ConvSpec(rank=2, kernel_size=3, stride=2)
+    assert plan(s2, algo="sfc6_6").path == "direct"
+    r7 = ConvSpec(rank=2, kernel_size=7)
+    assert plan(r7, algo="sfc6_6").path == "direct"
+    with pytest.raises(KeyError):
+        plan(ConvSpec(rank=2, kernel_size=3), algo="nope")
+    # a typo'd name must raise even when the spec would degrade to direct
+    with pytest.raises(KeyError):
+        plan(ConvSpec(rank=2, kernel_size=3, stride=2), algo="nope")
+
+
+def test_direct_path_executes_stride2_and_1x1():
+    x, _ = _data()
+    rng = np.random.RandomState(4)
+    w2 = jnp.asarray(rng.randn(3, 3, 8, 8) * 0.2, jnp.float32)
+    w1 = jnp.asarray(rng.randn(1, 1, 8, 8) * 0.2, jnp.float32)
+    y2 = plan(ConvSpec.for_conv2d(x.shape, w2.shape, stride=2)).apply(x, w2)
+    y1 = plan(ConvSpec.for_conv2d(x.shape, w1.shape)).apply(x, w1)
+    assert y2.shape == (2, 6, 6, 8)
+    assert y1.shape == (2, 12, 12, 8)
+
+
+# ----------------------------------------------------------------------
+# (c) prepared-weight caching
+# ----------------------------------------------------------------------
+def test_prepared_weights_cached_and_identical():
+    x, w = _data(seed=5)
+    spec = ConvSpec.for_conv2d(x.shape, w.shape)
+    p = plan(spec, algo="sfc6_7")
+    prep1 = p.prepare_weights(w)
+    prep2 = p.prepare_weights(w)
+    assert prep1 is prep2                      # memoized per weight array
+    assert isinstance(prep1, PreparedWeights)
+    y_cached = p.apply(x, prep1)
+    y_uncached = p.apply(x, w)
+    assert bool(jnp.all(y_cached == y_uncached))
+
+
+def test_prepare_inside_jit_does_not_cache_tracers():
+    x, w = _data(seed=6)
+    spec = ConvSpec.for_conv2d(x.shape, w.shape)
+    p = plan(spec, algo="sfc6_6")
+    before = len(p._prep_cache)
+    y = jax.jit(lambda x, w: p.apply(x, w))(x, w)
+    assert len(p._prep_cache) == before        # tracers never cached
+    np.testing.assert_allclose(np.asarray(y), np.asarray(p.apply(x, w)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_plan_memoized_on_spec():
+    spec = ConvSpec(rank=2, kernel_size=3, in_channels=8, out_channels=8,
+                    spatial=(12, 12))
+    assert plan(spec, algo="sfc6_6") is plan(spec, algo="sfc6_6")
+
+
+# ----------------------------------------------------------------------
+# registry
+# ----------------------------------------------------------------------
+def test_registry_lists_defaults_and_registers_new():
+    names = list_algorithms()
+    for expected in ("sfc6_7", "sfc6_6", "sfc4_4", "wino4", "direct"):
+        assert expected in names
+    assert "sfc6_6" in list_algorithms(taps=3)
+    assert "sfc6_6_r4" not in list_algorithms(taps=3)
+    from repro.core.generator import generate_sfc
+    register_algorithm("sfc4_5_test", lambda: generate_sfc(4, 5, 3),
+                       taps=3, kind="sfc", overwrite=True)
+    assert "sfc4_5_test" in list_algorithms(taps=3)
+    assert get_algorithm("sfc4_5_test").M == 5
+    with pytest.raises(ValueError):
+        register_algorithm("sfc4_5_test", lambda: generate_sfc(4, 5, 3),
+                           taps=3, kind="sfc")
+
+
+def test_register_algorithm_invalidates_auto_plans():
+    """Newly registered algorithms become visible to memoized auto plans."""
+    from repro.core.generator import generate_sfc
+    spec = ConvSpec(rank=2, kernel_size=5, in_channels=8, out_channels=8,
+                    spatial=(20, 20))
+    assert plan(spec, algo="auto").path == "direct"   # no 5-tap algo yet
+    register_algorithm("sfc6_4_r5_test", lambda: generate_sfc(6, 4, 5),
+                       taps=5, kind="sfc", overwrite=True)
+    assert plan(spec, algo="auto").algo_name == "sfc6_4_r5_test"
+
+
+def test_registry_threadsafe_memoization():
+    results = []
+
+    def worker():
+        results.append(get_algorithm("sfc6_7"))
+
+    threads = [threading.Thread(target=worker) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert all(a is results[0] for a in results)   # one shared instance
+
+
+def test_backends_listed():
+    assert "reference" in list_backends()
+    assert "pallas" in list_backends()
+
+
+# ----------------------------------------------------------------------
+# (d) deprecation shims
+# ----------------------------------------------------------------------
+def test_deprecation_shims_resolve_and_match():
+    import repro.core as core
+    import repro.kernels as kernels
+    x, w = _data(seed=7)
+    algo = get_algorithm("sfc6_6")
+    spec = ConvSpec.for_conv2d(x.shape, w.shape)
+    y_api = plan(spec, algo="sfc6_6").apply(x, w)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        y_legacy = core.fastconv2d(x, w, algo)
+        y_kernel = kernels.fastconv2d_fp(x, w, algo)
+    assert any(issubclass(r.category, DeprecationWarning) for r in rec)
+    np.testing.assert_allclose(np.asarray(y_api), np.asarray(y_legacy),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y_api), np.asarray(y_kernel),
+                               rtol=1e-5, atol=1e-5)
+    # models shim: conv_algo resolves through the registry
+    from repro.models.cnn import conv_algo
+    assert conv_algo("sfc6_6") is algo
+    assert conv_algo("direct") is None
+
+
+# ----------------------------------------------------------------------
+# misc API contracts
+# ----------------------------------------------------------------------
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        ConvSpec(rank=3)
+    with pytest.raises(ValueError):
+        ConvSpec(rank=1, depthwise=False)
+    with pytest.raises(ValueError):
+        ConvSpec(rank=2, padding="CAUSAL")
+    with pytest.raises(ValueError):
+        ConvSpec(rank=2, depthwise=True)
+    with pytest.raises(ValueError):   # stride-1 only: no strided 1-D path
+        ConvSpec(rank=1, kernel_size=4, stride=2, depthwise=True,
+                 padding="CAUSAL")
+
+
+def test_hook_rejected_on_rank1_fast_path():
+    rng = np.random.RandomState(9)
+    x = jnp.asarray(rng.randn(2, 20, 8), jnp.float32)
+    w = jnp.asarray(rng.randn(4, 8), jnp.float32)
+    p = plan(ConvSpec.for_conv1d_depthwise(x.shape, w.shape), algo="auto")
+    assert p.path == "fast"
+    with pytest.raises(NotImplementedError):
+        p.apply(x, w, elementwise_hook=lambda tx, tw: (tx, tw))
+
+
+def test_hook_rejected_on_static_int8_and_pallas():
+    x, w = _data(seed=8)
+    spec = ConvSpec.for_conv2d(x.shape, w.shape, quant=INT8_FREQ)
+    p = plan(spec, algo="sfc6_6")
+    algo = p.algorithm
+    tx, _ = c2d.transform_input_2d(x, algo)
+    act_scale = jnp.abs(tx).max(axis=(0, 1, 2, 5)) / 127 + 1e-9
+    prep = p.prepare_weights(w, act_scale=act_scale)
+    with pytest.raises(ValueError):
+        p.apply(x, prep, elementwise_hook=lambda tx, tw: (tx, tw))
+    p_pal = plan(spec, backend="pallas", algo="sfc6_6")
+    with pytest.raises(ValueError):
+        p_pal.apply(x, w, elementwise_hook=lambda tx, tw: (tx, tw))

@@ -3,6 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")    # property tests skip cleanly without it
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (conv1d_depthwise_causal_direct, conv2d_direct,

@@ -3,6 +3,8 @@ from fractions import Fraction
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")    # property tests skip cleanly without it
 from hypothesis import given, settings, strategies as st
 
 from repro.core.generator import (direct_algorithm, generate_sfc,

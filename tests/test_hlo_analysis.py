@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.launch.hlo_analysis import analyze
+from repro.launch.hlo_analysis import analyze, normalize_cost_analysis
 
 
 def _compiled_text(fn, *args):
@@ -55,10 +55,18 @@ def test_cost_analysis_undercounts_loops():
         return out
 
     compiled = jax.jit(f).lower(x).compile()
-    raw = compiled.cost_analysis()["flops"]
+    # cost_analysis() returns a list on some JAX versions, a dict on others
+    raw = normalize_cost_analysis(compiled.cost_analysis())["flops"]
     corrected = analyze(compiled.as_text()).flops
     assert corrected == pytest.approx(8 * 2 * 64 ** 3, rel=1e-6)
     assert corrected > 5 * raw          # raw counted the body ~once
+
+
+def test_normalize_cost_analysis_shapes():
+    assert normalize_cost_analysis(None) == {}
+    assert normalize_cost_analysis([]) == {}
+    assert normalize_cost_analysis({"flops": 3.0}) == {"flops": 3.0}
+    assert normalize_cost_analysis([{"flops": 3.0}]) == {"flops": 3.0}
 
 
 def test_traffic_nonzero_and_param_bytes():
