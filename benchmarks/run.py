@@ -1,7 +1,12 @@
 """Benchmark harness — one module per paper table/figure.
 
   PYTHONPATH=src python -m benchmarks.run            # everything
-  PYTHONPATH=src python -m benchmarks.run table1     # one table
+  PYTHONPATH=src python -m benchmarks.run table3     # one table
+
+``table3`` additionally writes the machine-readable per-layer conv sweep
+``BENCH_conv.json`` (path via ``REPRO_BENCH_OUT``; reduced shapes via
+``REPRO_BENCH_SPATIAL_CAP``, default 28) — the artifact CI uploads to
+track the perf trajectory across PRs.
 """
 import sys
 import time
@@ -22,10 +27,15 @@ def main() -> None:
     }
     selected = sys.argv[1:] or list(suites)
     t0 = time.time()
+    artifacts = []
     for name in selected:
         print(f"\n===== {name} =====")
-        suites[name]()
+        result = suites[name]()
+        if isinstance(result, dict) and "bench_path" in result:
+            artifacts.append(result["bench_path"])
     print(f"\nall benchmarks done in {time.time()-t0:.1f}s")
+    for path in artifacts:
+        print(f"artifact: {path}")
 
 
 if __name__ == "__main__":

@@ -6,14 +6,32 @@ and (b) measured wall-clock of the jitted conv paths on this host (CPU
 numbers are indicative only; the roofline analysis in EXPERIMENTS.md covers
 the TPU target).  VGG-16's conv stack (all 3x3 stride-1, the paper's pick)
 is the workload.
+
+Besides the human-readable log this module emits ``BENCH_conv.json``: a
+machine-readable per-layer wall-clock sweep of the four datapaths
+
+  direct  — XLA native convolution, fp32
+  staged  — three-kernel Pallas int8 pipeline (transform+quant / tdmm /
+            inverse, two HBM round-trips of the transform-domain tensor)
+  fused   — single-``pallas_call`` int8 pipeline (``sfc_fused``)
+  int8    — reference-backend static-int8 simulation (jnp)
+
+so the perf trajectory is tracked from PR 2 onward (EXPERIMENTS.md §Perf).
+Spatial extents are scaled by ``REPRO_BENCH_SPATIAL_CAP`` (default 28 —
+interpret-mode Pallas on CPU makes full 224x224 sweeps impractically slow;
+channel counts, the dimension that decides datapath ranking, stay full).
 """
-import time
+import dataclasses
+import json
+import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.api import ConvSpec, get_algorithm, plan
+from repro.api.tuning import (DEFAULT_FUSED, DEFAULT_STAGED,
+                              calibrate_act_scale, time_fn)
 from repro.quant import ConvWorkload, bops_reduction, INT8_FREQ
 
 # VGG-16 conv layers (HxW, Cin, Cout) at 224 input — per paper §6.2
@@ -22,18 +40,63 @@ VGG_LAYERS = [(224, 3, 64), (224, 64, 64), (112, 64, 128), (112, 128, 128),
               (28, 256, 512), (28, 512, 512), (28, 512, 512),
               (14, 512, 512), (14, 512, 512), (14, 512, 512)]
 
-
-def _time(fn, *args, reps=3):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        fn(*args).block_until_ready()
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        out = fn(*args)
-        jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps
+BENCH_PATH = os.environ.get("REPRO_BENCH_OUT", "BENCH_conv.json")
 
 
-def run(log=print):
+# one warmup (compile) call, then mean over reps — the tuner's protocol
+_time = time_fn
+
+
+def _scaled_layers(cap: int):
+    """VGG stack with spatial extents capped (channels stay full)."""
+    out = []
+    for hw, cin, cout in VGG_LAYERS:
+        hw_s = max(round(hw * cap / 224), 7) if cap < 224 else hw
+        out.append((hw_s, cin, cout))
+    return out
+
+
+def _layer_sweep(layers, algo_name: str, reps: int, log) -> list:
+    """Per-layer wall-clock of direct / staged / fused / int8-sim paths."""
+    rng = np.random.RandomState(0)
+    rows = []
+    for hw, cin, cout in layers:
+        x = jnp.asarray(rng.randn(1, hw, hw, cin), jnp.float32)
+        w = jnp.asarray(rng.randn(3, 3, cin, cout) * 0.1, jnp.float32)
+        spec = ConvSpec.for_conv2d(x.shape, w.shape, quant=INT8_FREQ)
+        p_direct = plan(spec, algo="direct")
+        p_fused = plan(spec, backend="pallas", algo=algo_name)
+        p_ref = plan(spec, backend="reference", algo=algo_name)
+        act = calibrate_act_scale(x, p_fused.algorithm, spec.quant)
+        prep = p_fused.prepare_weights(w, act_scale=act)
+        # every path timed under one jax.jit, so the comparison measures
+        # the datapath rather than eager dispatch overhead
+        fns = {
+            "direct": jax.jit(lambda a: p_direct.apply(a, w)),
+            "fused": jax.jit(
+                lambda a, _p=dataclasses.replace(p_fused,
+                                                 config=DEFAULT_FUSED):
+                _p.apply(a, prep)),
+            "staged": jax.jit(
+                lambda a, _p=dataclasses.replace(p_fused,
+                                                 config=DEFAULT_STAGED):
+                _p.apply(a, prep)),
+            "int8": jax.jit(lambda a: p_ref.apply(a, prep)),
+        }
+        row = {"hw": hw, "cin": cin, "cout": cout}
+        for key, fn in fns.items():
+            row[f"{key}_ms"] = _time(fn, x, reps=reps) * 1e3
+        rows.append(row)
+        log(f"layer{hw}x{hw}x{cin}->{cout},"
+            f"direct={row['direct_ms']:.2f}ms,"
+            f"staged={row['staged_ms']:.2f}ms,"
+            f"fused={row['fused_ms']:.2f}ms,"
+            f"int8sim={row['int8_ms']:.2f}ms")
+    return rows
+
+
+def run(log=print, bench_path: str = None, reps: int = None,
+        spatial_cap: int = None):
     algo = get_algorithm("sfc6_7")
     total_direct_bops = total_sfc_bops = 0.0
     for hw, cin, cout in VGG_LAYERS:
@@ -43,27 +106,34 @@ def run(log=print):
                            / bops_reduction(wl, algo))
     log(f"vgg16_bops_reduction,{total_direct_bops/total_sfc_bops:.2f}x")
 
-    # wall-clock of one representative mid-network layer on this host
-    rng = np.random.RandomState(0)
-    x = jnp.asarray(rng.randn(1, 56, 56, 64), jnp.float32)
-    w = jnp.asarray(rng.randn(3, 3, 64, 64) * 0.05, jnp.float32)
-    spec = ConvSpec.for_conv2d(x.shape, w.shape)
-    p_direct = plan(spec, algo="direct")
-    p_sfc = plan(spec, algo="sfc6_7")
-    direct = jax.jit(lambda x, w: p_direct.apply(x, w))
-    sfc_fp = jax.jit(lambda x, w: p_sfc.apply(x, w))
-    hook = INT8_FREQ.hook()
-    sfc_q = jax.jit(lambda x, w: p_sfc.apply(x, w, elementwise_hook=hook))
-    td = _time(direct, x, w)
-    tf = _time(sfc_fp, x, w)
-    tq = _time(sfc_q, x, w)
-    log(f"layer56x56x64_direct_ms,{td*1e3:.2f}")
-    log(f"layer56x56x64_sfc_fp_ms,{tf*1e3:.2f}")
-    log(f"layer56x56x64_sfc_int8sim_ms,{tq*1e3:.2f}")
+    # per-layer wall-clock sweep of the four datapaths -> BENCH_conv.json
+    bench_path = bench_path or BENCH_PATH
+    reps = reps or int(os.environ.get("REPRO_BENCH_REPS", "2"))
+    spatial_cap = spatial_cap or int(
+        os.environ.get("REPRO_BENCH_SPATIAL_CAP", "28"))
+    layers = _scaled_layers(spatial_cap)
+    rows = _layer_sweep(layers, "sfc6_6", reps, log)
+    totals = {k: sum(r[f"{k}_ms"] for r in rows)
+              for k in ("direct", "staged", "fused", "int8")}
+    for k, v in totals.items():
+        log(f"vgg16_stack_{k}_ms,{v:.2f}")
+    bench = {
+        "host": {"platform": jax.default_backend(), "jax": jax.__version__,
+                 "interpret": True},
+        "workload": "vgg16_conv_stack", "algo": "sfc6_6", "batch": 1,
+        "spatial_cap": spatial_cap, "reps": reps,
+        "layers": rows,
+        "totals_ms": totals,
+    }
+    with open(bench_path, "w") as f:
+        json.dump(bench, f, indent=1)
+    log(f"bench_artifact,{bench_path}")
+
     # paper's GOPs/DSP analogue: mults per output
     log(f"mults_per_output_direct,{9*64}")
     log(f"mults_per_output_sfc,{algo.mults_2d/algo.M**2*64:.1f}")
-    return {"bops_reduction": total_direct_bops / total_sfc_bops}
+    return {"bops_reduction": total_direct_bops / total_sfc_bops,
+            "bench_path": bench_path, "totals_ms": totals}
 
 
 if __name__ == "__main__":

@@ -12,6 +12,7 @@ not apply, and dispatches execution to the ``reference`` (pure jnp) or
 extension seam for future backends — register new ones with
 ``register_backend`` and new algorithms with ``register_algorithm``.
 """
+from repro.api import tuning
 from repro.api.backends import (get_backend, list_backends,
                                 register_backend)
 from repro.api.plan import ConvPlan, PreparedWeights
@@ -19,10 +20,12 @@ from repro.api.planner import estimate_cost, plan, select_algorithm
 from repro.api.registry import (get_algorithm, list_algorithms,
                                 register_algorithm)
 from repro.api.spec import ConvSpec
+from repro.api.tuning import KernelConfig, autotune
 
 __all__ = [
     "ConvSpec", "ConvPlan", "PreparedWeights", "plan",
     "select_algorithm", "estimate_cost",
     "register_algorithm", "get_algorithm", "list_algorithms",
     "register_backend", "get_backend", "list_backends",
+    "tuning", "KernelConfig", "autotune",
 ]

@@ -89,7 +89,14 @@ class ReferenceBackend:
 
 
 class PallasBackend:
-    """``repro.kernels`` datapath; static precision, no hooks."""
+    """``repro.kernels`` datapath; static precision, no hooks.
+
+    The int8 path defaults to the fused single-``pallas_call`` kernel
+    (``repro.kernels.sfc_fused``) — the transform-domain tensor never
+    touches HBM.  A plan carrying a measured ``KernelConfig`` (from
+    ``repro.api.tuning``) can instead select the staged three-kernel
+    pipeline or override the block sizes.
+    """
 
     name = "pallas"
 
@@ -106,9 +113,23 @@ class PallasBackend:
         from repro.kernels import ops
         algo = plan.algorithm
         if prep.quantized:
-            y = ops.quantized_fastconv2d(
-                x, prep.wq, prep.act_scale, prep.w_scale, algo,
-                padding=plan.spec.padding, interpret=plan.interpret)
+            from repro.api import tuning
+            cfg = plan.config or tuning.DEFAULT_FUSED
+            bits = plan.spec.quant.bits_act
+            if cfg.datapath == "staged":
+                y = ops.quantized_fastconv2d(
+                    x, prep.wq, prep.act_scale, prep.w_scale, algo,
+                    padding=plan.spec.padding, bits=bits,
+                    interpret=plan.interpret, k_block=cfg.k_block,
+                    tile_block=cfg.tile_block, chan_block=cfg.chan_block)
+            else:
+                from repro.kernels.sfc_fused import sfc_fused_conv2d
+                y = sfc_fused_conv2d(
+                    x, prep.wq, prep.act_scale, prep.w_scale, algo,
+                    padding=plan.spec.padding, bits=bits,
+                    interpret=plan.interpret,
+                    k_block=cfg.k_block or tuning.DEFAULT_FUSED.k_block,
+                    cout_block=cfg.cout_block)
             return _add_bias(y, bias)
         from repro.kernels.sfc_inverse import sfc_inverse
         from repro.kernels.sfc_transform import sfc_transform

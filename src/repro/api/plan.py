@@ -80,6 +80,7 @@ class ConvPlan:
     algorithm: Optional[BilinearAlgorithm]    # None = direct path
     interpret: bool = True                    # Pallas interpret mode (CPU)
     cost: Optional[float] = None              # planner's BOPs estimate
+    config: Optional[Any] = None              # tuning.KernelConfig (measured)
     _prep_cache: Dict[tuple, Any] = dataclasses.field(
         default_factory=dict, repr=False)
     _prep_lock: threading.Lock = dataclasses.field(

@@ -5,14 +5,19 @@ Algorithm resolution happens in one place, for every call site:
   * shapes a fast algorithm cannot serve (stride != 1, pointwise 1x1,
     kernel-tap mismatch with the requested algorithm) degrade gracefully
     to the direct path — callers never re-implement that branch;
-  * ``algo="auto"`` ranks the registered candidates with the paper's BOPs
-    cost model (``repro.quant.bops``: transform adds + element-wise MACs
-    + inverse adds, tile geometry included via ceil(H/M) tiling) against
-    the direct baseline, at the spec's precision.  Under int8-or-lower
-    transform-domain quantization, Winograd candidates are excluded: their
-    transform dynamic range makes low-precision execution inaccurate
-    (paper Fig. 5; Fernandez-Marques et al., 2020), so selecting them on
-    BOPs alone would win the cost model and lose the model accuracy.
+  * measured wall-clock from the tuning cache (``repro.api.tuning``)
+    takes precedence: if this (spec, backend) has been autotuned on this
+    host, ``algo="auto"`` picks the fastest measured algorithm and the
+    plan carries the winning kernel config;
+  * otherwise ``algo="auto"`` ranks the registered candidates with the
+    paper's BOPs cost model (``repro.quant.bops``: transform adds +
+    element-wise MACs + inverse adds, tile geometry included via
+    ceil(H/M) tiling) against the direct baseline, at the spec's
+    precision.  Under int8-or-lower transform-domain quantization,
+    Winograd candidates are excluded: their transform dynamic range makes
+    low-precision execution inaccurate (paper Fig. 5; Fernandez-Marques
+    et al., 2020), so selecting them on BOPs alone would win the cost
+    model and lose the model accuracy.
 
 Plans are memoized on (spec, backend, algo, interpret) — specs are frozen
 dataclasses, so repeated call sites share one plan and its prepared-weight
@@ -62,8 +67,18 @@ def estimate_cost(spec: ConvSpec, algo_name: str) -> float:
     return 1.0 if algo is None else algo.arithmetic_complexity_2d
 
 
-def select_algorithm(spec: ConvSpec) -> str:
-    """Cheapest eligible algorithm for the spec (may be 'direct')."""
+def select_algorithm(spec: ConvSpec, backend: Optional[str] = None,
+                     interpret: bool = True) -> str:
+    """Cheapest eligible algorithm for the spec (may be 'direct').
+
+    With ``backend`` given, measured latencies from the tuning cache
+    (``repro.api.tuning``, keyed per interpret/compiled mode) take
+    precedence over the BOPs model — but only when the BOPs-best
+    candidate itself has been timed: a partial sweep (e.g. an autotune
+    restricted to one algorithm) must not hide a never-measured candidate
+    that the analytic model ranks first.  Untimed specs fall back to the
+    analytic ranking.
+    """
     if not spec.fast_eligible:
         return registry.DIRECT
     candidates = registry.entries(taps=spec.kernel_size)
@@ -76,6 +91,14 @@ def select_algorithm(spec: ConvSpec) -> str:
         cost = estimate_cost(spec, entry.name)
         if cost < best_cost:
             best_name, best_cost = entry.name, cost
+    if backend is not None:
+        from repro.api import tuning
+        measured = tuning.lookup(spec, backend, interpret)
+        eligible = {registry.DIRECT} | {e.name for e in candidates}
+        timed = {n: m["time_s"] for n, m in measured.items()
+                 if n in eligible}
+        if timed and best_name in timed:
+            return min(timed, key=timed.get)
     return best_name
 
 
@@ -91,17 +114,29 @@ def _plan_cached(spec: ConvSpec, backend: str, algo: str,
     if not spec.fast_eligible:
         name = registry.DIRECT
     elif algo == "auto":
-        name = select_algorithm(spec)
+        name = select_algorithm(spec, backend, interpret)
     elif algo == registry.DIRECT:
         name = registry.DIRECT
     else:
         name = algo if resolved.R == spec.kernel_size else registry.DIRECT
+    from repro.api import tuning
     return ConvPlan(spec=spec, backend=backend, algo_name=name,
                     algorithm=registry.get_algorithm(name),
-                    interpret=interpret, cost=estimate_cost(spec, name))
+                    interpret=interpret, cost=estimate_cost(spec, name),
+                    config=tuning.get_config(spec, backend, name, interpret))
 
 
 def plan(spec: ConvSpec, *, backend: str = "reference", algo: str = "auto",
          interpret: bool = True) -> ConvPlan:
     """Resolve a :class:`ConvSpec` into an executable :class:`ConvPlan`."""
     return _plan_cached(spec, backend, algo, interpret)
+
+
+def invalidate_plan_cache() -> None:
+    """Drop memoized plans.
+
+    The registry and the tuning cache call this when their state changes —
+    memoized plans embed algorithm selections and kernel configs resolved
+    against that state.
+    """
+    _plan_cached.cache_clear()

@@ -48,12 +48,13 @@ def register_algorithm(name: str, factory: Callable[[], BilinearAlgorithm],
         _ENTRIES[name] = AlgorithmEntry(name, factory, taps, kind)
         _INSTANCES.pop(name, None)
     # memoized plans may have auto-selected against the old registry state
-    # (no-op if the planner was never imported / is still importing:
+    # (no-op if the planner was never imported / is still importing —
+    # e.g. this very module being imported from planner's own top level:
     # no plans can exist yet)
     planner = sys.modules.get("repro.api.planner")
-    cache = getattr(planner, "_plan_cached", None)
-    if cache is not None:
-        cache.cache_clear()
+    invalidate = getattr(planner, "invalidate_plan_cache", None)
+    if invalidate is not None:
+        invalidate()
 
 
 def get_algorithm(name: str) -> Optional[BilinearAlgorithm]:

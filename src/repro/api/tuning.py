@@ -1,0 +1,303 @@
+"""Measured-latency autotuner feeding the planner (ROADMAP: cost model
+informed by measured timings rather than BOPs alone).
+
+The BOPs cost model ranks algorithms by arithmetic, which is blind to the
+memory behaviour that dominates deployed latency (HBM round-trips, padding
+waste, VMEM residency).  This module closes the loop:
+
+  * :func:`autotune` times candidate :class:`KernelConfig` s — fused vs
+    staged datapath and their block sizes — for one (ConvSpec, backend)
+    on the *actual* host, per registered algorithm (plus direct);
+  * results persist in a JSON timing cache (``REPRO_TUNING_CACHE`` env var,
+    default ``~/.cache/repro/tuning.json``) keyed on spec x backend x
+    device platform, so one calibration run serves every later process;
+  * ``planner.select_algorithm`` / ``plan`` consult :func:`lookup` /
+    :func:`get_config` AHEAD of the BOPs model whenever measurements
+    exist — measured wall-clock overrides the analytic ranking, and the
+    winning kernel config rides on the resulting ``ConvPlan``.
+
+Nothing here requires TPU: on the CPU container the kernels run in
+interpret mode and the measured numbers rank the same code paths the TPU
+executes (see EXPERIMENTS.md §Perf for methodology caveats).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import threading
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.spec import ConvSpec
+
+_ENV_CACHE = "REPRO_TUNING_CACHE"
+_DEFAULT_CACHE = os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                              "tuning.json")
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelConfig:
+    """One executable configuration of the pallas int8 datapath."""
+
+    datapath: str = "fused"       # 'fused' | 'staged'
+    tile_block: int = 8           # staged transform/inverse tile block
+    chan_block: int = 128         # staged transform/inverse channel block
+    k_block: Optional[int] = 128  # C_in reduction block (None = full K)
+    cout_block: int = 128         # fused C_out block
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: Dict) -> "KernelConfig":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in fields})
+
+
+DEFAULT_FUSED = KernelConfig()
+DEFAULT_STAGED = KernelConfig(datapath="staged", k_block=None)
+
+# default candidate sweep: the fused datapath at a few block shapes plus
+# the staged pipeline (full-K and k-blocked) as fallback candidates
+DEFAULT_CANDIDATES = (
+    KernelConfig(datapath="fused", k_block=128, cout_block=128),
+    KernelConfig(datapath="fused", k_block=256, cout_block=128),
+    KernelConfig(datapath="fused", k_block=128, cout_block=256),
+    KernelConfig(datapath="staged", k_block=None),
+    KernelConfig(datapath="staged", k_block=128),
+)
+
+_LOCK = threading.RLock()
+_STORE: Optional[Dict[str, Dict]] = None   # cache-file image, lazily loaded
+_PATH_OVERRIDE: Optional[str] = None
+
+
+def cache_path() -> str:
+    return _PATH_OVERRIDE or os.environ.get(_ENV_CACHE, _DEFAULT_CACHE)
+
+
+def set_cache_path(path: Optional[str]) -> None:
+    """Point the timing cache somewhere else (tests); None restores env."""
+    global _PATH_OVERRIDE, _STORE
+    with _LOCK:
+        _PATH_OVERRIDE = path
+        _STORE = None
+    _invalidate_plans()
+
+
+def clear() -> None:
+    """Drop in-memory measurements (the cache file is left untouched)."""
+    global _STORE
+    with _LOCK:
+        _STORE = {}
+    _invalidate_plans()
+
+
+def _invalidate_plans() -> None:
+    # memoized plans may have consulted stale measurements (late import:
+    # planner imports this module inside its functions)
+    from repro.api import planner
+    planner.invalidate_plan_cache()
+
+
+def _load() -> Dict[str, Dict]:
+    global _STORE
+    with _LOCK:
+        if _STORE is None:
+            try:
+                with open(cache_path()) as f:
+                    _STORE = json.load(f)
+            except (OSError, ValueError):
+                _STORE = {}
+        return _STORE
+
+
+def _save() -> None:
+    path = cache_path()
+    with _LOCK:
+        store = _STORE or {}
+        try:
+            if os.path.dirname(path):
+                os.makedirs(os.path.dirname(path), exist_ok=True)
+            tmp = path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(store, f, indent=1, sort_keys=True)
+            os.replace(tmp, path)
+        except OSError:
+            pass                      # read-only host: in-memory only
+
+
+def spec_key(spec: ConvSpec, backend: str, interpret: bool = True) -> str:
+    """Stable cache key: (workload, backend, device, interpret mode).
+
+    ``interpret`` is part of the key — interpret-mode (CPU emulation)
+    timings rank completely differently from compiled TPU kernels and
+    must never govern non-interpret plans.
+    """
+    q = spec.quant
+    qk = (f"a{q.bits_act}w{q.bits_weight}{q.act_granularity}"
+          f"-{q.weight_granularity}" if q.enabled else "fp32")
+    return (f"r{spec.rank}k{spec.kernel_size}s{spec.stride}"
+            f"p{spec.padding}ci{spec.in_channels}co{spec.out_channels}"
+            f"sp{spec.spatial}q{qk}|{backend}|{jax.default_backend()}"
+            f"|i{int(interpret)}")
+
+
+def lookup(spec: ConvSpec, backend: str,
+           interpret: bool = True) -> Dict[str, Dict]:
+    """Measured entries for (spec, backend): {algo_name: {time_s, config}}.
+
+    Empty dict when nothing has been measured — the planner then falls
+    back to the BOPs model.
+    """
+    return dict(_load().get(spec_key(spec, backend, interpret), {}))
+
+
+def get_config(spec: ConvSpec, backend: str, algo_name: str,
+               interpret: bool = True) -> Optional[KernelConfig]:
+    """Best measured kernel config for one algorithm, or None."""
+    entry = _load().get(spec_key(spec, backend, interpret),
+                        {}).get(algo_name)
+    if entry is None or "config" not in entry:
+        return None
+    return KernelConfig.from_json(entry["config"])
+
+
+def record(spec: ConvSpec, backend: str, algo_name: str, time_s: float,
+           config: Optional[KernelConfig] = None, *,
+           interpret: bool = True, persist: bool = True) -> None:
+    """Store one measurement (used by autotune; exposed for tests/offline
+    calibration imports).  Last measurement wins — a re-tune must be able
+    to correct entries that no longer reproduce (driver/library upgrades,
+    different host load), so older-but-faster times are NOT kept."""
+    store = _load()
+    key = spec_key(spec, backend, interpret)
+    with _LOCK:
+        entry = store.setdefault(key, {})
+        entry[algo_name] = {"time_s": float(time_s)}
+        if config is not None:
+            entry[algo_name]["config"] = config.to_json()
+    if persist:
+        _save()
+    _invalidate_plans()
+
+
+# --------------------------------------------------------------------------
+# measurement
+# --------------------------------------------------------------------------
+def time_fn(fn, *args, reps: int = 3) -> float:
+    """Mean wall-clock of ``fn(*args)`` after one warmup (compile) call.
+
+    The one timing protocol shared by the autotuner and the benchmarks
+    (``benchmarks/table3_throughput.py``).
+    """
+    jax.block_until_ready(fn(*args))              # compile + warm up once
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def calibrate_act_scale(x: jnp.ndarray, algo, quant,
+                        padding: str = "SAME") -> jnp.ndarray:
+    """Absmax per-frequency activation scales (t, t) from one batch.
+
+    Single-batch stand-in for PTQ calibration (``repro.quant.ptq``) used
+    by the autotuner, benchmarks, and tests; respects ``quant.bits_act``.
+    """
+    from repro.core import conv2d as c2d
+    from repro.quant.fake_quant import qmax_for_bits
+    tx, _ = c2d.transform_input_2d(x, algo, padding)
+    return jnp.abs(tx).max(axis=(0, 1, 2, 5)) \
+        / qmax_for_bits(quant.bits_act) + 1e-9
+
+
+def _synthetic_operands(spec: ConvSpec, seed: int = 0):
+    if spec.rank != 2 or spec.in_channels is None \
+            or spec.out_channels is None or spec.spatial is None:
+        raise ValueError(
+            "autotune needs a fully-hinted rank-2 spec (in/out channels "
+            f"and spatial extents): {spec}")
+    rng = np.random.RandomState(seed)
+    H, W = spec.spatial
+    x = jnp.asarray(rng.randn(1, H, W, spec.in_channels), jnp.float32)
+    w = jnp.asarray(
+        rng.randn(spec.kernel_size, spec.kernel_size, spec.in_channels,
+                  spec.out_channels) * 0.1, jnp.float32)
+    return x, w
+
+
+def _measure_plan(p, x, w, reps: int) -> float:
+    if p.spec.quant.enabled and p.algorithm is not None:
+        # absmax calibration on the synthetic batch itself — the timing is
+        # scale-agnostic, only the datapath matters
+        act_scale = calibrate_act_scale(x, p.algorithm, p.spec.quant,
+                                        p.spec.padding)
+        prep = p.prepare_weights(w, act_scale=act_scale)
+    else:
+        prep = p.prepare_weights(w)
+    # one jit around the whole apply: the direct/reference paths are
+    # otherwise eager, and dispatch overhead would skew the ranking
+    return time_fn(jax.jit(lambda a: p.apply(a, prep)), x, reps=reps)
+
+
+def autotune(spec: ConvSpec, backend: str = "pallas", *,
+             algos: Optional[Sequence[str]] = None,
+             candidates: Sequence[KernelConfig] = DEFAULT_CANDIDATES,
+             include_direct: bool = True, reps: int = 3,
+             interpret: bool = True, persist: bool = True,
+             log=None) -> Dict[str, Dict]:
+    """Measure candidate configs for ``spec`` and persist the winners.
+
+    Times every (algorithm, config) pair on synthetic operands, records
+    the fastest config per algorithm (plus the direct path), and returns
+    the resulting ``lookup(spec, backend)`` entries.  Subsequent
+    ``plan(spec, backend=..., algo='auto')`` calls rank by these measured
+    latencies instead of BOPs.  The cache file is written once at the end
+    (an interrupted run persists nothing, so a partial sweep cannot skew
+    the planner across processes), with the direct baseline measured
+    first.
+    """
+    from repro.api import planner, registry
+    x, w = _synthetic_operands(spec)
+    if algos is None:
+        algos = [e.name for e in registry.entries(taps=spec.kernel_size)]
+    results: Dict[str, Dict] = {}
+    if include_direct:
+        p = planner.plan(spec, backend=backend, algo="direct",
+                         interpret=interpret)
+        dt = _measure_plan(p, x, w, reps)
+        if log:
+            log(f"autotune direct: {dt*1e3:.2f}ms")
+        record(spec, backend, "direct", dt, interpret=interpret,
+               persist=False)
+        results["direct"] = {"time_s": dt}
+    for name in algos:
+        best: Optional[float] = None
+        best_cfg: Optional[KernelConfig] = None
+        for cfg in candidates:
+            p = dataclasses.replace(
+                planner.plan(spec, backend=backend, algo=name,
+                             interpret=interpret),
+                config=cfg)
+            if p.algorithm is None:        # spec degraded to direct
+                continue
+            dt = _measure_plan(p, x, w, reps)
+            if log:
+                log(f"autotune {name} {cfg.datapath}"
+                    f"(k={cfg.k_block},co={cfg.cout_block}): {dt*1e3:.2f}ms")
+            if best is None or dt < best:
+                best, best_cfg = dt, cfg
+        if best is not None:
+            record(spec, backend, name, best, best_cfg,
+                   interpret=interpret, persist=False)
+            results[name] = {"time_s": best, "config": best_cfg.to_json()}
+    if persist:
+        _save()
+    return results

@@ -14,6 +14,7 @@ from repro.kernels.ops import extract_tiles, quantize_weights, untile
 from repro.kernels.sfc_transform import sfc_transform, sfc_transform_quantize
 from repro.kernels.sfc_tdmm import tdmm_int8
 from repro.kernels.sfc_inverse import sfc_inverse
+from repro.kernels.sfc_fused import sfc_fused_conv2d
 from repro.kernels import ref
 
 quantized_fastconv2d = _deprecated(
@@ -25,6 +26,6 @@ fastconv2d_fp = _deprecated(
 
 __all__ = [
     "sfc_transform", "sfc_transform_quantize", "tdmm_int8", "sfc_inverse",
-    "quantized_fastconv2d", "fastconv2d_fp", "quantize_weights",
-    "extract_tiles", "untile", "ref",
+    "sfc_fused_conv2d", "quantized_fastconv2d", "fastconv2d_fp",
+    "quantize_weights", "extract_tiles", "untile", "ref",
 ]

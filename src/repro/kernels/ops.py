@@ -37,11 +37,13 @@ def extract_tiles(x: jnp.ndarray, algo: BilinearAlgorithm,
     xp = jnp.pad(x, ((0, 0), (lo_h, hi_h), (lo_w, hi_w), (0, 0)))
     nH = (xp.shape[1] - (R - 1)) // M
     nW = (xp.shape[2] - (R - 1)) // M
-    ih = np.arange(nH)[:, None] * M + np.arange(L)[None, :]
-    iw = np.arange(nW)[:, None] * M + np.arange(L)[None, :]
-    tiles = xp[:, ih, :, :][:, :, :, iw, :]
-    tiles = jnp.transpose(tiles, (0, 1, 3, 2, 4, 5)).reshape(
-        B * nH * nW, L, L, C)
+    # single gather directly into (B, nH, nW, L, L, C) — the chained
+    # xp[:, ih][:, :, :, iw] form materialized an extra (B, nH, L, Wp, C)
+    # intermediate and needed a transpose afterwards
+    ih = np.arange(nH)[:, None] * M + np.arange(L)[None, :]   # (nH, L)
+    iw = np.arange(nW)[:, None] * M + np.arange(L)[None, :]   # (nW, L)
+    tiles = xp[:, ih[:, None, :, None], iw[None, :, None, :], :]
+    tiles = tiles.reshape(B * nH * nW, L, L, C)
     return tiles, (B, out_h, out_w, nH, nW)
 
 
@@ -63,30 +65,43 @@ def quantize_weights(w: jnp.ndarray, algo: BilinearAlgorithm,
     return quantize_transformed_weights(tw, w_scale, bits)
 
 
-@functools.partial(jax.jit, static_argnames=("algo", "padding", "interpret"))
+@functools.partial(jax.jit, static_argnames=("algo", "padding", "bits",
+                                             "interpret", "k_block",
+                                             "tile_block", "chan_block"))
 def quantized_fastconv2d(x: jnp.ndarray, wq: jnp.ndarray,
                          act_scale: jnp.ndarray, w_scale: jnp.ndarray,
                          algo: BilinearAlgorithm, *,
-                         padding: str = "SAME",
-                         interpret: bool = True) -> jnp.ndarray:
-    """int8 SFC convolution with pre-quantized weights.
+                         padding: str = "SAME", bits: int = 8,
+                         interpret: bool = True,
+                         k_block: Optional[int] = None,
+                         tile_block: int = 8,
+                         chan_block: int = 128) -> jnp.ndarray:
+    """int8 SFC convolution with pre-quantized weights (staged pipeline).
 
     x (B,H,W,Cin) f32; wq (t^2, Cin, Cout) int8; act_scale (t,t);
-    w_scale (t,t,Cout) -> (B,H',W',Cout) f32.
+    w_scale (t,t,Cout) -> (B,H',W',Cout) f32.  ``bits`` sets the
+    activation clipping grid (sub-int8 policies run on the int8 carrier);
+    ``k_block`` bounds the C_in VMEM residency of the transform-domain
+    matmul (see ``tdmm_int8``); ``tile_block``/``chan_block`` block the
+    transform/inverse stages.
     """
     t = algo.t
     bt = jnp.asarray(algo.bt(), jnp.float32)
     at = jnp.asarray(algo.at(), jnp.float32)
     tiles, geom = extract_tiles(x, algo, padding)
-    xq = sfc_transform_quantize(tiles, bt, act_scale, interpret=interpret)
+    xq = sfc_transform_quantize(tiles, bt, act_scale, bits=bits,
+                                interpret=interpret, tile_block=tile_block,
+                                chan_block=chan_block)
     T = xq.shape[0]
     C = xq.shape[-1]
     X = jnp.transpose(xq.reshape(T, t * t, C), (1, 0, 2))   # (P, T, C)
     Y = tdmm_int8(X, wq, act_scale.reshape(t * t),
-                  w_scale.reshape(t * t, -1), interpret=interpret)
+                  w_scale.reshape(t * t, -1), interpret=interpret,
+                  k_block=k_block)
     O = Y.shape[-1]
     ty = jnp.transpose(Y, (1, 0, 2)).reshape(T, t, t, O)
-    y_tiles = sfc_inverse(ty, at, interpret=interpret)
+    y_tiles = sfc_inverse(ty, at, interpret=interpret,
+                          tile_block=tile_block, chan_block=chan_block)
     return untile(y_tiles, algo, geom)
 
 

@@ -1,0 +1,199 @@
+"""Pallas TPU kernel: the int8 SFC convolution as ONE fused ``pallas_call``.
+
+The staged pipeline (``repro.kernels.ops.quantized_fastconv2d``) runs three
+kernels with two full HBM round-trips of the transform-domain tensor in
+between — t^2/M^2 times the input footprint (3.06x for SFC-4(4x4,3x3),
+2.78x for SFC-6(6x6,3x3)) — and feeds the first kernel a materialized tile
+tensor that duplicates every input element L^2/M^2 times (2.25x / 1.78x).
+This kernel keeps the whole pipeline on-chip (EXPERIMENTS.md §Perf):
+
+  grid = (B * nH, C_out blocks, C_in k-blocks), k innermost
+
+Per grid step it
+  * reads one overlapping (L, W_padded, k_block) input strip straight from
+    HBM via an Unblocked BlockSpec index map at row stride M — tiles are
+    never materialized;
+  * applies the additions-only B^T X B transform per tile column and the
+    fused per-frequency intN quantization in VMEM/registers; the quantized
+    int8 strips are cached in a VMEM scratch across C_out blocks (bounded
+    by ``XQ_CACHE_BYTES``; recomputed per block when they do not fit), so
+    the transform runs once per (tile-row, k-block), not once per output
+    block;
+  * runs the t^2-position int8 MXU matmuls against the matching weight
+    k-block and accumulates into an int32 VMEM scratch that persists across
+    the C_in k-blocks — so full-K VMEM residency (which caps the staged
+    ``tdmm_int8`` near C_in ~ 2048) is never required;
+  * on the last k-block dequantizes with the static per-frequency scales
+    and applies the correction-term inverse A^T Y A, writing one spatial
+    (M, nW*M) output strip.
+
+The transform-domain tensor therefore never touches HBM.
+
+VMEM budget per grid step (f32 in, defaults K_BLOCK=COUT_BLOCK=128, the
+VGG-16 224x224 worst case with SFC-6(7x7,3x3): L=9, t=12, nW=32, Wp=226):
+  input strip : 9 * 226 * 128 * 4B          = 1.0 MiB
+  row xform   : 12 * 226 * 128 * 4B         = 1.4 MiB
+  xq cache    : <= XQ_CACHE_BYTES           = 4.0 MiB
+  weights     : 144 * 128 * 128 * 1B        = 2.3 MiB
+  int32 acc   : 144 * 32 * 128 * 4B         = 2.3 MiB
+  out strip   : 7 * 224 * 128 * 4B          = 0.8 MiB    (~12 MiB < 16 MiB)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import conv2d as c2d
+from repro.core.generator import BilinearAlgorithm
+
+K_BLOCK = 128
+COUT_BLOCK = 128
+# cap on the quantized-strip cache that amortizes the input transform
+# across C_out blocks (full-K int8 residency of ONE tile-row strip)
+XQ_CACHE_BYTES = 4 * 1024 * 1024
+
+
+def _round_up(n: int, mult: int) -> int:
+    return -(-n // mult) * mult
+
+
+def _fused_kernel(bt_ref, at_ref, sx_ref, sw_ref, x_ref, w_ref, o_ref,
+                  acc_ref, *scratch, n_w: int, M: int, L: int, bits: int,
+                  n_k: int, cache_xq: bool):
+    """One (tile-row, C_out block, C_in block) step of the fused pipeline.
+
+    ``scratch`` holds the quantized-strip cache ref only when ``cache_xq``
+    (the wrapper allocates it conditionally).
+    """
+    j = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    bt = bt_ref[...]                               # (t, L)
+    t = bt.shape[0]
+    s = sx_ref[...]                                # (t, t)
+    qmax = 2 ** (bits - 1) - 1
+
+    def _quantized_strip():
+        x = x_ref[0]                               # (L, Wp, kb) f32
+        # row transform once for the whole strip; every tile column
+        # reuses it
+        rows = jnp.einsum("ti,iwc->twc", bt, x,
+                          preferred_element_type=jnp.float32)
+        q_cols = []
+        for jj in range(n_w):                      # static unroll: tile cols
+            tx = jnp.einsum("uj,tjc->tuc", bt, rows[:, jj * M:jj * M + L, :],
+                            preferred_element_type=jnp.float32)
+            q = jnp.clip(jnp.round(tx / s[:, :, None]), -qmax, qmax)
+            q_cols.append(q.reshape(t * t, -1))    # (P, kb)
+        return jnp.stack(q_cols, axis=1).astype(jnp.int8)   # (P, nW, kb)
+
+    if cache_xq:
+        # strips depend on (tile-row, k) only: compute on the first C_out
+        # block, replay from VMEM for the rest
+        xq_ref, = scratch
+
+        @pl.when(j == 0)
+        def _fill_cache():
+            xq_ref[k] = _quantized_strip()
+        xq = xq_ref[k]
+    else:
+        xq = _quantized_strip()
+    w = w_ref[...]                                     # (P, kb, cb) int8
+    acc_ref[...] += jax.lax.dot_general(
+        xq, w, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.int32)              # (P, nW, cb)
+
+    @pl.when(k == n_k - 1)
+    def _finalize():
+        at = at_ref[...]                           # (M, t)
+        sw = sw_ref[...]                           # (P, cb)
+        scale = s.reshape(t * t)[:, None, None] * sw[:, None, :]
+        y = acc_ref[...].astype(jnp.float32) * scale   # (P, nW, cb)
+        ty = y.reshape(t, t, n_w, -1)
+        z = jnp.einsum("mt,tunc->munc", at, ty,
+                       preferred_element_type=jnp.float32)
+        z = jnp.einsum("pu,munc->mnpc", at, z,
+                       preferred_element_type=jnp.float32)  # (M, nW, M, cb)
+        o_ref[0] = z.reshape(M, n_w * M, -1).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("algo", "padding", "bits",
+                                             "interpret", "k_block",
+                                             "cout_block"))
+def sfc_fused_conv2d(x: jnp.ndarray, wq: jnp.ndarray,
+                     act_scale: jnp.ndarray, w_scale: jnp.ndarray,
+                     algo: BilinearAlgorithm, *,
+                     padding: str = "SAME", bits: int = 8,
+                     interpret: bool = True,
+                     k_block: int = K_BLOCK,
+                     cout_block: int = COUT_BLOCK) -> jnp.ndarray:
+    """int8 SFC convolution in one ``pallas_call``.
+
+    x (B, H, W, Cin) f32; wq (t^2, Cin, Cout) int8; act_scale (t, t);
+    w_scale (t, t, Cout) -> (B, H', W', Cout) f32.  Numerically identical
+    to the staged ``quantized_fastconv2d`` (same integer grid and scales).
+    ``bits`` sets the activation clipping grid (sub-int8 policies run on
+    the int8 carrier).
+    """
+    B, H, W, C = x.shape
+    t, M, R, L = algo.t, algo.M, algo.R, algo.L
+    P = t * t
+    assert wq.shape[0] == P and wq.shape[1] == C, (wq.shape, P, C)
+    Cout = wq.shape[2]
+    lo_h, hi_h, out_h = c2d.pad_amounts(H, M, R, padding)
+    lo_w, hi_w, out_w = c2d.pad_amounts(W, M, R, padding)
+    xp = jnp.pad(x, ((0, 0), (lo_h, hi_h), (lo_w, hi_w), (0, 0)))
+    nH = (xp.shape[1] - (R - 1)) // M
+    nW = (xp.shape[2] - (R - 1)) // M
+    Wp = xp.shape[2]
+
+    # channel blocking (both dims padded with zeros; zero channels quantize
+    # to zero / carry zero scales, so they contribute nothing)
+    kb = min(k_block, _round_up(C, 8))
+    Cp = _round_up(C, kb)
+    cb = min(cout_block, _round_up(Cout, 8))
+    Op = _round_up(Cout, cb)
+    n_k = Cp // kb
+    n_o = Op // cb
+    xp = jnp.pad(xp, ((0, 0), (0, 0), (0, 0), (0, Cp - C)))
+    wqp = jnp.pad(wq, ((0, 0), (0, Cp - C), (0, Op - Cout)))
+    sw = jnp.pad(w_scale.reshape(P, Cout).astype(jnp.float32),
+                 ((0, 0), (0, Op - Cout)))
+
+    cache_xq = n_o > 1 and n_k * P * nW * kb <= XQ_CACHE_BYTES
+    kern = functools.partial(_fused_kernel, n_w=nW, M=M, L=L, bits=bits,
+                             n_k=n_k, cache_xq=cache_xq)
+    out = pl.pallas_call(
+        kern,
+        grid=(B * nH, n_o, n_k),
+        in_specs=[
+            pl.BlockSpec((t, L), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((M, t), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((t, t), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((P, cb), lambda i, j, k: (0, j)),
+            # overlapping (L, Wp) input strips at row stride M, straight
+            # from HBM — element-offset (Unblocked) index map
+            pl.BlockSpec((1, L, Wp, kb),
+                         lambda i, j, k, _nH=nH: (i // _nH, (i % _nH) * M,
+                                                  0, k * kb),
+                         indexing_mode=pl.Unblocked()),
+            pl.BlockSpec((P, kb, cb), lambda i, j, k: (0, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, M, nW * M, cb),
+                               lambda i, j, k, _nH=nH: (i // _nH, i % _nH,
+                                                        0, j)),
+        out_shape=jax.ShapeDtypeStruct((B, nH * M, nW * M, Op), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((P, nW, cb), jnp.int32)] + (
+            [pltpu.VMEM((n_k, P, nW, kb), jnp.int8)] if cache_xq else []),
+        interpret=interpret,
+    )(jnp.asarray(algo.bt(), jnp.float32), jnp.asarray(algo.at(), jnp.float32),
+      act_scale.astype(jnp.float32), sw, xp, wqp)
+    return out[:, :out_h, :out_w, :Cout]

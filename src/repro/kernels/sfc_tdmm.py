@@ -1,7 +1,7 @@
 """Pallas TPU kernel: transform-domain int8 matmul with fused dequant.
 
-The MXU hot spot of the SFC pipeline: for each transform-domain position
-p in [0, t^2) an independent GEMM
+The MXU hot spot of the staged SFC pipeline: for each transform-domain
+position p in [0, t^2) an independent GEMM
 
     Y[p] = dequant( X[p] @ W[p] )        X: (T, K) int8, W: (K, N) int8
 
@@ -10,18 +10,24 @@ activation scale sx[p] and per-frequency-per-channel weight scales sw[p, :]
 (paper Eq. 17).  Compared to direct int8 convolution, this stage runs
 t^2 / (M^2 R^2) = 1/3.24x fewer MACs for SFC-6(6x6,3x3).
 
-Blocking: grid (P, T/bt, N/bn) with the full K (C_in) dimension resident —
-for bt = bn = 128, K = 2048: 256 KiB int8 X + 256 KiB W + 64 KiB int32 acc,
-comfortably within a v5e core's 16 MiB VMEM. MXU dims (bt, K, bn) are all
-128-multiples.
+Blocking: grid (P, T/bt, N/bn[, K/bk]).  With ``k_block=None`` the full K
+(C_in) dimension is resident per step — for bt = bn = 128, K = 2048:
+256 KiB int8 X + 256 KiB W + 64 KiB int32 acc, comfortably within a v5e
+core's 16 MiB VMEM, but K much beyond that blows the budget.  Passing
+``k_block`` adds an innermost reduction grid dimension that accumulates
+partial products into an int32 VMEM scratch and dequantizes on the last
+k step, bounding VMEM residency at O(bt*bk + bk*bn) regardless of C_in.
+MXU dims (bt, bk, bn) should be 128-multiples on real hardware.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 T_BLOCK = 128
 N_BLOCK = 128
@@ -37,6 +43,26 @@ def _tdmm_kernel(x_ref, w_ref, sx_ref, sw_ref, o_ref):
     o_ref[0] = acc.astype(jnp.float32) * scale[None, :]
 
 
+def _tdmm_kblock_kernel(x_ref, w_ref, sx_ref, sw_ref, o_ref, acc_ref, *,
+                        n_k: int):
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0]                                     # (bt, bk) int8
+    w = w_ref[0]                                     # (bk, bn) int8
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)            # (bt, bn) int32
+
+    @pl.when(k == n_k - 1)
+    def _dequant():
+        scale = sx_ref[0] * sw_ref[0]                # (bn,) f32
+        o_ref[0] = acc_ref[...].astype(jnp.float32) * scale[None, :]
+
+
 def _pad_to(x, axis, mult):
     pad = (-x.shape[axis]) % mult
     if pad == 0:
@@ -47,10 +73,11 @@ def _pad_to(x, axis, mult):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "t_block",
-                                             "n_block"))
+                                             "n_block", "k_block"))
 def tdmm_int8(xq: jnp.ndarray, wq: jnp.ndarray, sx: jnp.ndarray,
               sw: jnp.ndarray, *, interpret: bool = True,
-              t_block: int = T_BLOCK, n_block: int = N_BLOCK) -> jnp.ndarray:
+              t_block: int = T_BLOCK, n_block: int = N_BLOCK,
+              k_block: Optional[int] = None) -> jnp.ndarray:
     """X (P, T, K) int8 x W (P, K, N) int8 -> (P, T, N) f32."""
     P, T, K = xq.shape
     _, _, N = wq.shape
@@ -59,18 +86,45 @@ def tdmm_int8(xq: jnp.ndarray, wq: jnp.ndarray, sx: jnp.ndarray,
     wq = _pad_to(wq, 2, n_block)
     sw_p = _pad_to(sw, 1, n_block)
     Tp, Np = xq.shape[1], wq.shape[2]
+    sx = sx.astype(jnp.float32)
+    sw_p = sw_p.astype(jnp.float32)
+    if k_block is None or k_block >= K:
+        out = pl.pallas_call(
+            _tdmm_kernel,
+            grid=(P, Tp // t_block, Np // n_block),
+            in_specs=[
+                pl.BlockSpec((1, t_block, K), lambda p, i, j: (p, i, 0)),
+                pl.BlockSpec((1, K, n_block), lambda p, i, j: (p, 0, j)),
+                pl.BlockSpec((1,), lambda p, i, j: (p,)),
+                pl.BlockSpec((1, n_block), lambda p, i, j: (p, j)),
+            ],
+            out_specs=pl.BlockSpec((1, t_block, n_block),
+                                   lambda p, i, j: (p, i, j)),
+            out_shape=jax.ShapeDtypeStruct((P, Tp, Np), jnp.float32),
+            interpret=interpret,
+        )(xq, wq, sx, sw_p)
+        return out[:, :T, :N]
+    # k-blocked reduction: zero-padded K tail contributes nothing
+    xq = _pad_to(xq, 2, k_block)
+    wq = _pad_to(wq, 1, k_block)
+    Kp = xq.shape[2]
+    n_k = Kp // k_block
+    kern = functools.partial(_tdmm_kblock_kernel, n_k=n_k)
     out = pl.pallas_call(
-        _tdmm_kernel,
-        grid=(P, Tp // t_block, Np // n_block),
+        kern,
+        grid=(P, Tp // t_block, Np // n_block, n_k),
         in_specs=[
-            pl.BlockSpec((1, t_block, K), lambda p, i, j: (p, i, 0)),
-            pl.BlockSpec((1, K, n_block), lambda p, i, j: (p, 0, j)),
-            pl.BlockSpec((1,), lambda p, i, j: (p,)),
-            pl.BlockSpec((1, n_block), lambda p, i, j: (p, j)),
+            pl.BlockSpec((1, t_block, k_block),
+                         lambda p, i, j, k: (p, i, k)),
+            pl.BlockSpec((1, k_block, n_block),
+                         lambda p, i, j, k: (p, k, j)),
+            pl.BlockSpec((1,), lambda p, i, j, k: (p,)),
+            pl.BlockSpec((1, n_block), lambda p, i, j, k: (p, j)),
         ],
         out_specs=pl.BlockSpec((1, t_block, n_block),
-                               lambda p, i, j: (p, i, j)),
+                               lambda p, i, j, k: (p, i, j)),
         out_shape=jax.ShapeDtypeStruct((P, Tp, Np), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((t_block, n_block), jnp.int32)],
         interpret=interpret,
-    )(xq, wq, sx.astype(jnp.float32), sw_p.astype(jnp.float32))
+    )(xq, wq, sx, sw_p)
     return out[:, :T, :N]

@@ -60,12 +60,14 @@ def main():
     serve = jax.jit(model.decode_step, donate_argnums=(1,))
     cache = model.init_cache(params, args.batch, args.max_len, memory)
 
-    # continuous batching state (host side)
+    # continuous batching state (host side); the initial fill respects the
+    # --requests budget too — surplus slots simply idle
     prompts = [queue.next_prompt() for _ in range(args.batch)]
     pos = np.zeros(args.batch, np.int32)
     remaining = np.full(args.batch, args.gen, np.int32)
     tok = np.array([[p[0]] for p in prompts], np.int32)
-    started = args.batch
+    started = min(args.batch, args.requests)
+    active = np.arange(args.batch) < started
     done = 0
     t0 = time.time()
     steps = 0
@@ -75,6 +77,8 @@ def main():
         nxt = np.asarray(jnp.argmax(logits[:, -1], -1), np.int32)
         steps += 1
         for i in range(args.batch):
+            if not active[i]:                      # drained slot: budget hit
+                continue
             pos[i] += 1
             if pos[i] < len(prompts[i]):           # still consuming prompt
                 tok[i, 0] = prompts[i][pos[i]]
@@ -83,16 +87,27 @@ def main():
                 remaining[i] -= 1
             else:                                   # finished -> swap in new
                 done += 1
-                if done + args.batch <= args.requests or True:
+                if started < args.requests:        # admit within the budget
                     prompts[i] = queue.next_prompt()
                     pos[i] = 0
                     remaining[i] = args.gen
                     tok[i, 0] = prompts[i][0]
                     started += 1
-            if pos[i] >= args.max_len - 1:          # safety wrap
-                pos[i] = 0
-                prompts[i] = queue.next_prompt()
-                remaining[i] = args.gen
+                else:                               # budget reached: drain
+                    active[i] = False
+            if active[i] and pos[i] >= args.max_len - 1:
+                # safety wrap: the sequence hit the KV budget — count the
+                # truncated request and admit a replacement only within
+                # the same budget as the normal completion path above
+                done += 1
+                if started < args.requests:
+                    pos[i] = 0
+                    prompts[i] = queue.next_prompt()
+                    remaining[i] = args.gen
+                    tok[i, 0] = prompts[i][0]
+                    started += 1
+                else:
+                    active[i] = False
     dt = time.time() - t0
     print(f"served {done} requests in {dt:.1f}s "
           f"({steps} steps, {args.batch*steps/dt:.0f} tok/s on "

@@ -20,3 +20,17 @@ def _clear_jax_caches_per_module():
     yield
     jax.clear_caches()
     gc.collect()
+
+
+@pytest.fixture(autouse=True)
+def _isolated_tuning_cache(tmp_path):
+    """Hermetic measured-latency cache for every test.
+
+    ``plan(..., algo="auto")`` consults the tuning cache ahead of the BOPs
+    model, so without this a prior ``autotune`` run on the host (or a test
+    that records measurements) would change other tests' auto-selections.
+    """
+    from repro.api import tuning
+    tuning.set_cache_path(str(tmp_path / "tuning.json"))
+    yield
+    tuning.set_cache_path(None)
