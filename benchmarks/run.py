@@ -6,7 +6,9 @@
 ``table3`` additionally writes the machine-readable per-layer conv sweep
 ``BENCH_conv.json`` (path via ``REPRO_BENCH_OUT``; reduced shapes via
 ``REPRO_BENCH_SPATIAL_CAP``, default 28) — the artifact CI uploads to
-track the perf trajectory across PRs.
+track the perf trajectory across PRs.  ``scaleout`` appends the SPMD
+per-shard-count rows to the same artifact (forced host-device mesh on
+single-device hosts).
 """
 import sys
 import time
@@ -14,8 +16,9 @@ import time
 
 def main() -> None:
     from benchmarks import (appendixB_iterative, fig4_accuracy_vs_bops,
-                            fig5_layer_mse, roofline, table1_algorithms,
-                            table3_throughput, table45_granularity)
+                            fig5_layer_mse, roofline, scaleout,
+                            table1_algorithms, table3_throughput,
+                            table45_granularity)
     suites = {
         "table1": table1_algorithms.run,
         "fig4": fig4_accuracy_vs_bops.run,
@@ -24,6 +27,7 @@ def main() -> None:
         "fig5": fig5_layer_mse.run,
         "appendixB": appendixB_iterative.run,
         "roofline": roofline.run,
+        "scaleout": scaleout.run,
     }
     selected = sys.argv[1:] or list(suites)
     t0 = time.time()

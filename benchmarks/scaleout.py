@@ -1,0 +1,135 @@
+"""SPMD scale-out sweep: the ``pallas_spmd`` backend across shard counts.
+
+Runs one int8 SFC conv workload on 1/2/4/8-way meshes, sharding the batch
+over 'data' or C_out over 'model', and appends per-shard-count rows to
+``BENCH_conv.json`` (key ``"scaleout"``) next to the per-layer sweep from
+``table3_throughput`` — the artifact CI uploads to track the perf
+trajectory.
+
+Needs multiple devices.  When the process owns only one, it re-execs
+itself in a subprocess with a *forced host-device mesh*
+(``XLA_FLAGS=--xla_force_host_platform_device_count=N`` — CPU "devices"
+are host threads, so intra-host speedup is NOT the point; the rows track
+per-shard correctness (every row asserts bit-identity against the
+single-device backend) and the shard_map dispatch overhead trajectory).
+On real multi-chip hosts the same sweep measures actual scaling.
+
+  PYTHONPATH=src python -m benchmarks.run scaleout
+  REPRO_SCALEOUT_DEVICES=4 PYTHONPATH=src python -m benchmarks.scaleout
+"""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import numpy as np
+
+DEVICES = int(os.environ.get("REPRO_SCALEOUT_DEVICES", "8"))
+BENCH_PATH = os.environ.get("REPRO_BENCH_OUT", "BENCH_conv.json")
+
+
+def _sweep(log) -> list:
+    """Time the workload per (shards, axis); asserts single-device parity."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.api import ConvSpec, get_backend, plan
+    from repro.api.tuning import calibrate_act_scale, time_fn
+    from repro.launch.mesh import make_forced_host_mesh
+    from repro.quant import INT8_FREQ
+
+    n = len(jax.devices())
+    hw = int(os.environ.get("REPRO_BENCH_SPATIAL_CAP", "28"))
+    reps = int(os.environ.get("REPRO_BENCH_REPS", "2"))
+    B, cin, cout = 8, 64, 128
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(B, hw, hw, cin), jnp.float32)
+    w = jnp.asarray(rng.randn(3, 3, cin, cout) * 0.1, jnp.float32)
+    spec = ConvSpec.for_conv2d(x.shape, w.shape, quant=INT8_FREQ)
+
+    def measure(p):
+        act = calibrate_act_scale(x, p.algorithm, spec.quant)
+        prep = p.prepare_weights(w, act_scale=act)
+        y = p.apply(x, prep)
+        dt = time_fn(jax.jit(lambda a: p.apply(a, prep)), x, reps=reps)
+        return dt, y
+
+    base_ms, y_ref = measure(plan(spec, backend="pallas", algo="sfc6_6"))
+    base_ms *= 1e3
+    rows = [{"shards": 1, "axis": None, "backend": "pallas",
+             "ms": base_ms, "bit_identical": True}]
+    log(f"scaleout shards=1 (single-device pallas): {base_ms:.2f}ms")
+
+    backend = get_backend("pallas_spmd")
+    try:
+        for shards in (s for s in (1, 2, 4, 8) if s <= n):
+            # shards=1 collapses both axes to the same (1, 1) mesh — one
+            # row (the spmd dispatch overhead at 1 shard) is enough
+            for axis in (("data",) if shards == 1 else ("data", "model")):
+                shape = (shards, 1) if axis == "data" else (1, shards)
+                backend.set_mesh(make_forced_host_mesh(shape))
+                dt, y = measure(plan(spec, backend="pallas_spmd",
+                                     algo="sfc6_6"))
+                same = bool(jnp.all(y == y_ref))
+                rows.append({"shards": shards, "axis": axis,
+                             "backend": "pallas_spmd", "ms": dt * 1e3,
+                             "bit_identical": same})
+                log(f"scaleout shards={shards} axis={axis}: "
+                    f"{dt*1e3:.2f}ms bit_identical={same}")
+                assert same, f"SPMD output diverged at {shards}x{axis}"
+    finally:
+        backend.set_mesh(None)
+    return rows
+
+
+def _respawn(log) -> list:
+    """Re-exec in a subprocess with forced host devices; collect rows."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count={DEVICES}"
+                        ).strip()
+    fd, out = tempfile.mkstemp(suffix=".json")
+    os.close(fd)
+    try:
+        log(f"scaleout: single-device host, re-exec with {DEVICES} "
+            f"forced host devices")
+        subprocess.run([sys.executable, "-m", "benchmarks.scaleout",
+                        "--worker", out], env=env, check=True)
+        with open(out) as f:
+            return json.load(f)
+    finally:
+        os.unlink(out)
+
+
+def run(log=print, bench_path: str = None) -> dict:
+    import jax
+    bench_path = bench_path or BENCH_PATH
+    rows = _sweep(log) if len(jax.devices()) >= 2 else _respawn(log)
+    bench = {}
+    if os.path.exists(bench_path):
+        try:
+            with open(bench_path) as f:
+                bench = json.load(f)
+        except ValueError:
+            bench = {}
+    bench["scaleout"] = {
+        "workload": {"batch": 8, "cin": 64, "cout": 128, "algo": "sfc6_6",
+                     "quant": "int8", "spatial_cap":
+                     int(os.environ.get("REPRO_BENCH_SPATIAL_CAP", "28"))},
+        "forced_host_devices": DEVICES,
+        "rows": rows,
+    }
+    with open(bench_path, "w") as f:
+        json.dump(bench, f, indent=1)
+    log(f"bench_artifact,{bench_path}")
+    return {"bench_path": bench_path, "rows": rows}
+
+
+if __name__ == "__main__":
+    if len(sys.argv) > 2 and sys.argv[1] == "--worker":
+        rows = _sweep(print)
+        with open(sys.argv[2], "w") as f:
+            json.dump(rows, f)
+    else:
+        run()

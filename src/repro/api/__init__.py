@@ -12,13 +12,14 @@ not apply, and dispatches execution to the ``reference`` (pure jnp) or
 extension seam for future backends — register new ones with
 ``register_backend`` and new algorithms with ``register_algorithm``.
 """
-from repro.api import tuning
+from repro.api import serving_cache, tuning
 from repro.api.backends import (get_backend, list_backends,
                                 register_backend)
 from repro.api.plan import ConvPlan, PreparedWeights
 from repro.api.planner import estimate_cost, plan, select_algorithm
 from repro.api.registry import (get_algorithm, list_algorithms,
                                 register_algorithm)
+from repro.api.serving_cache import ServingCache, get_serving_cache
 from repro.api.spec import ConvSpec
 from repro.api.tuning import KernelConfig, autotune
 
@@ -28,4 +29,5 @@ __all__ = [
     "register_algorithm", "get_algorithm", "list_algorithms",
     "register_backend", "get_backend", "list_backends",
     "tuning", "KernelConfig", "autotune",
+    "serving_cache", "ServingCache", "get_serving_cache",
 ]

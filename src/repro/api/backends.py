@@ -128,8 +128,7 @@ class PallasBackend:
                     x, prep.wq, prep.act_scale, prep.w_scale, algo,
                     padding=plan.spec.padding, bits=bits,
                     interpret=plan.interpret,
-                    k_block=cfg.k_block or tuning.DEFAULT_FUSED.k_block,
-                    cout_block=cfg.cout_block)
+                    k_block=cfg.k_block, cout_block=cfg.cout_block)
             return _add_bias(y, bias)
         from repro.kernels.sfc_inverse import sfc_inverse
         from repro.kernels.sfc_transform import sfc_transform
@@ -149,10 +148,30 @@ _BACKENDS: Dict[str, object] = {
 }
 
 
+def _register_spmd() -> None:
+    # conv_spmd keeps its repro.api imports lazy (either side may load
+    # first); mesh resolution stays lazy too — importing repro.api must
+    # not touch jax device state
+    from repro.distributed.conv_spmd import SpmdPallasBackend
+    _BACKENDS["pallas_spmd"] = SpmdPallasBackend()
+
+
+_register_spmd()
+
+
 def register_backend(name: str, backend, overwrite: bool = False) -> None:
+    """Add (or with ``overwrite``, replace) an execution backend.
+
+    Registration invalidates memoized plans: a ``ConvPlan`` records only
+    the backend *name*, but its kernel config and prepared-weight cache
+    were resolved against whatever object held that name at planning time
+    (an overwritten backend may shard or place weights differently).
+    """
     if name in _BACKENDS and not overwrite:
         raise ValueError(f"backend {name!r} already registered")
     _BACKENDS[name] = backend
+    from repro.api import planner       # late: avoids import cycle
+    planner.invalidate_plan_cache()
 
 
 def get_backend(name: str):

@@ -104,6 +104,12 @@ class ConvPlan:
         execution path.  ``w_scale`` defaults to absmax scales at the
         spec's weight granularity, broadcast to (t, t, Cout).
         Results are cached per concrete weight array.
+
+        Backends that define ``place_prepared(plan, prep)`` (the sharded
+        SPMD backend: C_out-sharded ``wq``/``w_scale`` placement) get the
+        prepared tensors routed through it before caching, so the offline
+        half also covers device layout — skipped under tracing, where
+        there are no concrete buffers to place.
         """
         operands = (w, act_scale, w_scale)
         cacheable = not any(isinstance(o, jax.core.Tracer) for o in operands)
@@ -115,6 +121,12 @@ class ConvPlan:
                     all(a is b for a, b in zip(entry[0], operands)):
                 return entry[1]
         prep = self._prepare_uncached(w, act_scale, w_scale)
+        if key is not None:
+            from repro.api import backends    # late: avoids import cycle
+            place = getattr(backends.get_backend(self.backend),
+                            "place_prepared", None)
+            if place is not None:
+                prep = place(self, prep)
         if key is not None:
             with self._prep_lock:
                 while len(self._prep_cache) >= _PREP_CACHE_MAX:

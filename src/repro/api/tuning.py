@@ -62,12 +62,14 @@ class KernelConfig:
 DEFAULT_FUSED = KernelConfig()
 DEFAULT_STAGED = KernelConfig(datapath="staged", k_block=None)
 
-# default candidate sweep: the fused datapath at a few block shapes plus
-# the staged pipeline (full-K and k-blocked) as fallback candidates
+# default candidate sweep: the fused datapath at a few block shapes
+# (including full-K: single k-block, no reduction grid dim) plus the
+# staged pipeline (full-K and k-blocked) as fallback candidates
 DEFAULT_CANDIDATES = (
     KernelConfig(datapath="fused", k_block=128, cout_block=128),
     KernelConfig(datapath="fused", k_block=256, cout_block=128),
     KernelConfig(datapath="fused", k_block=128, cout_block=256),
+    KernelConfig(datapath="fused", k_block=None),
     KernelConfig(datapath="staged", k_block=None),
     KernelConfig(datapath="staged", k_block=128),
 )
@@ -117,19 +119,28 @@ def _load() -> Dict[str, Dict]:
         return _STORE
 
 
+def _snapshot_locked() -> Dict[str, Dict]:
+    """Deep copy of the store (JSON-native values) — callers hold _LOCK."""
+    return json.loads(json.dumps(_STORE or {}))
+
+
+def _write(path: str, snapshot: Dict[str, Dict]) -> None:
+    try:
+        if os.path.dirname(path):
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(snapshot, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+    except OSError:
+        pass                          # read-only host: in-memory only
+
+
 def _save() -> None:
-    path = cache_path()
+    # write under the lock: concurrent snapshots must reach the file in
+    # mutation order, or a stale image can overwrite a newer one
     with _LOCK:
-        store = _STORE or {}
-        try:
-            if os.path.dirname(path):
-                os.makedirs(os.path.dirname(path), exist_ok=True)
-            tmp = path + ".tmp"
-            with open(tmp, "w") as f:
-                json.dump(store, f, indent=1, sort_keys=True)
-            os.replace(tmp, path)
-        except OSError:
-            pass                      # read-only host: in-memory only
+        _write(cache_path(), _snapshot_locked())
 
 
 def spec_key(spec: ConvSpec, backend: str, interpret: bool = True) -> str:
@@ -174,16 +185,24 @@ def record(spec: ConvSpec, backend: str, algo_name: str, time_s: float,
     """Store one measurement (used by autotune; exposed for tests/offline
     calibration imports).  Last measurement wins — a re-tune must be able
     to correct entries that no longer reproduce (driver/library upgrades,
-    different host load), so older-but-faster times are NOT kept."""
-    store = _load()
-    key = spec_key(spec, backend, interpret)
+    different host load), so older-but-faster times are NOT kept.
+
+    The load -> mutate -> persist span holds ONE lock acquisition: a
+    concurrent ``set_cache_path()`` / ``clear()`` lands either entirely
+    before (this record mutates the fresh store) or entirely after (the
+    reset drops the in-memory entry, as those functions document) — it
+    can never detach the dict being mutated from the one that persists,
+    so a completed ``record`` is always on disk, and concurrent records
+    reach the file in mutation order.
+    """
     with _LOCK:
-        entry = store.setdefault(key, {})
+        store = _load()               # RLock: reentrant under our span
+        entry = store.setdefault(spec_key(spec, backend, interpret), {})
         entry[algo_name] = {"time_s": float(time_s)}
         if config is not None:
             entry[algo_name]["config"] = config.to_json()
-    if persist:
-        _save()
+        if persist:
+            _write(cache_path(), _snapshot_locked())
     _invalidate_plans()
 
 

@@ -1,4 +1,6 @@
-"""Distributed runtime: sharding rules, pipeline parallelism, collectives."""
-from repro.distributed import pipeline, sharding
+"""Distributed runtime: sharding rules, pipeline parallelism, collectives,
+and the sharded SPMD conv backend (``conv_spmd``, registered with
+``repro.api`` as ``"pallas_spmd"``)."""
+from repro.distributed import conv_spmd, pipeline, sharding
 
-__all__ = ["pipeline", "sharding"]
+__all__ = ["conv_spmd", "pipeline", "sharding"]

@@ -41,6 +41,7 @@ VGG-16 224x224 worst case with SFC-6(7x7,3x3): L=9, t=12, nW=32, Wp=226):
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -133,7 +134,7 @@ def sfc_fused_conv2d(x: jnp.ndarray, wq: jnp.ndarray,
                      algo: BilinearAlgorithm, *,
                      padding: str = "SAME", bits: int = 8,
                      interpret: bool = True,
-                     k_block: int = K_BLOCK,
+                     k_block: Optional[int] = K_BLOCK,
                      cout_block: int = COUT_BLOCK) -> jnp.ndarray:
     """int8 SFC convolution in one ``pallas_call``.
 
@@ -141,7 +142,10 @@ def sfc_fused_conv2d(x: jnp.ndarray, wq: jnp.ndarray,
     w_scale (t, t, Cout) -> (B, H', W', Cout) f32.  Numerically identical
     to the staged ``quantized_fastconv2d`` (same integer grid and scales).
     ``bits`` sets the activation clipping grid (sub-int8 policies run on
-    the int8 carrier).
+    the int8 carrier).  ``k_block=None`` means full K: the whole C_in
+    reduction in a single k-block (``n_k = 1``) — the autotuner's
+    "no reduction grid dim" candidate, same convention as the staged
+    ``tdmm_int8``.
     """
     B, H, W, C = x.shape
     t, M, R, L = algo.t, algo.M, algo.R, algo.L
@@ -157,7 +161,7 @@ def sfc_fused_conv2d(x: jnp.ndarray, wq: jnp.ndarray,
 
     # channel blocking (both dims padded with zeros; zero channels quantize
     # to zero / carry zero scales, so they contribute nothing)
-    kb = min(k_block, _round_up(C, 8))
+    kb = _round_up(C, 8) if k_block is None else min(k_block, _round_up(C, 8))
     Cp = _round_up(C, kb)
     cb = min(cout_block, _round_up(Cout, 8))
     Op = _round_up(Cout, cb)

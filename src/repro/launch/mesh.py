@@ -20,6 +20,24 @@ def make_host_mesh(model_axis: int = 1):
     return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))
 
 
+def make_forced_host_mesh(shape, axes=("data", "model")):
+    """Mesh over the first prod(shape) host devices — may use a subset.
+
+    For SPMD tests and scale-out sweeps on the CPU container under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``: unlike
+    ``jax.make_mesh`` this does not insist on covering every device, so
+    one 8-device process can sweep 1/2/4/8-way meshes.
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise ValueError(f"mesh shape {shape} needs {n} devices, "
+                         f"host has {len(devices)}")
+    return Mesh(np.array(devices[:n]).reshape(shape), axes)
+
+
 # TPU v5e hardware constants (per chip) — roofline denominators.
 PEAK_BF16_FLOPS = 197e12          # 197 TFLOP/s
 HBM_BW = 819e9                    # 819 GB/s

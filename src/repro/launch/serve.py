@@ -1,17 +1,26 @@
 """Serving launcher: continuous-batch greedy decoding loop.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b --smoke \
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b \
       --batch 4 --gen 32
 
 Production shape: requests queue in, are packed into the fixed decode batch,
 and finished sequences are replaced without recompiling (static shapes).
 On the 16x16 mesh the same ``decode_step`` the dry-run proves out serves
-decode_32k / long_500k; ``--smoke`` runs the reduced config on CPU.
+decode_32k / long_500k; ``--smoke`` (the default) runs the reduced config
+on CPU and ``--no-smoke`` serves the full ``get_config`` architecture.
+
+Conv-bearing architectures (the mamba/hybrid families) warm the
+ConvSpec-keyed serving cache (``repro.api.serving_cache``) before traffic
+is admitted: every conv layer's plan and pre-transformed weights resolve
+once at startup (see ``warm_conv_plans`` for exactly what that buys this
+decode-loop launcher), and repeated hits on one spec re-use one cached
+entry.
 """
 from __future__ import annotations
 
 import argparse
 import time
+from typing import Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -34,20 +43,75 @@ class RequestQueue:
         return self.rng.randint(0, self.vocab, size=n).tolist()
 
 
-def main():
+def parse_args(argv: Optional[Sequence[str]] = None) -> argparse.Namespace:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-14b", choices=list(ARCH_IDS))
-    ap.add_argument("--smoke", action="store_true", default=True)
+    # BooleanOptionalAction: ``--no-smoke`` serves the full config — the
+    # old ``action="store_true", default=True`` could never be turned off
+    ap.add_argument("--smoke", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="reduced smoke config (--no-smoke: full config)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--requests", type=int, default=12)
-    args = ap.parse_args()
+    return ap.parse_args(argv)
 
-    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+
+def resolve_config(args: argparse.Namespace):
+    return get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+
+
+def warm_conv_plans(cfg, params, batch: int, seq: int) -> Dict[str, int]:
+    """Pre-resolve conv plans + prepared weights through the serving cache.
+
+    What this buys *this* launcher: the token-by-token decode loop runs
+    the ring-buffer conv einsum and never replans, so the warm moves the
+    per-layer planning + SFC weight transform to startup, where a failure
+    (missing algorithm, bad spec) surfaces before traffic is admitted,
+    and the memoized plans it resolves are shared with every later
+    ``plan()`` call on the same specs.  The prepared-weight entries serve
+    eager ``_causal_conv1d`` callers — prefill-style evaluation, PTQ
+    calibration, a future chunked-prefill path — not the jitted decode
+    step (tracers bypass the cache by design).
+
+    Walks the parameter tree for depthwise conv weights.  Unstacked
+    (R, C) leaves are long-lived arrays, warmed *unkeyed*: the entry is
+    the same id-keyed one the runtime ``_causal_conv1d`` lookup computes
+    for a (batch, seq)-shaped input.  Stacked (L, R, C) layer weights
+    execute under ``lax.scan`` (traced), so their per-layer entries are
+    warmed with stable tree-path keys: idempotent across repeated calls
+    (slicing creates fresh arrays each time), e.g. a weight-reload
+    re-warm.  Returns the serving-cache stats after the warm.
+    """
+    from repro.api import ConvSpec, serving_cache
+    use_sfc = bool(getattr(cfg, "use_sfc_conv", False))
+    algo = "auto" if use_sfc else "direct"
+    for path, leaf in jax.tree_util.tree_leaves_with_path(params):
+        name = getattr(path[-1], "key", None)
+        if name != "conv_w" or not hasattr(leaf, "ndim"):
+            continue
+        tag = tuple(str(k) for k in path)
+        layers = [(None, leaf)] if leaf.ndim == 2 else \
+            [(tag + (i,), leaf[i]) for i in range(leaf.shape[0])]
+        for key, w in layers:
+            spec = ConvSpec.for_conv1d_depthwise((batch, seq, w.shape[1]),
+                                                 w.shape)
+            serving_cache.get(spec, w, algo=algo, key=key)
+    return serving_cache.stats()
+
+
+def main(argv: Optional[Sequence[str]] = None):
+    args = parse_args(argv)
+
+    cfg = resolve_config(args)
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(0))
     queue = RequestQueue(cfg.vocab_size)
+
+    cache_stats = warm_conv_plans(cfg, params, args.batch, args.max_len)
+    if cache_stats["size"]:
+        print(f"conv serving cache warmed: {cache_stats}")
 
     memory = None
     if cfg.family == "vlm":
@@ -112,6 +176,9 @@ def main():
     print(f"served {done} requests in {dt:.1f}s "
           f"({steps} steps, {args.batch*steps/dt:.0f} tok/s on "
           f"{jax.devices()[0].platform})")
+    if cache_stats["size"]:
+        from repro.api import serving_cache
+        print(f"conv_cache,{serving_cache.stats()}")
 
 
 if __name__ == "__main__":

@@ -43,13 +43,17 @@ def init_mamba2(key, cfg, dtype) -> Params:
 
 def _causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
                    use_sfc: bool) -> jnp.ndarray:
-    from repro.api import ConvSpec, plan
+    from repro.api import ConvSpec, serving_cache
     # auto planning picks the SFC fast path when an algorithm matching the
     # tap count is registered (SFC-6(6,4) for the default R=4: 12 mults /
-    # 6 outputs vs 24 direct) and degrades to direct otherwise.
+    # 6 outputs vs 24 direct) and degrades to direct otherwise.  The
+    # serving cache keys (spec, weights) -> (plan, prepared weights), so
+    # eager serving/prefill hits re-use one pre-transformed weight tensor
+    # (under jit tracing it degrades to plain plan + inline prepare).
     spec = ConvSpec.for_conv1d_depthwise(x.shape, w.shape)
-    p = plan(spec, algo="auto" if use_sfc else "direct")
-    return jax.nn.silu(p.apply(x, w, bias=b))
+    p, prep = serving_cache.get(spec, w,
+                                algo="auto" if use_sfc else "direct")
+    return jax.nn.silu(p.apply(x, prep, bias=b))
 
 
 def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,

@@ -242,6 +242,51 @@ def test_registry_threadsafe_memoization():
 def test_backends_listed():
     assert "reference" in list_backends()
     assert "pallas" in list_backends()
+    assert "pallas_spmd" in list_backends()
+
+
+def test_register_backend_roundtrip_and_plan_invalidation():
+    """The extension seam: a custom backend object registers by name, is
+    resolved by ``plan(..., backend='myback')``, receives the apply
+    dispatch, and (re-)registration invalidates memoized plans."""
+    from repro.api import backends as be
+    from repro.api import register_backend
+
+    class RecordingBackend:
+        name = "myback"
+
+        def __init__(self):
+            self.calls = 0
+
+        def apply(self, plan_, x, prep, *, bias=None, elementwise_hook=None):
+            self.calls += 1
+            return be.get_backend("reference").apply(
+                plan_, x, prep, bias=bias, elementwise_hook=elementwise_hook)
+
+    x, w = _data(seed=11)
+    spec = ConvSpec.for_conv2d(x.shape, w.shape)
+    with pytest.raises(KeyError):
+        plan(spec, backend="myback", algo="sfc6_6")
+    mine = RecordingBackend()
+    register_backend("myback", mine)
+    try:
+        p1 = plan(spec, backend="myback", algo="sfc6_6")
+        y = p1.apply(x, w)
+        assert mine.calls == 1                    # dispatched to our object
+        y_ref = plan(spec, backend="reference", algo="sfc6_6").apply(x, w)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=1e-6, atol=1e-6)
+        with pytest.raises(ValueError):           # no silent overwrite
+            register_backend("myback", RecordingBackend())
+        # overwrite drops memoized plans: the stale plan object must not
+        # keep serving a name that now resolves to a different backend
+        register_backend("myback", RecordingBackend(), overwrite=True)
+        p2 = plan(spec, backend="myback", algo="sfc6_6")
+        assert p2 is not p1
+    finally:
+        del be._BACKENDS["myback"]
+        from repro.api import planner
+        planner.invalidate_plan_cache()
 
 
 # ----------------------------------------------------------------------

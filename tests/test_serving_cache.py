@@ -1,0 +1,185 @@
+"""ConvSpec-keyed serving cache + serve-launcher CLI coverage.
+
+Acceptance surface: repeated serve-path hits on one ConvSpec re-use one
+cached plan and one PreparedWeights (no re-preparation), stacked-layer
+weights stay cached across re-slicing via stable keys, tracers bypass the
+cache, and the ``--smoke/--no-smoke`` CLI reaches both config branches.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import ConvSpec, serving_cache
+from repro.api.serving_cache import ServingCache
+from repro.core import conv2d as c2d
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    serving_cache.clear()
+    yield
+    serving_cache.clear()
+
+
+def _conv1d_data(c=8, t=20, seed=0):
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(2, t, c), jnp.float32)
+    w = jnp.asarray(rng.randn(4, c) * 0.3, jnp.float32)
+    return x, w
+
+
+# ----------------------------------------------------------------------
+# cache semantics
+# ----------------------------------------------------------------------
+def test_same_spec_reuses_plan_and_prep():
+    x, w = _conv1d_data()
+    spec = ConvSpec.for_conv1d_depthwise(x.shape, w.shape)
+    p1, prep1 = serving_cache.get(spec, w, algo="auto")
+    p2, prep2 = serving_cache.get(spec, w, algo="auto")
+    assert p1 is p2 and prep1 is prep2
+    s = serving_cache.stats()
+    assert s["prepares"] == 1 and s["hits"] == 1 and s["size"] == 1
+
+
+def test_keyed_entries_survive_reslicing():
+    """Stacked layer params are sliced fresh every call — a stable key
+    must keep one prepared entry alive across id churn."""
+    _, w0 = _conv1d_data(seed=1)
+    _, w1 = _conv1d_data(seed=2)
+    stacked = jnp.stack([w0, w1])
+    spec = ConvSpec.for_conv1d_depthwise((2, 20, 8), w0.shape)
+    for _ in range(3):                       # new slice objects every pass
+        for i in range(2):
+            serving_cache.get(spec, stacked[i], key=("blocks", "conv_w", i))
+    s = serving_cache.stats()
+    assert s["prepares"] == 2 and s["hits"] == 4 and s["size"] == 2
+
+
+def test_distinct_weights_same_spec_coexist():
+    x, wa = _conv1d_data(seed=3)
+    _, wb = _conv1d_data(seed=4)
+    spec = ConvSpec.for_conv1d_depthwise(x.shape, wa.shape)
+    _, prep_a = serving_cache.get(spec, wa, algo="auto")
+    _, prep_b = serving_cache.get(spec, wb, algo="auto")
+    assert prep_a is not prep_b
+    _, again_a = serving_cache.get(spec, wa, algo="auto")
+    assert again_a is prep_a                  # not evicted by wb
+    assert serving_cache.stats()["prepares"] == 2
+
+
+def test_lru_eviction_bound():
+    cache = ServingCache(maxsize=2)
+    spec = ConvSpec.for_conv1d_depthwise((2, 20, 8), (4, 8))
+    ws = [jnp.asarray(np.random.RandomState(s).randn(4, 8), jnp.float32)
+          for s in range(3)]
+    for w in ws:
+        cache.get(spec, w)
+    assert cache.stats()["size"] == 2
+    # ws[0] was evicted (LRU): re-getting prepares again
+    cache.get(spec, ws[0])
+    assert cache.stats()["prepares"] == 4
+
+
+def test_tracers_bypass_cache():
+    x, w = _conv1d_data(seed=5)
+    spec_of = ConvSpec.for_conv1d_depthwise
+
+    def fn(xx, ww):
+        p, prep = serving_cache.get(spec_of(xx.shape, ww.shape), ww,
+                                    algo="auto")
+        return p.apply(xx, prep)
+
+    y_jit = jax.jit(fn)(x, w)
+    assert serving_cache.stats()["size"] == 0          # nothing cached
+    y_eager = fn(x, w)
+    assert serving_cache.stats()["size"] == 1
+    np.testing.assert_allclose(np.asarray(y_jit), np.asarray(y_eager),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_algo_flip_invalidates_entry():
+    """A cached prep must not outlive the algorithm it was prepared under:
+    registering an algorithm re-resolves 'auto', and the next get() must
+    re-prepare instead of pairing the fast-path plan with a direct prep."""
+    from repro.api import register_algorithm
+    from repro.api import planner, registry as reg
+    from repro.core.generator import generate_sfc
+    rng = np.random.RandomState(7)
+    x = jnp.asarray(rng.randn(2, 12, 12, 8), jnp.float32)
+    w = jnp.asarray(rng.randn(5, 5, 8, 8) * 0.2, jnp.float32)
+    spec = ConvSpec.for_conv2d(x.shape, w.shape)          # 5-tap: no algo
+    p1, prep1 = serving_cache.get(spec, w, algo="auto")
+    assert p1.path == "direct" and prep1.tw is None
+    with reg._LOCK:
+        saved = dict(reg._ENTRIES), dict(reg._INSTANCES)
+    try:
+        register_algorithm("sfc6_4_r5_cache_test",
+                           lambda: generate_sfc(6, 4, 5), taps=5,
+                           kind="sfc", overwrite=True)
+        p2, prep2 = serving_cache.get(spec, w, algo="auto")
+        assert p2.path == "fast" and prep2.tw is not None
+        assert serving_cache.stats()["prepares"] == 2
+        y = p2.apply(x, prep2)                            # must not crash
+        y_ref = p1.apply(x, prep1)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=1e-4, atol=1e-4)
+    finally:
+        with reg._LOCK:
+            reg._ENTRIES.clear(), reg._ENTRIES.update(saved[0])
+            reg._INSTANCES.clear(), reg._INSTANCES.update(saved[1])
+        planner.invalidate_plan_cache()
+
+
+# ----------------------------------------------------------------------
+# serve-path wiring
+# ----------------------------------------------------------------------
+def test_ssm_conv_routes_through_serving_cache():
+    from repro.models.ssm import _causal_conv1d
+    x, w = _conv1d_data(seed=6)
+    b = jnp.zeros((8,), jnp.float32)
+    y1 = _causal_conv1d(x, w, b, use_sfc=True)
+    y2 = _causal_conv1d(x, w, b, use_sfc=True)
+    s = serving_cache.stats()
+    assert s["prepares"] == 1 and s["hits"] == 1
+    assert bool(jnp.all(y1 == y2))
+    ref = jax.nn.silu(c2d.conv1d_depthwise_causal_direct(x, w) + b)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(ref),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_serve_warm_no_repreparation():
+    """Acceptance: repeated serve-path hits on the same ConvSpec re-use
+    one cached plan + prepared weights — the second warm pass must not
+    prepare anything."""
+    from repro.configs import get_smoke_config
+    from repro.launch.serve import warm_conv_plans
+    from repro.models.registry import build
+    cfg = get_smoke_config("mamba2-1.3b")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    first = warm_conv_plans(cfg, params, batch=2, seq=16)
+    assert first["size"] > 0 and first["prepares"] == first["size"]
+    assert first["hits"] == 0
+    second = warm_conv_plans(cfg, params, batch=2, seq=16)
+    assert second["prepares"] == first["prepares"]      # no re-preparation
+    assert second["hits"] == first["size"]
+    assert second["size"] == first["size"]
+
+
+# ----------------------------------------------------------------------
+# serve CLI
+# ----------------------------------------------------------------------
+def test_serve_smoke_flag_both_branches():
+    from repro.configs import get_config, get_smoke_config
+    from repro.launch.serve import parse_args, resolve_config
+    on = parse_args(["--arch", "qwen3-14b"])
+    assert on.smoke is True
+    assert resolve_config(on) == get_smoke_config("qwen3-14b")
+    off = parse_args(["--arch", "qwen3-14b", "--no-smoke"])
+    assert off.smoke is False
+    full = resolve_config(off)
+    assert full == get_config("qwen3-14b")
+    assert full.d_model > get_smoke_config("qwen3-14b").d_model
+    # and --smoke still parses explicitly
+    assert parse_args(["--smoke"]).smoke is True

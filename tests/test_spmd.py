@@ -1,0 +1,175 @@
+"""SPMD conv backend parity: ``pallas_spmd`` vs single-device ``pallas``.
+
+Every test asserts BIT-identity (``==``, not allclose): the sharding
+layout (batch over 'data', C_out over 'model') introduces no cross-shard
+reduction, so not a single float may accumulate in a different order.
+
+Needs >= 2 devices — the tier-1 single-device run skips this module; CI
+runs it under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import ConvSpec, get_backend, plan
+from repro.api.tuning import DEFAULT_STAGED, calibrate_act_scale
+from repro.launch.mesh import make_forced_host_mesh
+from repro.quant.fake_quant import INT8_FREQ
+
+N_DEV = len(jax.devices())
+pytestmark = pytest.mark.skipif(
+    N_DEV < 2, reason="needs >=2 devices "
+    "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+# (data, model): exercise both axes when the host has enough devices
+MESH = (2, 2) if N_DEV >= 4 else (2, 1)
+
+
+@pytest.fixture
+def spmd():
+    backend = get_backend("pallas_spmd")
+
+    def use(shape=MESH):
+        backend.set_mesh(make_forced_host_mesh(shape))
+        return backend
+
+    yield use
+    backend.set_mesh(None)
+
+
+def _data(b=4, hw=12, cin=16, cout=32, seed=0):
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(b, hw, hw, cin), jnp.float32)
+    w = jnp.asarray(rng.randn(3, 3, cin, cout) * 0.2, jnp.float32)
+    return x, w
+
+
+def _int8_plans(x, w, padding="SAME", algo="sfc6_6"):
+    spec = ConvSpec.for_conv2d(x.shape, w.shape, padding=padding,
+                               quant=INT8_FREQ)
+    p_s = plan(spec, backend="pallas_spmd", algo=algo)
+    p_1 = plan(spec, backend="pallas", algo=algo)
+    act = calibrate_act_scale(x, p_1.algorithm, spec.quant, padding)
+    return p_s, p_1, act
+
+
+@pytest.mark.parametrize("padding", ["SAME", "VALID"])
+def test_int8_fused_parity(spmd, padding):
+    """Fused int8 datapath, batch+C_out sharded, SAME and VALID."""
+    spmd()
+    x, w = _data()
+    p_s, p_1, act = _int8_plans(x, w, padding)
+    y_s = p_s.apply(x, p_s.prepare_weights(w, act_scale=act))
+    y_1 = p_1.apply(x, p_1.prepare_weights(w, act_scale=act))
+    assert y_s.shape == y_1.shape
+    assert bool(jnp.all(y_s == y_1))
+
+
+def test_int8_staged_parity(spmd):
+    """The staged three-kernel pipeline shards identically (a measured
+    KernelConfig riding the plan must not break SPMD dispatch)."""
+    spmd()
+    x, w = _data(seed=1)
+    p_s, p_1, act = _int8_plans(x, w)
+    p_s = dataclasses.replace(p_s, config=DEFAULT_STAGED)
+    p_1 = dataclasses.replace(p_1, config=DEFAULT_STAGED)
+    y_s = p_s.apply(x, p_s.prepare_weights(w, act_scale=act))
+    y_1 = p_1.apply(x, p_1.prepare_weights(w, act_scale=act))
+    assert bool(jnp.all(y_s == y_1))
+
+
+def test_fp_fast_parity(spmd):
+    """fp transform-domain path (no quantization), both axes sharded."""
+    spmd()
+    x, w = _data(seed=2)
+    spec = ConvSpec.for_conv2d(x.shape, w.shape)
+    y_s = plan(spec, backend="pallas_spmd", algo="sfc6_6").apply(x, w)
+    y_1 = plan(spec, backend="pallas", algo="sfc6_6").apply(x, w)
+    assert bool(jnp.all(y_s == y_1))
+
+
+def test_bias_sharded_with_cout(spmd):
+    spmd()
+    x, w = _data(seed=3)
+    bias = jnp.arange(w.shape[-1], dtype=jnp.float32)
+    p_s, p_1, act = _int8_plans(x, w)
+    y_s = p_s.apply(x, p_s.prepare_weights(w, act_scale=act), bias=bias)
+    y_1 = p_1.apply(x, p_1.prepare_weights(w, act_scale=act), bias=bias)
+    assert bool(jnp.all(y_s == y_1))
+
+
+@pytest.mark.skipif(N_DEV < 4, reason="needs a >1 model axis")
+def test_nondivisible_axes_sanitized(spmd):
+    """B=3 on a 2-way data axis and C_out=18 on a 4-way model axis: both
+    drop to replication (sanitize_pspec) instead of erroring, and the
+    result stays bit-identical."""
+    backend = spmd((2, 4) if N_DEV >= 8 else (1, 4))
+    rng = np.random.RandomState(4)
+    x = jnp.asarray(rng.randn(3, 10, 10, 16), jnp.float32)
+    w = jnp.asarray(rng.randn(3, 3, 16, 18) * 0.2, jnp.float32)
+    p_s, p_1, act = _int8_plans(x, w)
+    prep_s = p_s.prepare_weights(w, act_scale=act)
+    # 18 % 4 != 0: the prepared weights must have degraded to replication
+    assert prep_s.wq.sharding.is_fully_replicated
+    y_s = p_s.apply(x, prep_s)
+    y_1 = p_1.apply(x, p_1.prepare_weights(w, act_scale=act))
+    assert bool(jnp.all(y_s == y_1))
+    assert backend.mesh.shape["model"] == 4
+
+
+def test_direct_path_parity(spmd):
+    """stride-2 degrades to the direct path, still sharded (batch +
+    output channels of the XLA conv are independent)."""
+    spmd()
+    x, w = _data(seed=5)
+    spec = ConvSpec.for_conv2d(x.shape, w.shape, stride=2)
+    p_s = plan(spec, backend="pallas_spmd")
+    p_1 = plan(spec, backend="pallas")
+    assert p_s.path == "direct"
+    y_s = p_s.apply(x, w)
+    y_1 = p_1.apply(x, w)
+    assert bool(jnp.all(y_s == y_1))
+
+
+@pytest.mark.skipif(MESH[1] < 2, reason="needs a >1 model axis")
+def test_prepared_weights_device_sharded(spmd):
+    """prepare_weights places wq/w_scale C_out-sharded on the mesh (the
+    offline half of the SPMD story); scales stay replicated per shard."""
+    spmd()
+    x, w = _data()
+    p_s, _, act = _int8_plans(x, w)
+    prep = p_s.prepare_weights(w, act_scale=act)
+    cout = w.shape[-1]
+    shard = prep.wq.addressable_shards[0].data
+    assert shard.shape[-1] == cout // MESH[1]
+    assert prep.w_scale.addressable_shards[0].data.shape[-1] \
+        == cout // MESH[1]
+    assert prep.act_scale.sharding.is_fully_replicated
+    # memoized: the placed copy is returned on re-prepare
+    assert p_s.prepare_weights(w, act_scale=act) is prep
+
+
+def test_rank1_depthwise_delegates(spmd):
+    """rank-1 depthwise falls through to the (replicated) reference impl."""
+    spmd()
+    rng = np.random.RandomState(6)
+    x = jnp.asarray(rng.randn(2, 24, 8), jnp.float32)
+    w = jnp.asarray(rng.randn(4, 8) * 0.3, jnp.float32)
+    spec = ConvSpec.for_conv1d_depthwise(x.shape, w.shape)
+    y_s = plan(spec, backend="pallas_spmd", algo="auto").apply(x, w)
+    y_1 = plan(spec, backend="pallas", algo="auto").apply(x, w)
+    assert bool(jnp.all(y_s == y_1))
+
+
+def test_spmd_under_jit(spmd):
+    """The sharded apply composes with an outer jit (the serving shape)."""
+    spmd()
+    x, w = _data(seed=7)
+    p_s, p_1, act = _int8_plans(x, w)
+    prep = p_s.prepare_weights(w, act_scale=act)
+    y_jit = jax.jit(lambda a: p_s.apply(a, prep))(x)
+    y_1 = p_1.apply(x, p_1.prepare_weights(w, act_scale=act))
+    assert bool(jnp.all(y_jit == y_1))

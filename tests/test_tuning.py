@@ -1,0 +1,124 @@
+"""Tuning-cache concurrency + fused full-K config plumbing.
+
+Regression coverage for two PR-3 fixes: (a) ``record()`` used to fetch
+the store and mutate/save it under *separate* lock acquisitions, so a
+concurrent ``clear()``/``set_cache_path()`` left it mutating an orphaned
+dict the save never persisted; (b) the fused backend path used to coerce
+``KernelConfig.k_block=None`` ("full K") to 128, so autotuned full-K
+configs silently ran k-blocked.
+"""
+import json
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import ConvSpec, plan, tuning
+from repro.api.tuning import KernelConfig, calibrate_act_scale
+from repro.quant.fake_quant import INT8_FREQ
+
+
+def test_record_survives_concurrent_clear(monkeypatch):
+    """A completed record() must always be on disk, whatever clear()
+    interleaving happened — the load->mutate->snapshot span is atomic.
+
+    The patched spec_key widens the historical race window (store fetched,
+    then a sleep, then the mutation) to make the old bug near-certain."""
+    spec = ConvSpec(rank=2, kernel_size=3, in_channels=8, out_channels=8,
+                    spatial=(12, 12))
+    real_key = tuning.spec_key
+
+    def slow_key(*a, **k):
+        time.sleep(0.03)
+        return real_key(*a, **k)
+
+    monkeypatch.setattr(tuning, "spec_key", slow_key)
+    stop = threading.Event()
+
+    def clearer():
+        while not stop.is_set():
+            tuning.clear()
+            time.sleep(0.003)
+
+    t = threading.Thread(target=clearer)
+    t.start()
+    try:
+        for i in range(4):
+            tuning.record(spec, "pallas", f"warm{i}", 0.5)
+        tuning.record(spec, "pallas", "final", 1.25,
+                      KernelConfig(datapath="fused", k_block=None))
+    finally:
+        stop.set()
+        t.join()
+    with open(tuning.cache_path()) as f:
+        persisted = json.load(f)
+    entries = {}
+    for per_spec in persisted.values():
+        entries.update(per_spec)
+    # the last record can never be lost to a concurrent clear (clear only
+    # drops the in-memory store; the file write snapshots the mutation)
+    assert entries["final"]["time_s"] == 1.25
+    assert entries["final"]["config"]["k_block"] is None
+
+
+def test_record_roundtrips_config_and_lookup():
+    spec = ConvSpec(rank=2, kernel_size=3, in_channels=16, out_channels=16,
+                    spatial=(10, 10), quant=INT8_FREQ)
+    cfg = KernelConfig(datapath="fused", k_block=None, cout_block=64)
+    tuning.record(spec, "pallas", "sfc4_4", 2e-3, cfg)
+    got = tuning.get_config(spec, "pallas", "sfc4_4")
+    assert got == cfg and got.k_block is None
+    assert tuning.lookup(spec, "pallas")["sfc4_4"]["time_s"] == 2e-3
+
+
+def _int8_case(cin=24, cout=8, hw=10, seed=0):
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(1, hw, hw, cin), jnp.float32)
+    w = jnp.asarray(rng.randn(3, 3, cin, cout) * 0.2, jnp.float32)
+    spec = ConvSpec.for_conv2d(x.shape, w.shape, quant=INT8_FREQ)
+    return x, w, spec
+
+
+def test_full_k_fused_config_reaches_kernel(monkeypatch):
+    """An autotuned k_block=None config must reach sfc_fused_conv2d as
+    None (full K), not be coerced back to the default block size."""
+    import repro.kernels.sfc_fused as sf
+    x, w, spec = _int8_case()
+    tuning.record(spec, "pallas", "sfc4_4", 1e-3,
+                  KernelConfig(datapath="fused", k_block=None))
+    p = plan(spec, backend="pallas", algo="sfc4_4")
+    assert p.config is not None and p.config.k_block is None
+    calls = []
+    real = sf.sfc_fused_conv2d
+
+    def spy(*args, **kwargs):
+        calls.append(kwargs)
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(sf, "sfc_fused_conv2d", spy)
+    act = calibrate_act_scale(x, p.algorithm, spec.quant)
+    y = p.apply(x, p.prepare_weights(w, act_scale=act))
+    assert calls and calls[0]["k_block"] is None
+    # full-K execution matches the reference int8 simulation exactly
+    p_ref = plan(spec, backend="reference", algo="sfc4_4")
+    y_ref = p_ref.apply(x, p_ref.prepare_weights(w, act_scale=act))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fused_kernel_full_k_matches_blocked():
+    """k_block=None (single k-block) is bit-exact vs the k-blocked grid."""
+    from repro.api import get_algorithm
+    from repro.kernels.sfc_fused import sfc_fused_conv2d
+    x, w, spec = _int8_case(seed=1)
+    p = plan(spec, backend="reference", algo="sfc4_4")
+    algo = get_algorithm("sfc4_4")
+    act = calibrate_act_scale(x, algo, spec.quant)
+    prep = p.prepare_weights(w, act_scale=act)
+    y_full = sfc_fused_conv2d(x, prep.wq, prep.act_scale, prep.w_scale,
+                              algo, k_block=None)
+    y_blocked = sfc_fused_conv2d(x, prep.wq, prep.act_scale, prep.w_scale,
+                                 algo, k_block=8)
+    assert bool(jnp.all(y_full == y_blocked))
