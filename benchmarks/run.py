@@ -6,9 +6,13 @@
 ``table3`` additionally writes the machine-readable per-layer conv sweep
 ``BENCH_conv.json`` (path via ``REPRO_BENCH_OUT``; reduced shapes via
 ``REPRO_BENCH_SPATIAL_CAP``, default 28) — the artifact CI uploads to
-track the perf trajectory across PRs.  ``scaleout`` appends the SPMD
-per-shard-count rows to the same artifact (forced host-device mesh on
-single-device hosts).
+track the perf trajectory across PRs.  The file is merged, never
+overwritten: each run refreshes the per-layer snapshot (now including
+the batched multi-tile-row fused variant) and APPENDS a timestamped
+git-SHA entry to ``BENCH_conv.json["trajectory"]``, so the accumulated
+history rides the committed file across PRs.  ``scaleout`` appends the
+SPMD per-shard-count rows to the same artifact (forced host-device mesh
+on single-device hosts).
 """
 import sys
 import time

@@ -8,29 +8,39 @@ the TPU target).  VGG-16's conv stack (all 3x3 stride-1, the paper's pick)
 is the workload.
 
 Besides the human-readable log this module emits ``BENCH_conv.json``: a
-machine-readable per-layer wall-clock sweep of the four datapaths
+machine-readable per-layer wall-clock sweep of the five datapaths
 
   direct  — XLA native convolution, fp32
   staged  — three-kernel Pallas int8 pipeline (transform+quant / tdmm /
             inverse, two HBM round-trips of the transform-domain tensor)
-  fused   — single-``pallas_call`` int8 pipeline (``sfc_fused``)
+  fused   — single-``pallas_call`` int8 pipeline (``sfc_fused``),
+            one tile-row per grid step
+  batched — the fused kernel with the multi-tile-row grid
+            (``rows_per_step=None``: VMEM-budget auto grouping) — the
+            small-image variant ROADMAP calls for
   int8    — reference-backend static-int8 simulation (jnp)
 
 so the perf trajectory is tracked from PR 2 onward (EXPERIMENTS.md §Perf).
-Spatial extents are scaled by ``REPRO_BENCH_SPATIAL_CAP`` (default 28 —
-interpret-mode Pallas on CPU makes full 224x224 sweeps impractically slow;
-channel counts, the dimension that decides datapath ranking, stay full).
+The artifact is ACCUMULATED, not overwritten: existing keys written by
+other suites (``scaleout``) survive, and every run appends a timestamped,
+git-SHA-tagged entry to ``trajectory`` so the CI artifact carries the
+cross-PR perf history.  Spatial extents are scaled by
+``REPRO_BENCH_SPATIAL_CAP`` (default 28 — interpret-mode Pallas on CPU
+makes full 224x224 sweeps impractically slow; channel counts, the
+dimension that decides datapath ranking, stay full).
 """
 import dataclasses
+import datetime
 import json
 import os
+import subprocess
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.api import ConvSpec, get_algorithm, plan
-from repro.api.tuning import (DEFAULT_FUSED, DEFAULT_STAGED,
+from repro.api.tuning import (DEFAULT_BATCHED, DEFAULT_FUSED, DEFAULT_STAGED,
                               calibrate_act_scale, time_fn)
 from repro.quant import ConvWorkload, bops_reduction, INT8_FREQ
 
@@ -77,6 +87,10 @@ def _layer_sweep(layers, algo_name: str, reps: int, log) -> list:
                 lambda a, _p=dataclasses.replace(p_fused,
                                                  config=DEFAULT_FUSED):
                 _p.apply(a, prep)),
+            "batched": jax.jit(
+                lambda a, _p=dataclasses.replace(p_fused,
+                                                 config=DEFAULT_BATCHED):
+                _p.apply(a, prep)),
             "staged": jax.jit(
                 lambda a, _p=dataclasses.replace(p_fused,
                                                  config=DEFAULT_STAGED):
@@ -91,8 +105,19 @@ def _layer_sweep(layers, algo_name: str, reps: int, log) -> list:
             f"direct={row['direct_ms']:.2f}ms,"
             f"staged={row['staged_ms']:.2f}ms,"
             f"fused={row['fused_ms']:.2f}ms,"
+            f"batched={row['batched_ms']:.2f}ms,"
             f"int8sim={row['int8_ms']:.2f}ms")
     return rows
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], capture_output=True,
+            text=True, check=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__))).stdout.strip()
+    except Exception:
+        return "unknown"
 
 
 def run(log=print, bench_path: str = None, reps: int = None,
@@ -114,20 +139,47 @@ def run(log=print, bench_path: str = None, reps: int = None,
     layers = _scaled_layers(spatial_cap)
     rows = _layer_sweep(layers, "sfc6_6", reps, log)
     totals = {k: sum(r[f"{k}_ms"] for r in rows)
-              for k in ("direct", "staged", "fused", "int8")}
+              for k in ("direct", "staged", "fused", "batched", "int8")}
     for k, v in totals.items():
         log(f"vgg16_stack_{k}_ms,{v:.2f}")
-    bench = {
+    small = [r for r in rows if r["hw"] <= 14]
+    if small:
+        gain = sum(r["fused_ms"] for r in small) \
+            / max(sum(r["batched_ms"] for r in small), 1e-9)
+        log(f"small_image_batched_speedup_hw_le_14,{gain:.2f}x")
+
+    # accumulate, never overwrite: other suites' keys (scaleout) and the
+    # cross-PR trajectory survive this run
+    bench = {}
+    if os.path.exists(bench_path):
+        try:
+            with open(bench_path) as f:
+                bench = json.load(f)
+        except ValueError:
+            bench = {}
+    if not isinstance(bench, dict):      # valid JSON but not an object
+        bench = {}
+    bench.update({
         "host": {"platform": jax.default_backend(), "jax": jax.__version__,
                  "interpret": True},
         "workload": "vgg16_conv_stack", "algo": "sfc6_6", "batch": 1,
         "spatial_cap": spatial_cap, "reps": reps,
         "layers": rows,
         "totals_ms": totals,
+    })
+    entry = {
+        "ts": datetime.datetime.now(datetime.timezone.utc)
+        .isoformat(timespec="seconds"),
+        "git_sha": _git_sha(),
+        "platform": jax.default_backend(), "jax": jax.__version__,
+        "spatial_cap": spatial_cap, "reps": reps,
+        "totals_ms": totals,
     }
+    bench.setdefault("trajectory", []).append(entry)
     with open(bench_path, "w") as f:
         json.dump(bench, f, indent=1)
-    log(f"bench_artifact,{bench_path}")
+    log(f"bench_artifact,{bench_path} "
+        f"(trajectory: {len(bench['trajectory'])} entries)")
 
     # paper's GOPs/DSP analogue: mults per output
     log(f"mults_per_output_direct,{9*64}")

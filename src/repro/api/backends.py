@@ -95,7 +95,9 @@ class PallasBackend:
     (``repro.kernels.sfc_fused``) — the transform-domain tensor never
     touches HBM.  A plan carrying a measured ``KernelConfig`` (from
     ``repro.api.tuning``) can instead select the staged three-kernel
-    pipeline or override the block sizes.
+    pipeline, override the block sizes, batch multiple tile-rows per grid
+    step (``rows_per_step``), or DMA-pipeline the input strip reads
+    (``double_buffer``).
     """
 
     name = "pallas"
@@ -128,7 +130,9 @@ class PallasBackend:
                     x, prep.wq, prep.act_scale, prep.w_scale, algo,
                     padding=plan.spec.padding, bits=bits,
                     interpret=plan.interpret,
-                    k_block=cfg.k_block, cout_block=cfg.cout_block)
+                    k_block=cfg.k_block, cout_block=cfg.cout_block,
+                    rows_per_step=cfg.rows_per_step,
+                    double_buffer=cfg.double_buffer)
             return _add_bias(y, bias)
         from repro.kernels.sfc_inverse import sfc_inverse
         from repro.kernels.sfc_transform import sfc_transform

@@ -49,27 +49,41 @@ class KernelConfig:
     chan_block: int = 128         # staged transform/inverse channel block
     k_block: Optional[int] = 128  # C_in reduction block (None = full K)
     cout_block: int = 128         # fused C_out block
+    # fused grid batching: tile-rows (then whole images) folded per grid
+    # step; None = auto via sfc_fused.auto_rows_per_step's VMEM budget
+    rows_per_step: Optional[int] = 1
+    # fused DMA pipelining: prefetch the next input strip group into a
+    # second VMEM slot while the current one is transformed and matmul'd
+    double_buffer: bool = False
 
     def to_json(self) -> Dict:
         return dataclasses.asdict(self)
 
     @classmethod
     def from_json(cls, d: Dict) -> "KernelConfig":
+        # unknown keys are dropped, missing ones default: cache entries
+        # written before a knob existed stay loadable
         fields = {f.name for f in dataclasses.fields(cls)}
         return cls(**{k: v for k, v in d.items() if k in fields})
 
 
 DEFAULT_FUSED = KernelConfig()
 DEFAULT_STAGED = KernelConfig(datapath="staged", k_block=None)
+# the batched/pipelined small-image variant (ROADMAP: multi-tile-row grid
+# + double-buffered strips); rows_per_step=None resolves per shape
+DEFAULT_BATCHED = KernelConfig(datapath="fused", rows_per_step=None)
 
 # default candidate sweep: the fused datapath at a few block shapes
-# (including full-K: single k-block, no reduction grid dim) plus the
+# (including full-K: single k-block, no reduction grid dim), the batched
+# multi-tile-row grid with and without DMA double-buffering, plus the
 # staged pipeline (full-K and k-blocked) as fallback candidates
 DEFAULT_CANDIDATES = (
     KernelConfig(datapath="fused", k_block=128, cout_block=128),
     KernelConfig(datapath="fused", k_block=256, cout_block=128),
     KernelConfig(datapath="fused", k_block=128, cout_block=256),
     KernelConfig(datapath="fused", k_block=None),
+    KernelConfig(datapath="fused", rows_per_step=None),
+    KernelConfig(datapath="fused", rows_per_step=None, double_buffer=True),
     KernelConfig(datapath="staged", k_block=None),
     KernelConfig(datapath="staged", k_block=128),
 )
@@ -310,7 +324,9 @@ def autotune(spec: ConvSpec, backend: str = "pallas", *,
             dt = _measure_plan(p, x, w, reps)
             if log:
                 log(f"autotune {name} {cfg.datapath}"
-                    f"(k={cfg.k_block},co={cfg.cout_block}): {dt*1e3:.2f}ms")
+                    f"(k={cfg.k_block},co={cfg.cout_block},"
+                    f"r={cfg.rows_per_step},db={int(cfg.double_buffer)}): "
+                    f"{dt*1e3:.2f}ms")
             if best is None or dt < best:
                 best, best_cfg = dt, cfg
         if best is not None:

@@ -22,6 +22,15 @@ backend: no cross-shard reduction exists anywhere in the datapath (the
 C_in contraction stays intact per shard), so not a single float is
 accumulated in a different order.
 
+Kernel configs ride the plan through ``shard_map`` unchanged: a
+``KernelConfig`` with ``rows_per_step``/``double_buffer`` (the batched,
+DMA-pipelined fused grid) executes per shard exactly as on one device —
+and ``rows_per_step=None`` auto-resolution sees the *local* batch (the
+data axis shrinks B before the kernel wrapper runs), so a sharded small
+batch folds whole images per step precisely when the shard, not the
+global batch, is small.  Grouping only ever folds divisors of the local
+batch, so every data-shard layout remains bit-identical.
+
 Axes that do not divide the corresponding extent are dropped per
 :func:`repro.distributed.sharding.sanitize_pspec` — batch-1 decode on a
 multi-way data axis, ragged C_out — and that dimension is computed

@@ -7,41 +7,61 @@ between — t^2/M^2 times the input footprint (3.06x for SFC-4(4x4,3x3),
 tensor that duplicates every input element L^2/M^2 times (2.25x / 1.78x).
 This kernel keeps the whole pipeline on-chip (EXPERIMENTS.md §Perf):
 
-  grid = (B * nH, C_out blocks, C_in k-blocks), k innermost
+  grid = (ceil(B/imgs) * ceil(nH/rows), C_out blocks, C_in k-blocks),
+  k innermost
 
 Per grid step it
-  * reads one overlapping (L, W_padded, k_block) input strip straight from
-    HBM via an Unblocked BlockSpec index map at row stride M — tiles are
-    never materialized;
+  * reads one overlapping (imgs, span, W_padded, k_block) input strip
+    group — ``rows`` consecutive tile-rows (span = (rows-1)*M + L) of
+    ``imgs`` images — straight from HBM, either via an Unblocked BlockSpec
+    index map at row stride rows*M, or (``double_buffer``) via a manual
+    ``pltpu.make_async_copy`` DMA into a two-slot VMEM scratch so the next
+    strip's HBM read overlaps the current strip's transform + matmul;
   * applies the additions-only B^T X B transform per tile column and the
     fused per-frequency intN quantization in VMEM/registers; the quantized
     int8 strips are cached in a VMEM scratch across C_out blocks (bounded
     by ``XQ_CACHE_BYTES``; recomputed per block when they do not fit), so
-    the transform runs once per (tile-row, k-block), not once per output
-    block;
+    the transform runs once per (strip group, k-block), not once per
+    output block;
   * runs the t^2-position int8 MXU matmuls against the matching weight
-    k-block and accumulates into an int32 VMEM scratch that persists across
-    the C_in k-blocks — so full-K VMEM residency (which caps the staged
-    ``tdmm_int8`` near C_in ~ 2048) is never required;
+    k-block — the LHS stacks all imgs*rows*nW tile columns of the group,
+    so small images (nW*M = 7..14) still feed the 128-lane MXU a full
+    batch of rows instead of a sliver — and accumulates into an int32
+    VMEM scratch that persists across the C_in k-blocks, so full-K VMEM
+    residency (which caps the staged ``tdmm_int8`` near C_in ~ 2048) is
+    never required;
   * on the last k-block dequantizes with the static per-frequency scales
     and applies the correction-term inverse A^T Y A, writing one spatial
-    (M, nW*M) output strip.
+    (imgs, rows*M, nW*M) output strip group.
 
 The transform-domain tensor therefore never touches HBM.
 
+Grouping (``rows_per_step``): ``rows = min(rows_per_step, nH)`` tile-rows
+of one image fold into a step; when ``rows_per_step >= nH`` the leftover
+factor folds whole images (``imgs = rows_per_step // nH``, clamped to a
+divisor of B so no padded images are computed).  ``rows_per_step=None``
+resolves via :func:`auto_rows_per_step`, the largest candidate whose
+per-step footprint (:func:`fused_vmem_bytes`, the budget math below) fits
+``VMEM_LIMIT_BYTES``.  All groupings are bit-identical to
+``rows_per_step=1``: the per-strip transform arithmetic and the per-column
+matmul contraction are unchanged, only the grid batching differs.
+
 VMEM budget per grid step (f32 in, defaults K_BLOCK=COUT_BLOCK=128, the
-VGG-16 224x224 worst case with SFC-6(7x7,3x3): L=9, t=12, nW=32, Wp=226):
-  input strip : 9 * 226 * 128 * 4B          = 1.0 MiB
+VGG-16 224x224 worst case with SFC-6(7x7,3x3): L=9, t=12, nW=32, Wp=226,
+rows=1):
+  input strip : 9 * 226 * 128 * 4B          = 1.0 MiB   (x2 double_buffer)
   row xform   : 12 * 226 * 128 * 4B         = 1.4 MiB
   xq cache    : <= XQ_CACHE_BYTES           = 4.0 MiB
   weights     : 144 * 128 * 128 * 1B        = 2.3 MiB
   int32 acc   : 144 * 32 * 128 * 4B         = 2.3 MiB
   out strip   : 7 * 224 * 128 * 4B          = 0.8 MiB    (~12 MiB < 16 MiB)
+:func:`fused_vmem_bytes` reproduces exactly these terms (scaled by the
+grouping) and is regression-tested against them.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -54,22 +74,107 @@ from repro.core.generator import BilinearAlgorithm
 K_BLOCK = 128
 COUT_BLOCK = 128
 # cap on the quantized-strip cache that amortizes the input transform
-# across C_out blocks (full-K int8 residency of ONE tile-row strip)
+# across C_out blocks (full-K int8 residency of ONE strip group)
 XQ_CACHE_BYTES = 4 * 1024 * 1024
+# per-step VMEM ceiling the batching helper packs against (v5e: 16 MiB
+# usable VMEM per core; the budget math is documented in the module
+# docstring and regression-tested in tests/test_conformance.py)
+VMEM_LIMIT_BYTES = 16 * 1024 * 1024
+# candidate group sizes auto_rows_per_step tries, largest first
+AUTO_ROWS_CANDIDATES = (8, 4, 2, 1)
 
 
 def _round_up(n: int, mult: int) -> int:
     return -(-n // mult) * mult
 
 
+def cache_fits(n_o: int, n_k: int, P: int, cols: int, kb: int) -> bool:
+    """Whether the quantized-strip cache is worth allocating: multiple
+    C_out blocks to amortize over, and full-K residency of one strip
+    group's int8 strips under ``XQ_CACHE_BYTES``.  The ONE predicate both
+    the VMEM-budget helper and the kernel wrapper consult — if they
+    disagreed, ``auto_rows_per_step`` would budget a scratch the kernel
+    does (or does not) allocate."""
+    return n_o > 1 and n_k * P * cols * kb <= XQ_CACHE_BYTES
+
+
+def grouping(B: int, nH: int, rows_per_step: int) -> Tuple[int, int]:
+    """Resolve ``rows_per_step`` into ``(imgs, rows)`` folded per step.
+
+    ``rows`` tile-rows of one image always come first; only when the
+    requested group exceeds one image's tile-rows does the remainder fold
+    whole images — and only divisors of B, so no zero-padded image is
+    ever computed.
+    """
+    g = max(1, rows_per_step)
+    rows = min(g, nH)
+    imgs = 1
+    if g >= nH and B > 1:
+        cap = min(B, g // nH)
+        imgs = max(d for d in range(1, cap + 1) if B % d == 0)
+    return imgs, rows
+
+
+def fused_vmem_bytes(algo: BilinearAlgorithm, n_w: int, w_padded: int,
+                     kb: int, cb: int, *, n_k: int = 1, rows: int = 1,
+                     imgs: int = 1, cache_xq: bool = False,
+                     double_buffer: bool = False) -> int:
+    """Per-grid-step VMEM footprint of the fused kernel, in bytes.
+
+    Reproduces the module docstring's budget table term by term, scaled
+    by the (imgs, rows) grouping: input strip group (doubled when
+    double-buffered), the per-strip row-transform intermediate, the int8
+    quantized-strip matmul LHS, the optional full-K xq cache, the weight
+    k-block, the int32 accumulator, and the output strip group.
+    """
+    t, M, L = algo.t, algo.M, algo.L
+    P = t * t
+    span = (rows - 1) * M + L
+    cols = imgs * rows * n_w               # tile columns folded per step
+    strip = imgs * span * w_padded * kb * 4
+    if double_buffer:
+        strip *= 2
+    row_xform = t * w_padded * kb * 4      # one strip at a time
+    xq = P * cols * kb                     # int8
+    xq_cache = n_k * P * cols * kb if cache_xq else 0
+    weights = P * kb * cb                  # int8
+    acc = P * cols * cb * 4                # int32
+    out = imgs * rows * M * n_w * M * cb * 4
+    return strip + row_xform + xq + xq_cache + weights + acc + out
+
+
+def auto_rows_per_step(algo: BilinearAlgorithm, B: int, nH: int, n_w: int,
+                       w_padded: int, kb: int, cb: int, *, n_k: int = 1,
+                       n_o: int = 1, double_buffer: bool = False) -> int:
+    """Largest AUTO_ROWS_CANDIDATES group whose step fits the VMEM budget.
+
+    Falls back to 1 (the ungrouped grid, which the docstring's worst case
+    shows fits at the default block sizes).
+    """
+    for g in AUTO_ROWS_CANDIDATES:
+        imgs, rows = grouping(B, nH, g)
+        cols = imgs * rows * n_w
+        cache = cache_fits(n_o, n_k, algo.t ** 2, cols, kb)
+        if fused_vmem_bytes(algo, n_w, w_padded, kb, cb, n_k=n_k,
+                            rows=rows, imgs=imgs, cache_xq=cache,
+                            double_buffer=double_buffer) \
+                <= VMEM_LIMIT_BYTES:
+            return g
+    return 1
+
+
 def _fused_kernel(bt_ref, at_ref, sx_ref, sw_ref, x_ref, w_ref, o_ref,
                   acc_ref, *scratch, n_w: int, M: int, L: int, bits: int,
-                  n_k: int, cache_xq: bool):
-    """One (tile-row, C_out block, C_in block) step of the fused pipeline.
+                  n_k: int, n_o: int, grid0: int, g_h: int, imgs: int,
+                  rows: int, span: int, kb: int, cache_xq: bool,
+                  double_buffer: bool):
+    """One (strip group, C_out block, C_in block) step of the pipeline.
 
-    ``scratch`` holds the quantized-strip cache ref only when ``cache_xq``
-    (the wrapper allocates it conditionally).
+    ``scratch`` holds, in order and each only when enabled: the
+    quantized-strip cache (``cache_xq``), then the two-slot DMA landing
+    buffer + its semaphore pair (``double_buffer``).
     """
+    i = pl.program_id(0)
     j = pl.program_id(1)
     k = pl.program_id(2)
 
@@ -82,70 +187,144 @@ def _fused_kernel(bt_ref, at_ref, sx_ref, sw_ref, x_ref, w_ref, o_ref,
     s = sx_ref[...]                                # (t, t)
     qmax = 2 ** (bits - 1) - 1
 
-    def _quantized_strip():
-        x = x_ref[0]                               # (L, Wp, kb) f32
-        # row transform once for the whole strip; every tile column
-        # reuses it
-        rows = jnp.einsum("ti,iwc->twc", bt, x,
-                          preferred_element_type=jnp.float32)
+    scratch = list(scratch)
+    xq_ref = scratch.pop(0) if cache_xq else None
+
+    if double_buffer:
+        buf_ref, sem_ref = scratch
+        # one strip-sequence entry per CONSUMING step: with the xq cache
+        # only j == 0 steps touch the input (j > 0 replays from VMEM);
+        # without it every step re-reads its strip (same HBM traffic as
+        # the BlockSpec path re-fetching per C_out block)
+        if cache_xq:
+            s_idx = i * n_k + k
+            total = grid0 * n_k
+
+            def _coords(sn):
+                return sn // n_k, sn % n_k
+        else:
+            s_idx = (i * n_o + j) * n_k + k
+            total = grid0 * n_o * n_k
+
+            def _coords(sn):
+                return sn // (n_o * n_k), sn % n_k
+
+        def _dma(sn):
+            si, sk = _coords(sn)
+            bi = si // g_h
+            gi = si % g_h
+            return pltpu.make_async_copy(
+                x_ref.at[pl.ds(bi * imgs, imgs),
+                         pl.ds(gi * rows * M, span),
+                         slice(None), pl.ds(sk * kb, kb)],
+                buf_ref.at[sn % 2], sem_ref.at[sn % 2])
+
+        def _pipeline():
+            # warm-up: the very first step issues its own strip's DMA;
+            # every consuming step then prefetches the NEXT strip into
+            # the other slot before blocking on its own — the next read
+            # is in flight for the whole transform+matmul of this one
+            @pl.when(s_idx == 0)
+            def _first():
+                _dma(0).start()
+
+            @pl.when(s_idx + 1 < total)
+            def _prefetch():
+                _dma(s_idx + 1).start()
+
+            _dma(s_idx).wait()
+
+        if cache_xq:
+            pl.when(j == 0)(_pipeline)
+        else:
+            _pipeline()
+
+        def _load_group():
+            return buf_ref[s_idx % 2]              # (imgs, span, Wp, kb)
+    else:
+        def _load_group():
+            return x_ref[...]                      # (imgs, span, Wp, kb)
+
+    def _quantized_strips():
+        xg = _load_group()
         q_cols = []
-        for jj in range(n_w):                      # static unroll: tile cols
-            tx = jnp.einsum("uj,tjc->tuc", bt, rows[:, jj * M:jj * M + L, :],
-                            preferred_element_type=jnp.float32)
-            q = jnp.clip(jnp.round(tx / s[:, :, None]), -qmax, qmax)
-            q_cols.append(q.reshape(t * t, -1))    # (P, kb)
-        return jnp.stack(q_cols, axis=1).astype(jnp.int8)   # (P, nW, kb)
+        for im in range(imgs):                     # static unroll: strips
+            for r in range(rows):
+                xs = xg[im, r * M:r * M + L]       # (L, Wp, kb) f32
+                # row transform once for the whole strip; every tile
+                # column reuses it
+                rws = jnp.einsum("ti,iwc->twc", bt, xs,
+                                 preferred_element_type=jnp.float32)
+                for jj in range(n_w):              # static unroll: cols
+                    tx = jnp.einsum("uj,tjc->tuc", bt,
+                                    rws[:, jj * M:jj * M + L, :],
+                                    preferred_element_type=jnp.float32)
+                    q = jnp.clip(jnp.round(tx / s[:, :, None]), -qmax, qmax)
+                    q_cols.append(q.reshape(t * t, -1))    # (P, kb)
+        # (P, imgs*rows*nW, kb)
+        return jnp.stack(q_cols, axis=1).astype(jnp.int8)
 
     if cache_xq:
-        # strips depend on (tile-row, k) only: compute on the first C_out
-        # block, replay from VMEM for the rest
-        xq_ref, = scratch
-
+        # strips depend on (strip group, k) only: compute on the first
+        # C_out block, replay from VMEM for the rest
         @pl.when(j == 0)
         def _fill_cache():
-            xq_ref[k] = _quantized_strip()
+            xq_ref[k] = _quantized_strips()
         xq = xq_ref[k]
     else:
-        xq = _quantized_strip()
+        xq = _quantized_strips()
     w = w_ref[...]                                     # (P, kb, cb) int8
     acc_ref[...] += jax.lax.dot_general(
         xq, w, (((2,), (1,)), ((0,), (0,))),
-        preferred_element_type=jnp.int32)              # (P, nW, cb)
+        preferred_element_type=jnp.int32)              # (P, cols, cb)
 
     @pl.when(k == n_k - 1)
     def _finalize():
         at = at_ref[...]                           # (M, t)
         sw = sw_ref[...]                           # (P, cb)
         scale = s.reshape(t * t)[:, None, None] * sw[:, None, :]
-        y = acc_ref[...].astype(jnp.float32) * scale   # (P, nW, cb)
-        ty = y.reshape(t, t, n_w, -1)
-        z = jnp.einsum("mt,tunc->munc", at, ty,
+        y = acc_ref[...].astype(jnp.float32) * scale   # (P, cols, cb)
+        ty = y.reshape(t, t, imgs * rows, n_w, -1)
+        z = jnp.einsum("mt,tugnc->mugnc", at, ty,
                        preferred_element_type=jnp.float32)
-        z = jnp.einsum("pu,munc->mnpc", at, z,
-                       preferred_element_type=jnp.float32)  # (M, nW, M, cb)
-        o_ref[0] = z.reshape(M, n_w * M, -1).astype(o_ref.dtype)
+        z = jnp.einsum("pu,mugnc->mgnpc", at, z,
+                       preferred_element_type=jnp.float32)
+        # (M, imgs*rows, nW, M, cb) -> (imgs, rows*M, nW*M, cb)
+        z = z.reshape(M, imgs, rows, n_w, M, -1)
+        z = jnp.transpose(z, (1, 2, 0, 3, 4, 5))
+        o_ref[...] = z.reshape(imgs, rows * M, n_w * M, -1).astype(
+            o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("algo", "padding", "bits",
                                              "interpret", "k_block",
-                                             "cout_block"))
+                                             "cout_block", "rows_per_step",
+                                             "double_buffer"))
 def sfc_fused_conv2d(x: jnp.ndarray, wq: jnp.ndarray,
                      act_scale: jnp.ndarray, w_scale: jnp.ndarray,
                      algo: BilinearAlgorithm, *,
                      padding: str = "SAME", bits: int = 8,
                      interpret: bool = True,
                      k_block: Optional[int] = K_BLOCK,
-                     cout_block: int = COUT_BLOCK) -> jnp.ndarray:
+                     cout_block: int = COUT_BLOCK,
+                     rows_per_step: Optional[int] = 1,
+                     double_buffer: bool = False) -> jnp.ndarray:
     """int8 SFC convolution in one ``pallas_call``.
 
     x (B, H, W, Cin) f32; wq (t^2, Cin, Cout) int8; act_scale (t, t);
     w_scale (t, t, Cout) -> (B, H', W', Cout) f32.  Numerically identical
-    to the staged ``quantized_fastconv2d`` (same integer grid and scales).
-    ``bits`` sets the activation clipping grid (sub-int8 policies run on
-    the int8 carrier).  ``k_block=None`` means full K: the whole C_in
-    reduction in a single k-block (``n_k = 1``) — the autotuner's
-    "no reduction grid dim" candidate, same convention as the staged
-    ``tdmm_int8``.
+    to the staged ``quantized_fastconv2d`` (same integer grid and scales)
+    at every grouping.  ``bits`` sets the activation clipping grid
+    (sub-int8 policies run on the int8 carrier).  ``k_block=None`` means
+    full K: the whole C_in reduction in a single k-block (``n_k = 1``) —
+    the autotuner's "no reduction grid dim" candidate, same convention as
+    the staged ``tdmm_int8``.  ``rows_per_step`` folds that many
+    tile-rows (counting across images once one image's rows are
+    exhausted — see :func:`grouping`) into a single grid step;
+    ``None`` picks the largest budget-fitting group via
+    :func:`auto_rows_per_step`.  ``double_buffer`` switches the input
+    strip reads to a manually DMA-pipelined two-slot VMEM buffer
+    (prefetch of strip s+1 overlaps compute on strip s).
     """
     B, H, W, C = x.shape
     t, M, R, L = algo.t, algo.M, algo.R, algo.L
@@ -167,36 +346,68 @@ def sfc_fused_conv2d(x: jnp.ndarray, wq: jnp.ndarray,
     Op = _round_up(Cout, cb)
     n_k = Cp // kb
     n_o = Op // cb
-    xp = jnp.pad(xp, ((0, 0), (0, 0), (0, 0), (0, Cp - C)))
+
+    if rows_per_step is None:
+        rows_per_step = auto_rows_per_step(
+            algo, B, nH, nW, Wp, kb, cb, n_k=n_k, n_o=n_o,
+            double_buffer=double_buffer)
+    imgs, rows = grouping(B, nH, rows_per_step)
+    g_h = -(-nH // rows)                   # strip groups per image column
+    nH_p = g_h * rows
+    g_b = B // imgs                        # imgs divides B by construction
+    span = (rows - 1) * M + L
+    grid0 = g_b * g_h
+
+    # grouped-grid padding: strips of the last group read rows up to
+    # (nH_p - 1) * M + L; the extra zero rows produce output rows that are
+    # sliced off below
+    pad_h = (nH_p - 1) * M + L - xp.shape[1]
+    xp = jnp.pad(xp, ((0, 0), (0, max(0, pad_h)), (0, 0), (0, Cp - C)))
     wqp = jnp.pad(wq, ((0, 0), (0, Cp - C), (0, Op - Cout)))
     sw = jnp.pad(w_scale.reshape(P, Cout).astype(jnp.float32),
                  ((0, 0), (0, Op - Cout)))
 
-    cache_xq = n_o > 1 and n_k * P * nW * kb <= XQ_CACHE_BYTES
-    kern = functools.partial(_fused_kernel, n_w=nW, M=M, L=L, bits=bits,
-                             n_k=n_k, cache_xq=cache_xq)
+    cols = imgs * rows * nW
+    cache_xq = cache_fits(n_o, n_k, P, cols, kb)
+    kern = functools.partial(
+        _fused_kernel, n_w=nW, M=M, L=L, bits=bits, n_k=n_k, n_o=n_o,
+        grid0=grid0, g_h=g_h, imgs=imgs, rows=rows, span=span, kb=kb,
+        cache_xq=cache_xq, double_buffer=double_buffer)
+    if double_buffer:
+        # the strips land via manual DMA from HBM: the operand never
+        # enters the automatic BlockSpec pipeline
+        x_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+    else:
+        # overlapping (span, Wp) strip groups at row stride rows*M,
+        # straight from HBM — element-offset (Unblocked) index map
+        x_spec = pl.BlockSpec(
+            (imgs, span, Wp, kb),
+            lambda i, j, k, _gh=g_h, _im=imgs, _rm=rows * M:
+            ((i // _gh) * _im, (i % _gh) * _rm, 0, k * kb),
+            indexing_mode=pl.Unblocked())
+    scratch_shapes = [pltpu.VMEM((P, cols, cb), jnp.int32)]
+    if cache_xq:
+        scratch_shapes.append(pltpu.VMEM((n_k, P, cols, kb), jnp.int8))
+    if double_buffer:
+        scratch_shapes += [pltpu.VMEM((2, imgs, span, Wp, kb), jnp.float32),
+                           pltpu.SemaphoreType.DMA((2,))]
     out = pl.pallas_call(
         kern,
-        grid=(B * nH, n_o, n_k),
+        grid=(grid0, n_o, n_k),
         in_specs=[
             pl.BlockSpec((t, L), lambda i, j, k: (0, 0)),
             pl.BlockSpec((M, t), lambda i, j, k: (0, 0)),
             pl.BlockSpec((t, t), lambda i, j, k: (0, 0)),
             pl.BlockSpec((P, cb), lambda i, j, k: (0, j)),
-            # overlapping (L, Wp) input strips at row stride M, straight
-            # from HBM — element-offset (Unblocked) index map
-            pl.BlockSpec((1, L, Wp, kb),
-                         lambda i, j, k, _nH=nH: (i // _nH, (i % _nH) * M,
-                                                  0, k * kb),
-                         indexing_mode=pl.Unblocked()),
+            x_spec,
             pl.BlockSpec((P, kb, cb), lambda i, j, k: (0, k, j)),
         ],
-        out_specs=pl.BlockSpec((1, M, nW * M, cb),
-                               lambda i, j, k, _nH=nH: (i // _nH, i % _nH,
-                                                        0, j)),
-        out_shape=jax.ShapeDtypeStruct((B, nH * M, nW * M, Op), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((P, nW, cb), jnp.int32)] + (
-            [pltpu.VMEM((n_k, P, nW, kb), jnp.int8)] if cache_xq else []),
+        out_specs=pl.BlockSpec((imgs, rows * M, nW * M, cb),
+                               lambda i, j, k, _gh=g_h: (i // _gh, i % _gh,
+                                                         0, j)),
+        out_shape=jax.ShapeDtypeStruct((B, nH_p * M, nW * M, Op),
+                                       jnp.float32),
+        scratch_shapes=scratch_shapes,
         interpret=interpret,
     )(jnp.asarray(algo.bt(), jnp.float32), jnp.asarray(algo.at(), jnp.float32),
       act_scale.astype(jnp.float32), sw, xp, wqp)

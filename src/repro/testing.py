@@ -1,0 +1,109 @@
+"""Differential conformance oracle for the conv kernel zoo.
+
+The kernel zoo now has many executable configurations of one mathematical
+convolution — the reference jnp simulation, the staged three-kernel Pallas
+pipeline, and the fused single-pass kernel at every (k_block, cout_block,
+rows_per_step, double_buffer) grouping — plus the SPMD backend wrapping
+any of them.  Each new variant used to bring its own ad-hoc parity test;
+this module is the ONE oracle they all share (and the hypothesis fuzz
+suite in ``tests/test_conformance.py`` drives):
+
+  * int8 paths share a single integer grid and static scales, so every
+    Pallas configuration must agree with the staged pipeline
+    **bit-for-bit** (``==``, not allclose) — any reordering of the
+    integer accumulation or a quantization-grid drift is a hard failure;
+  * the reference backend's int8 *simulation* runs the same grid in
+    fp32 jnp, so Pallas vs reference is held to the API's fp epsilon;
+  * fp (unquantized) paths have no shared grid and are held to the fp
+    epsilon against the reference backend.
+
+Import from tests as ``from repro.testing import assert_conv_conformance``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_TOL = 1e-4
+
+# the fused-kernel configurations every int8 case is checked at when the
+# caller does not narrow them: the default grid, a ragged k-block, full-K,
+# the batched multi-tile-row grids (incl. auto), and DMA double-buffering
+DEFAULT_FUSED_VARIANTS = (
+    dict(k_block=128, cout_block=128, rows_per_step=1),
+    dict(k_block=64, cout_block=128, rows_per_step=2),
+    dict(k_block=None, cout_block=128, rows_per_step=4),
+    dict(k_block=128, cout_block=128, rows_per_step=None),
+    dict(k_block=128, cout_block=128, rows_per_step=2, double_buffer=True),
+)
+
+
+def fused_variant_configs(variants: Sequence[dict] = DEFAULT_FUSED_VARIANTS):
+    """``KernelConfig`` objects for a sequence of fused-kernel kwarg dicts."""
+    from repro.api.tuning import KernelConfig
+    return tuple(KernelConfig(datapath="fused", **v) for v in variants)
+
+
+def calibrated_prep(x, w, spec, algo_name: str):
+    """(reference plan, pallas plan, PreparedWeights) with absmax
+    activation scales calibrated on ``x`` — the shared setup of every
+    differential int8 case.  Degraded (direct) and fp plans skip
+    calibration and return ``prep=None``."""
+    from repro.api import plan, tuning
+    p_ref = plan(spec, backend="reference", algo=algo_name)
+    p_pal = plan(spec, backend="pallas", algo=algo_name)
+    if p_pal.algorithm is None or not spec.quant.enabled:
+        return p_ref, p_pal, None
+    act = tuning.calibrate_act_scale(x, p_pal.algorithm, spec.quant,
+                                     spec.padding)
+    return p_ref, p_pal, p_pal.prepare_weights(w, act_scale=act)
+
+
+def assert_conv_conformance(x, w, spec, algo_name: str = "auto", *,
+                            variants: Sequence[dict] = DEFAULT_FUSED_VARIANTS,
+                            allow_degraded: bool = False,
+                            rtol: float = DEFAULT_TOL,
+                            atol: float = DEFAULT_TOL) -> jnp.ndarray:
+    """Assert every executable configuration of (x, w, spec) agrees.
+
+    int8 specs: the staged pipeline and every fused variant must be
+    bit-identical to each other, and fp-close to the reference int8
+    simulation.  fp specs: the pallas path must be fp-close to the
+    reference backend.  A spec that degrades to the direct path is an
+    ERROR unless ``allow_degraded`` — a planner regression silently
+    degrading fast-eligible specs must fail the suite loudly, not turn
+    it into a vacuous direct-vs-direct comparison (only the
+    deliberately-degrading cases, e.g. stride 2, opt in).  Raises
+    ``AssertionError`` naming the variant that diverged; returns the
+    reference output for callers that want extra checks.
+    """
+    from repro.api import tuning
+    p_ref, p_pal, prep = calibrated_prep(x, w, spec, algo_name)
+    assert allow_degraded or p_pal.algorithm is not None, \
+        f"spec unexpectedly degraded to the direct path: {spec}"
+    if p_pal.algorithm is None or not spec.quant.enabled:
+        prep = p_pal.prepare_weights(w)
+        y_ref = p_ref.apply(x, prep)
+        y_pal = p_pal.apply(x, prep)
+        np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                                   rtol=rtol, atol=atol)
+        return y_ref
+    y_ref = p_ref.apply(x, prep)
+    p_staged = dataclasses.replace(p_pal, config=tuning.DEFAULT_STAGED)
+    y_staged = p_staged.apply(x, prep)
+    assert y_staged.shape == y_ref.shape, \
+        f"staged shape {y_staged.shape} != reference {y_ref.shape}"
+    np.testing.assert_allclose(np.asarray(y_staged), np.asarray(y_ref),
+                               rtol=rtol, atol=atol,
+                               err_msg="staged vs reference int8 simulation")
+    want = np.asarray(y_staged)
+    for cfg in fused_variant_configs(variants):
+        y = dataclasses.replace(p_pal, config=cfg).apply(x, prep)
+        assert np.array_equal(np.asarray(y), want), (
+            f"fused(k={cfg.k_block},co={cfg.cout_block},"
+            f"r={cfg.rows_per_step},db={int(cfg.double_buffer)}) "
+            f"is not bit-identical to staged for {spec}")
+    return y_ref

@@ -22,6 +22,28 @@ def _clear_jax_caches_per_module():
     gc.collect()
 
 
+@pytest.fixture
+def deterministic_time_fn(monkeypatch):
+    """Replace ``tuning.time_fn`` with a call-order timer.
+
+    The datapath under test still executes once (compile errors and
+    numerical crashes surface), but the reported "latency" is the call
+    index — so tests asserting on autotune *rankings* (fastest-measured
+    wins) are deterministic instead of flaking on host-load noise.
+    Returns the log of (reported time, fn) entries.
+    """
+    from repro.api import tuning
+    log = []
+
+    def fake_time_fn(fn, *args, reps=3):
+        jax.block_until_ready(fn(*args))
+        log.append(((len(log) + 1) * 1e-3, fn))
+        return log[-1][0]
+
+    monkeypatch.setattr(tuning, "time_fn", fake_time_fn)
+    return log
+
+
 @pytest.fixture(autouse=True)
 def _isolated_tuning_cache(tmp_path):
     """Hermetic measured-latency cache for every test.

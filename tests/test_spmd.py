@@ -15,7 +15,8 @@ import numpy as np
 import pytest
 
 from repro.api import ConvSpec, get_backend, plan
-from repro.api.tuning import DEFAULT_STAGED, calibrate_act_scale
+from repro.api.tuning import (DEFAULT_STAGED, KernelConfig,
+                              calibrate_act_scale)
 from repro.launch.mesh import make_forced_host_mesh
 from repro.quant.fake_quant import INT8_FREQ
 
@@ -161,6 +162,22 @@ def test_rank1_depthwise_delegates(spmd):
     spec = ConvSpec.for_conv1d_depthwise(x.shape, w.shape)
     y_s = plan(spec, backend="pallas_spmd", algo="auto").apply(x, w)
     y_1 = plan(spec, backend="pallas", algo="auto").apply(x, w)
+    assert bool(jnp.all(y_s == y_1))
+
+
+def test_batched_double_buffered_config_rides_shards(spmd):
+    """A KernelConfig with the batched multi-tile-row grid and DMA
+    double-buffering rides the plan through shard_map: each shard runs
+    the grouped kernel on its local batch, bit-identical to the
+    ungrouped single-device fused path."""
+    spmd()
+    x, w = _data(b=4, hw=8, seed=8)          # nH=2: shards fold images
+    p_s, p_1, act = _int8_plans(x, w)
+    cfg = KernelConfig(datapath="fused", rows_per_step=4,
+                       double_buffer=True)
+    p_s = dataclasses.replace(p_s, config=cfg)
+    y_s = p_s.apply(x, p_s.prepare_weights(w, act_scale=act))
+    y_1 = p_1.apply(x, p_1.prepare_weights(w, act_scale=act))
     assert bool(jnp.all(y_s == y_1))
 
 
