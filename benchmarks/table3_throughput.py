@@ -20,7 +20,11 @@ machine-readable per-layer wall-clock sweep of the five datapaths
             small-image variant ROADMAP calls for
   int8    — reference-backend static-int8 simulation (jnp)
 
-so the perf trajectory is tracked from PR 2 onward (EXPERIMENTS.md §Perf).
+plus the ``resnet_lowered`` rows: ResNet-18's stride-2 stem and stage
+transitions and a 2-D depthwise conv — the workloads the lowering layer
+(``repro.api.lowering``) opened up — each timed direct-vs-``lowered``
+(the per-run ``lowered_totals_ms`` ride the trajectory entries).
+The perf trajectory is tracked from PR 2 onward (EXPERIMENTS.md §Perf).
 The artifact is ACCUMULATED, not overwritten: existing keys written by
 other suites (``scaleout``) survive, and every run appends a timestamped,
 git-SHA-tagged entry to ``trajectory`` so the CI artifact carries the
@@ -49,6 +53,18 @@ VGG_LAYERS = [(224, 3, 64), (224, 64, 64), (112, 64, 128), (112, 128, 128),
               (56, 128, 256), (56, 256, 256), (56, 256, 256),
               (28, 256, 512), (28, 512, 512), (28, 512, 512),
               (14, 512, 512), (14, 512, 512), (14, 512, 512)]
+
+# The workloads the lowering layer opened up (ISSUE 5): ResNet-18's
+# stride-2 stem + stage transitions (polyphase onto stride-1 SFC
+# sub-convs) and a MobileNet-style 2-D depthwise conv (transform-domain
+# elementwise path).  (name, HxW, Cin, Cout, R, stride, depthwise) at 224.
+RESNET_LOWERED_LAYERS = [
+    ("stem7x7s2", 224, 3, 64, 7, 2, False),
+    ("s1tos2", 56, 64, 128, 3, 2, False),
+    ("s2tos3", 28, 128, 256, 3, 2, False),
+    ("s3tos4", 14, 256, 512, 3, 2, False),
+    ("dw3x3", 28, 256, 256, 3, 1, True),
+]
 
 BENCH_PATH = os.environ.get("REPRO_BENCH_OUT", "BENCH_conv.json")
 
@@ -110,6 +126,59 @@ def _layer_sweep(layers, algo_name: str, reps: int, log) -> list:
     return rows
 
 
+def _lowered_sweep(cap: int, reps: int, log) -> list:
+    """Wall-clock of the lowered datapaths vs strided/grouped direct.
+
+    One row per :data:`RESNET_LOWERED_LAYERS` entry with a ``lowered_ms``
+    column: the int8 plan the planner resolves for the workload (polyphase
+    composite over fused sub-kernels for stride-2; the transform-domain
+    elementwise kernel for depthwise) against the XLA strided direct
+    baseline.  ``algo='sfc6_6'`` forces lowering even at reduced bench
+    shapes where the BOPs model would keep tiny workloads direct — the
+    row's ``path`` records what ``algo='auto'`` would have picked.
+    """
+    from repro.api.tuning import calibrate_act_scale as _cal
+    rng = np.random.RandomState(1)
+    rows = []
+    for name, hw, cin, cout, r, stride, dw in RESNET_LOWERED_LAYERS:
+        hw_s = max(round(hw * cap / 224), 7) if cap < 224 else hw
+        x = jnp.asarray(rng.randn(1, hw_s, hw_s, cin), jnp.float32)
+        w = jnp.asarray(rng.randn(r, r, 1 if dw else cin, cout) * 0.1,
+                        jnp.float32)
+        if dw:
+            spec = ConvSpec.for_conv2d_depthwise(x.shape, w.shape,
+                                                 quant=INT8_FREQ)
+        else:
+            spec = ConvSpec.for_conv2d(x.shape, w.shape, stride=stride,
+                                       quant=INT8_FREQ)
+        p_direct = plan(spec, algo="direct")
+        p_fast = plan(spec, backend="pallas", algo="sfc6_6")
+        if p_fast.path == "lowered":
+            prep = p_fast.prepare_weights(w, act_scale=p_fast.calibrate(x))
+        else:
+            act = _cal(x, p_fast.algorithm, spec.quant, spec.padding)
+            prep = p_fast.prepare_weights(w, act_scale=act)
+        row = {"layer": name, "hw": hw_s, "cin": cin, "cout": cout,
+               "kernel": r, "stride": stride, "depthwise": dw,
+               "path": p_fast.path,
+               # auto's verdict for the backend actually benchmarked (its
+               # tuning-cache entries are keyed per backend)
+               "auto_path": plan(spec, backend="pallas", algo="auto").path}
+        fns = {
+            "direct": jax.jit(lambda a, _p=p_direct: _p.apply(a, w)),
+            "lowered": jax.jit(lambda a, _p=p_fast, _pr=prep:
+                               _p.apply(a, _pr)),
+        }
+        for key, fn in fns.items():
+            row[f"{key}_ms"] = _time(fn, x, reps=reps) * 1e3
+        rows.append(row)
+        log(f"lowered {name} {hw_s}x{hw_s}x{cin}->{cout}"
+            f"{'dw' if dw else ''}s{stride},"
+            f"direct={row['direct_ms']:.2f}ms,"
+            f"lowered={row['lowered_ms']:.2f}ms,path={row['path']}")
+    return rows
+
+
 def _git_sha() -> str:
     try:
         return subprocess.run(
@@ -148,6 +217,13 @@ def run(log=print, bench_path: str = None, reps: int = None,
             / max(sum(r["batched_ms"] for r in small), 1e-9)
         log(f"small_image_batched_speedup_hw_le_14,{gain:.2f}x")
 
+    # the lowered workloads: ResNet-18 stride-2 + depthwise rows
+    lowered_rows = _lowered_sweep(spatial_cap, reps, log)
+    lowered_totals = {k: sum(r[f"{k}_ms"] for r in lowered_rows)
+                      for k in ("direct", "lowered")}
+    for k, v in lowered_totals.items():
+        log(f"resnet18_lowered_stack_{k}_ms,{v:.2f}")
+
     # accumulate, never overwrite: other suites' keys (scaleout) and the
     # cross-PR trajectory survive this run
     bench = {}
@@ -166,6 +242,7 @@ def run(log=print, bench_path: str = None, reps: int = None,
         "spatial_cap": spatial_cap, "reps": reps,
         "layers": rows,
         "totals_ms": totals,
+        "resnet_lowered": lowered_rows,
     })
     entry = {
         "ts": datetime.datetime.now(datetime.timezone.utc)
@@ -174,6 +251,7 @@ def run(log=print, bench_path: str = None, reps: int = None,
         "platform": jax.default_backend(), "jax": jax.__version__,
         "spatial_cap": spatial_cap, "reps": reps,
         "totals_ms": totals,
+        "lowered_totals_ms": lowered_totals,
     }
     bench.setdefault("trajectory", []).append(entry)
     with open(bench_path, "w") as f:
@@ -185,7 +263,8 @@ def run(log=print, bench_path: str = None, reps: int = None,
     log(f"mults_per_output_direct,{9*64}")
     log(f"mults_per_output_sfc,{algo.mults_2d/algo.M**2*64:.1f}")
     return {"bops_reduction": total_direct_bops / total_sfc_bops,
-            "bench_path": bench_path, "totals_ms": totals}
+            "bench_path": bench_path, "totals_ms": totals,
+            "lowered_totals_ms": lowered_totals}
 
 
 if __name__ == "__main__":

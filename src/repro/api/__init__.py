@@ -12,9 +12,10 @@ not apply, and dispatches execution to the ``reference`` (pure jnp) or
 extension seam for future backends — register new ones with
 ``register_backend`` and new algorithms with ``register_algorithm``.
 """
-from repro.api import serving_cache, tuning
+from repro.api import lowering, serving_cache, tuning
 from repro.api.backends import (get_backend, list_backends,
                                 register_backend)
+from repro.api.lowering import CompositePlan, CompositePrepared
 from repro.api.plan import ConvPlan, PreparedWeights
 from repro.api.planner import estimate_cost, plan, select_algorithm
 from repro.api.registry import (get_algorithm, list_algorithms,
@@ -25,6 +26,7 @@ from repro.api.tuning import KernelConfig, autotune
 
 __all__ = [
     "ConvSpec", "ConvPlan", "PreparedWeights", "plan",
+    "lowering", "CompositePlan", "CompositePrepared",
     "select_algorithm", "estimate_cost",
     "register_algorithm", "get_algorithm", "list_algorithms",
     "register_backend", "get_backend", "list_backends",

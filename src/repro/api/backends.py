@@ -9,11 +9,17 @@ Two backends ship today, both consuming the same ``PreparedWeights``:
     CPU).  Static precision only: fp, or int8 with PTQ-calibrated scales
     baked into the prepared weights.
 
-Both degrade identically: the direct path (stride != 1, pointwise, taps
-mismatch) runs XLA's native convolution — already optimal there, so the
-Pallas backend deliberately reuses it rather than shipping a worse kernel.
-The registry is open so future backends (GPU pallas, sharded, batched
-serving) plug in via :func:`register_backend` without touching call sites.
+2-D depthwise specs run the transform-domain *elementwise* stage instead
+of the t^2 matmuls on both backends (jnp broadcast on ``reference``; the
+``tdmm_int8_depthwise`` / fused depthwise kernels on ``pallas``).  Both
+backends degrade identically: the direct path (pointwise 1x1, taps
+mismatch, non-profitable lowerings — strided/grouped shapes are first
+rewritten by ``repro.api.lowering``) runs XLA's native convolution
+(grouped/depthwise via ``feature_group_count``) — already optimal there,
+so the Pallas backend deliberately reuses it rather than shipping a worse
+kernel.  The registry is open so future backends (GPU pallas, sharded,
+batched serving) plug in via :func:`register_backend` without touching
+call sites.
 """
 from __future__ import annotations
 
@@ -47,9 +53,14 @@ def _direct(plan, x, prep, bias) -> jnp.ndarray:
     if spec.rank == 1:
         return _add_bias(
             c2d.conv1d_depthwise_causal_direct(x, prep.w), bias)
+    # grouped / depthwise run through lax's feature_group_count; depthwise
+    # derives the count from the weight tensor (R, R, 1, C) rather than
+    # the spec so shard-local slices under the SPMD backend stay correct
+    fgc = prep.w.shape[-1] if spec.depthwise else spec.groups
     y = jax.lax.conv_general_dilated(
         x, prep.w.astype(x.dtype), (spec.stride, spec.stride), spec.padding,
-        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=fgc)
     return _add_bias(y, bias)
 
 
@@ -84,7 +95,13 @@ class ReferenceBackend:
                   * prep.w_scale[:, :, None, :]).astype(tx.dtype)
         elif elementwise_hook is not None:
             tx, tw = elementwise_hook(tx, tw)
-        ty = c2d.transform_domain_matmul(tx, tw)
+        if plan.spec.depthwise:
+            # 2-D depthwise: no channel contraction — the element-wise
+            # stage is a true transform-domain elementwise product
+            # (tw (t, t, 1, C) broadcast over batch x tiles)
+            ty = tx * tw[None, None, None, :, :, 0, :].astype(tx.dtype)
+        else:
+            ty = c2d.transform_domain_matmul(tx, tw)
         return _add_bias(c2d.inverse_transform_2d(ty, algo, geom), bias)
 
 
@@ -114,22 +131,31 @@ class PallasBackend:
             return _REFERENCE.apply(plan, x, prep, bias=bias)
         from repro.kernels import ops
         algo = plan.algorithm
+        depthwise = plan.spec.depthwise
         if prep.quantized:
             from repro.api import tuning
             cfg = plan.config or tuning.DEFAULT_FUSED
             bits = plan.spec.quant.bits_act
             if cfg.datapath == "staged":
-                y = ops.quantized_fastconv2d(
-                    x, prep.wq, prep.act_scale, prep.w_scale, algo,
-                    padding=plan.spec.padding, bits=bits,
-                    interpret=plan.interpret, k_block=cfg.k_block,
-                    tile_block=cfg.tile_block, chan_block=cfg.chan_block)
+                if depthwise:
+                    y = ops.quantized_fastconv2d_depthwise(
+                        x, prep.wq, prep.act_scale, prep.w_scale, algo,
+                        padding=plan.spec.padding, bits=bits,
+                        interpret=plan.interpret,
+                        tile_block=cfg.tile_block,
+                        chan_block=cfg.chan_block)
+                else:
+                    y = ops.quantized_fastconv2d(
+                        x, prep.wq, prep.act_scale, prep.w_scale, algo,
+                        padding=plan.spec.padding, bits=bits,
+                        interpret=plan.interpret, k_block=cfg.k_block,
+                        tile_block=cfg.tile_block, chan_block=cfg.chan_block)
             else:
                 from repro.kernels.sfc_fused import sfc_fused_conv2d
                 y = sfc_fused_conv2d(
                     x, prep.wq, prep.act_scale, prep.w_scale, algo,
                     padding=plan.spec.padding, bits=bits,
-                    interpret=plan.interpret,
+                    interpret=plan.interpret, depthwise=depthwise,
                     k_block=cfg.k_block, cout_block=cfg.cout_block,
                     rows_per_step=cfg.rows_per_step,
                     double_buffer=cfg.double_buffer)
@@ -140,7 +166,11 @@ class PallasBackend:
         at = jnp.asarray(algo.at(), x.dtype)
         tiles, geom = ops.extract_tiles(x, algo, plan.spec.padding)
         tx = sfc_transform(tiles, bt, interpret=plan.interpret)
-        ty = jnp.einsum("ntuc,tuco->ntuo", tx, prep.tw.astype(x.dtype))
+        if depthwise:
+            # transform-domain elementwise stage (tw (t, t, 1, C))
+            ty = tx * prep.tw[None, :, :, 0, :].astype(x.dtype)
+        else:
+            ty = jnp.einsum("ntuc,tuco->ntuo", tx, prep.tw.astype(x.dtype))
         y_tiles = sfc_inverse(ty, at, interpret=plan.interpret)
         return _add_bias(ops.untile(y_tiles, algo, geom), bias)
 
@@ -152,12 +182,28 @@ _BACKENDS: Dict[str, object] = {
 }
 
 
+_SPMD_IMPORT_ERROR: Optional[ImportError] = None
+
+
 def _register_spmd() -> None:
     # conv_spmd keeps its repro.api imports lazy (either side may load
     # first); mesh resolution stays lazy too — importing repro.api must
-    # not touch jax device state
-    from repro.distributed.conv_spmd import SpmdPallasBackend
-    _BACKENDS["pallas_spmd"] = SpmdPallasBackend()
+    # not touch jax device state.  When THIS import lands inside
+    # conv_spmd's own import chain (e.g. `import repro.distributed` ->
+    # sharding -> configs -> CNNConfig validation -> repro.api), the
+    # module is only partially initialized — skip now and let
+    # get_backend/list_backends finish the registration on first lookup,
+    # by which point the cycle has resolved.  The exception is kept so a
+    # GENUINE import failure (not the cycle) still surfaces: the lazy
+    # retry fails again and get_backend chains it into its KeyError.
+    global _SPMD_IMPORT_ERROR
+    try:
+        from repro.distributed.conv_spmd import SpmdPallasBackend
+    except ImportError as e:
+        _SPMD_IMPORT_ERROR = e
+        return
+    _SPMD_IMPORT_ERROR = None
+    _BACKENDS.setdefault("pallas_spmd", SpmdPallasBackend())
 
 
 _register_spmd()
@@ -179,6 +225,13 @@ def register_backend(name: str, backend, overwrite: bool = False) -> None:
 
 
 def get_backend(name: str):
+    if name not in _BACKENDS and name == "pallas_spmd":
+        _register_spmd()               # deferred past an import cycle
+        if name not in _BACKENDS:
+            # not the cycle: a real import failure — keep its traceback
+            raise KeyError(
+                "backend 'pallas_spmd' failed to register; see the "
+                "chained ImportError") from _SPMD_IMPORT_ERROR
     try:
         return _BACKENDS[name]
     except KeyError:
@@ -187,4 +240,6 @@ def get_backend(name: str):
 
 
 def list_backends():
+    if "pallas_spmd" not in _BACKENDS:
+        _register_spmd()
     return tuple(sorted(_BACKENDS))

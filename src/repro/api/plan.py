@@ -33,6 +33,48 @@ import repro.quant.fake_quant as fq
 _PREP_CACHE_MAX = 16
 
 
+class PrepCache:
+    """Identity-keyed FIFO of prepared weights, shared by :class:`ConvPlan`
+    and the lowering layer's ``CompositePlan``.
+
+    Keys are operand object ids; entries pin the operands so ids stay
+    valid for the entry's lifetime.  Tracers (and pytrees containing
+    tracers — composite plans pass per-sub-plan scale *sequences*) are
+    never cached: under tracing there is nothing concrete to hold on to.
+    """
+
+    def __init__(self, maxsize: int = _PREP_CACHE_MAX):
+        self._maxsize = maxsize
+        self._lock = threading.Lock()
+        self._entries: Dict[tuple, tuple] = {}
+
+    @staticmethod
+    def key_for(operands) -> Optional[tuple]:
+        leaves = jax.tree_util.tree_leaves(operands)
+        if any(isinstance(o, jax.core.Tracer) for o in leaves):
+            return None
+        return tuple(id(o) for o in operands)
+
+    def get(self, key, operands):
+        with self._lock:
+            entry = self._entries.get(key)
+        if entry is not None and \
+                all(a is b for a, b in zip(entry[0], operands)):
+            return entry[1]
+        return None
+
+    def put(self, key, operands, value) -> None:
+        with self._lock:
+            while len(self._entries) >= self._maxsize:
+                self._entries.pop(next(iter(self._entries)))
+            # the cache entry keeps the operands alive: ids stay valid
+            self._entries[key] = (operands, value)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+
 def _normalize_w_scale(w_scale: jnp.ndarray, t: int, cout: int
                        ) -> jnp.ndarray:
     """Accept any weight-granularity scale shape; return (t, t, Cout)."""
@@ -81,14 +123,16 @@ class ConvPlan:
     interpret: bool = True                    # Pallas interpret mode (CPU)
     cost: Optional[float] = None              # planner's BOPs estimate
     config: Optional[Any] = None              # tuning.KernelConfig (measured)
-    _prep_cache: Dict[tuple, Any] = dataclasses.field(
-        default_factory=dict, repr=False)
-    _prep_lock: threading.Lock = dataclasses.field(
-        default_factory=threading.Lock, repr=False)
+    _prep: PrepCache = dataclasses.field(
+        default_factory=PrepCache, repr=False)
 
     @property
     def path(self) -> str:
         return "direct" if self.algorithm is None else "fast"
+
+    def with_config(self, config) -> "ConvPlan":
+        """This plan with a different kernel config (shared prep cache)."""
+        return dataclasses.replace(self, config=config)
 
     # ------------------------------------------------------------------
     # offline: weight preparation
@@ -112,14 +156,11 @@ class ConvPlan:
         there are no concrete buffers to place.
         """
         operands = (w, act_scale, w_scale)
-        cacheable = not any(isinstance(o, jax.core.Tracer) for o in operands)
-        key = tuple(id(o) for o in operands) if cacheable else None
+        key = PrepCache.key_for(operands)
         if key is not None:
-            with self._prep_lock:
-                entry = self._prep_cache.get(key)
-            if entry is not None and \
-                    all(a is b for a, b in zip(entry[0], operands)):
-                return entry[1]
+            cached = self._prep.get(key, operands)
+            if cached is not None:
+                return cached
         prep = self._prepare_uncached(w, act_scale, w_scale)
         if key is not None:
             from repro.api import backends    # late: avoids import cycle
@@ -127,12 +168,7 @@ class ConvPlan:
                             "place_prepared", None)
             if place is not None:
                 prep = place(self, prep)
-        if key is not None:
-            with self._prep_lock:
-                while len(self._prep_cache) >= _PREP_CACHE_MAX:
-                    self._prep_cache.pop(next(iter(self._prep_cache)))
-                # the cache entry keeps the operands alive: ids stay valid
-                self._prep_cache[key] = (operands, prep)
+            self._prep.put(key, operands, prep)
         return prep
 
     def _prepare_uncached(self, w, act_scale, w_scale) -> PreparedWeights:

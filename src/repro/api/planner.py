@@ -2,9 +2,16 @@
 
 Algorithm resolution happens in one place, for every call site:
 
-  * shapes a fast algorithm cannot serve (stride != 1, pointwise 1x1,
-    kernel-tap mismatch with the requested algorithm) degrade gracefully
-    to the direct path — callers never re-implement that branch;
+  * shapes a fast algorithm cannot serve natively are first handed to the
+    lowering pass (``repro.api.lowering``): stride-2 convs rewrite into
+    polyphase stride-1 sub-specs, grouped convs into per-group dense
+    sub-specs, each sub-spec planned recursively onto the fast path and
+    priced by the same cost model — ``plan`` then returns a
+    ``CompositePlan`` fanning out over the sub-plans;
+  * only shapes that neither run natively nor lower profitably
+    (pointwise 1x1, kernel-tap mismatch with the requested algorithm,
+    polyphase that loses to strided direct) degrade to the direct path —
+    callers never re-implement that branch;
   * measured wall-clock from the tuning cache (``repro.api.tuning``)
     takes precedence: if this (spec, backend) has been autotuned on this
     host, ``algo="auto"`` picks the fastest measured algorithm and the
@@ -49,7 +56,10 @@ def _workload(spec: ConvSpec) -> Optional[ConvWorkload]:
     ba, bw = _spec_bits(spec)
     return ConvWorkload(spec.spatial[0], spec.spatial[1], spec.in_channels,
                         spec.out_channels, spec.kernel_size,
-                        bits_act=ba, bits_weight=bw)
+                        bits_act=ba, bits_weight=bw, stride=spec.stride,
+                        groups=spec.groups,
+                        depthwise=spec.depthwise and spec.rank == 2,
+                        padding=spec.padding)
 
 
 def estimate_cost(spec: ConvSpec, algo_name: str) -> float:
@@ -111,6 +121,16 @@ def _plan_cached(spec: ConvSpec, backend: str, algo: str,
         # raises on unknown names even when the spec degrades to direct —
         # a typo'd config must not silently train on the direct path
         resolved = registry.get_algorithm(algo)
+    if algo != registry.DIRECT:
+        # the lowering pass: stride-2 -> polyphase stride-1 sub-specs,
+        # groups -> per-group dense sub-specs (recursively planned and
+        # cost-checked); returns None when the spec is native, not
+        # lowerable, or the composite loses to strided/grouped direct
+        from repro.api import lowering
+        lowered = lowering.maybe_lower(spec, backend=backend, algo=algo,
+                                       interpret=interpret)
+        if lowered is not None:
+            return lowered
     if not spec.fast_eligible:
         name = registry.DIRECT
     elif algo == "auto":
@@ -128,7 +148,14 @@ def _plan_cached(spec: ConvSpec, backend: str, algo: str,
 
 def plan(spec: ConvSpec, *, backend: str = "reference", algo: str = "auto",
          interpret: bool = True) -> ConvPlan:
-    """Resolve a :class:`ConvSpec` into an executable :class:`ConvPlan`."""
+    """Resolve a :class:`ConvSpec` into an executable plan.
+
+    Returns a :class:`ConvPlan` for native specs, or a
+    ``lowering.CompositePlan`` (same ``apply``/``prepare_weights``
+    surface) when the spec lowers onto SFC sub-problems; inspect
+    ``plan.path`` ('fast' | 'lowered' | 'direct') rather than
+    ``plan.algorithm`` to see where execution lands.
+    """
     return _plan_cached(spec, backend, algo, interpret)
 
 

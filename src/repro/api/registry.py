@@ -92,6 +92,10 @@ def entries(taps: Optional[int] = None) -> Tuple[AlgorithmEntry, ...]:
 
 # Paper evaluation set (§6): SFC variants + Winograd baselines for 3-tap
 # 2-D convs, and the SFC-6 4-tap algorithm for the Mamba2 depthwise conv1d.
+# The 2-tap SFC algorithms serve the polyphase lowering of stride-2 convs
+# (``repro.api.lowering``): the even/odd phases of an R-tap strided kernel
+# have ceil(R/2) taps, so stride-2 3x3 lowers onto 2-tap sub-convs (and the
+# stride-2 7x7 stem onto the 4-/3-tap algorithms above).
 for _name, _factory, _taps, _kind in [
     ("sfc6_7", lambda: generate_sfc(6, 7, 3), 3, "sfc"),
     ("sfc6_6", lambda: generate_sfc(6, 6, 3), 3, "sfc"),
@@ -99,5 +103,8 @@ for _name, _factory, _taps, _kind in [
     ("wino4", lambda: generate_winograd(4, 3), 3, "winograd"),
     ("wino2", lambda: generate_winograd(2, 3), 3, "winograd"),
     ("sfc6_6_r4", lambda: generate_sfc(6, 6, 4), 4, "sfc"),
+    ("sfc4_4_r2", lambda: generate_sfc(4, 4, 2), 2, "sfc"),
+    ("sfc4_5_r2", lambda: generate_sfc(4, 5, 2), 2, "sfc"),
+    ("sfc6_7_r2", lambda: generate_sfc(6, 7, 2), 2, "sfc"),
 ]:
     register_algorithm(_name, _factory, taps=_taps, kind=_kind)

@@ -70,7 +70,10 @@ class ServingCache:
         p = planner.plan(spec, backend=backend, algo=algo,
                          interpret=interpret)
         operands = (w, act_scale, w_scale)
-        if any(isinstance(o, jax.core.Tracer) for o in operands):
+        # tree_leaves: lowered (composite) plans take per-sub-plan scale
+        # *sequences* — tracers hide inside them under jit
+        if any(isinstance(o, jax.core.Tracer)
+               for o in jax.tree_util.tree_leaves(operands)):
             # compiled path: nothing concrete to hold on to
             return p, p.prepare_weights(w, act_scale=act_scale,
                                         w_scale=w_scale)

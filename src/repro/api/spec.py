@@ -2,9 +2,15 @@
 
 A spec captures everything the planner needs to pick an algorithm and an
 execution path: spatial rank, kernel taps, stride, padding, dense vs
-depthwise, dtype, and the quantization policy.  Channel counts and spatial
-extents are optional *cost-model hints* — planning works without them but
-auto-selection degrades to arithmetic-complexity ranking.
+grouped vs depthwise, dtype, and the quantization policy.  Channel counts
+and spatial extents are optional *cost-model hints* — planning works
+without them but auto-selection degrades to arithmetic-complexity ranking.
+
+A spec need not be *natively* servable by a fast algorithm to reach the
+fast path: the planner's lowering pass (``repro.api.lowering``) rewrites
+stride-2 specs into polyphase stride-1 sub-specs and grouped specs into
+per-group dense sub-specs before algorithm selection, so
+:attr:`fast_eligible` describes only the native stride-1 construct.
 
 Specs are frozen dataclasses so ``plan()`` can memoize on them directly.
 """
@@ -27,7 +33,8 @@ class ConvSpec:
     kernel_size: int = 3             # taps R per spatial dim
     stride: int = 1
     padding: str = "SAME"            # SAME | VALID | CAUSAL (rank-1 only)
-    depthwise: bool = False
+    depthwise: bool = False          # groups == channels (rank 1 or 2)
+    groups: int = 1                  # grouped conv: C_in/g -> C_out/g each
     in_channels: Optional[int] = None
     out_channels: Optional[int] = None
     spatial: Optional[Tuple[int, ...]] = None   # (H, W) / (T,) hint
@@ -51,9 +58,28 @@ class ConvSpec:
                     "rank-1 convs are supported as stride-1 depthwise "
                     f"CAUSAL only (got depthwise={self.depthwise}, "
                     f"padding={self.padding!r}, stride={self.stride})")
-        if self.rank == 2 and self.depthwise:
-            raise ValueError("2-D depthwise convolution is not supported; "
-                             "use rank=2 dense or rank=1 depthwise")
+        if self.groups < 1:
+            raise ValueError(f"groups must be >= 1: {self.groups}")
+        if self.groups > 1:
+            if self.rank != 2:
+                raise ValueError("grouped convolution is rank-2 only "
+                                 f"(got rank={self.rank})")
+            if self.depthwise:
+                raise ValueError(
+                    "depthwise=True already means groups == channels; "
+                    f"do not also set groups={self.groups}")
+            for label, c in (("in_channels", self.in_channels),
+                             ("out_channels", self.out_channels)):
+                if c is not None and c % self.groups:
+                    raise ValueError(
+                        f"{label}={c} not divisible by groups={self.groups}")
+        if self.rank == 2 and self.depthwise \
+                and self.in_channels is not None \
+                and self.out_channels is not None \
+                and self.in_channels != self.out_channels:
+            raise ValueError(
+                "2-D depthwise requires out_channels == in_channels "
+                f"(got {self.in_channels} -> {self.out_channels})")
         if self.spatial is not None and len(self.spatial) != self.rank:
             raise ValueError(
                 f"spatial hint {self.spatial} does not match rank {self.rank}")
@@ -61,22 +87,45 @@ class ConvSpec:
     # ---- planner predicates ----
     @property
     def fast_eligible(self) -> bool:
-        """Whether a bilinear fast algorithm can apply at all.
+        """Whether a bilinear fast algorithm applies *natively*.
 
-        Fast algorithms are stride-1 constructs over >=2-tap kernels; every
-        other shape (strided, 1x1/pointwise) runs the direct path — this is
-        the single place that branch lives, instead of every call site.
+        Fast algorithms are stride-1 constructs over >=2-tap kernels
+        (dense or depthwise — 2-D depthwise runs the transform-domain
+        elementwise path).  Shapes outside this set are not lost causes:
+        the planner first tries the lowering pass
+        (``repro.api.lowering``: polyphase stride-2 decomposition,
+        per-group splitting) and only then degrades to the direct path —
+        this property and that pass are the two places the branch lives,
+        instead of every call site.
         """
-        return self.stride == 1 and self.kernel_size > 1
+        return self.stride == 1 and self.kernel_size > 1 and self.groups == 1
 
     @classmethod
     def for_conv2d(cls, x_shape, w_shape, *, stride: int = 1,
-                   padding: str = "SAME", dtype: str = "float32",
+                   padding: str = "SAME", groups: int = 1,
+                   dtype: str = "float32",
                    quant: QuantConfig = FP32) -> "ConvSpec":
-        """Spec from concrete NHWC input / HWIO weight shapes."""
+        """Spec from concrete NHWC input / HWIO weight shapes.
+
+        Grouped convs follow the ``lax`` convention: weights are
+        (R, R, C_in/groups, C_out), so ``in_channels`` is recovered as
+        ``w_shape[2] * groups``.
+        """
         return cls(rank=2, kernel_size=int(w_shape[0]), stride=stride,
-                   padding=padding, in_channels=int(w_shape[2]),
+                   padding=padding, groups=groups,
+                   in_channels=int(w_shape[2]) * groups,
                    out_channels=int(w_shape[3]),
+                   spatial=(int(x_shape[1]), int(x_shape[2])),
+                   dtype=dtype, quant=quant)
+
+    @classmethod
+    def for_conv2d_depthwise(cls, x_shape, w_shape, *, stride: int = 1,
+                             padding: str = "SAME", dtype: str = "float32",
+                             quant: QuantConfig = FP32) -> "ConvSpec":
+        """Spec from (B, H, W, C) input / (R, R, 1, C) weight shapes."""
+        return cls(rank=2, kernel_size=int(w_shape[0]), stride=stride,
+                   padding=padding, depthwise=True,
+                   in_channels=int(w_shape[3]), out_channels=int(w_shape[3]),
                    spatial=(int(x_shape[1]), int(x_shape[2])),
                    dtype=dtype, quant=quant)
 

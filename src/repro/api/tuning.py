@@ -163,13 +163,24 @@ def spec_key(spec: ConvSpec, backend: str, interpret: bool = True) -> str:
     ``interpret`` is part of the key — interpret-mode (CPU emulation)
     timings rank completely differently from compiled TPU kernels and
     must never govern non-interpret plans.
+
+    New spec fields append tokens only at their NON-default values
+    (``g{groups}`` for grouped, ``dw`` for 2-D depthwise) — the same
+    tolerance pattern as ``KernelConfig.from_json``: every timing-cache
+    entry written before a field existed keys a default-valued spec, so
+    old JSON caches keep resolving unchanged.
     """
     q = spec.quant
     qk = (f"a{q.bits_act}w{q.bits_weight}{q.act_granularity}"
           f"-{q.weight_granularity}" if q.enabled else "fp32")
+    extra = ""
+    if spec.groups != 1:
+        extra += f"g{spec.groups}"
+    if spec.rank == 2 and spec.depthwise:
+        extra += "dw"
     return (f"r{spec.rank}k{spec.kernel_size}s{spec.stride}"
             f"p{spec.padding}ci{spec.in_channels}co{spec.out_channels}"
-            f"sp{spec.spatial}q{qk}|{backend}|{jax.default_backend()}"
+            f"sp{spec.spatial}q{qk}{extra}|{backend}|{jax.default_backend()}"
             f"|i{int(interpret)}")
 
 
@@ -259,15 +270,19 @@ def _synthetic_operands(spec: ConvSpec, seed: int = 0):
             f"and spatial extents): {spec}")
     rng = np.random.RandomState(seed)
     H, W = spec.spatial
+    cin_w = 1 if spec.depthwise else spec.in_channels // spec.groups
     x = jnp.asarray(rng.randn(1, H, W, spec.in_channels), jnp.float32)
     w = jnp.asarray(
-        rng.randn(spec.kernel_size, spec.kernel_size, spec.in_channels,
+        rng.randn(spec.kernel_size, spec.kernel_size, cin_w,
                   spec.out_channels) * 0.1, jnp.float32)
     return x, w
 
 
 def _measure_plan(p, x, w, reps: int) -> float:
-    if p.spec.quant.enabled and p.algorithm is not None:
+    if p.spec.quant.enabled and p.path == "lowered":
+        # composite plans calibrate per sub-problem
+        prep = p.prepare_weights(w, act_scale=p.calibrate(x))
+    elif p.spec.quant.enabled and p.algorithm is not None:
         # absmax calibration on the synthetic batch itself — the timing is
         # scale-agnostic, only the datapath matters
         act_scale = calibrate_act_scale(x, p.algorithm, p.spec.quant,
@@ -311,16 +326,32 @@ def autotune(spec: ConvSpec, backend: str = "pallas", *,
         record(spec, backend, "direct", dt, interpret=interpret,
                persist=False)
         results["direct"] = {"time_s": dt}
+    # lowered specs can collapse many algorithm names onto one composite
+    # (every tap-mismatched name resolves its sub-specs with 'auto'):
+    # measure each distinct composite once.  The signature is structural
+    # — (sub-spec, resolved algorithm) per sub-plan — because recording a
+    # measurement invalidates the plan cache, so object identities do not
+    # survive from one name to the next.
+    seen_composites: Dict[tuple, str] = {}
     for name in algos:
+        p_name = planner.plan(spec, backend=backend, algo=name,
+                              interpret=interpret)
+        if p_name.path == "lowered":
+            sig = tuple((sp.spec, sp.algo_name) for sp in p_name.sub_plans)
+            first = seen_composites.setdefault(sig, name)
+            if first != name:
+                if log:
+                    log(f"autotune {name}: same lowered composite as "
+                        f"{first}; skipped")
+                continue
         best: Optional[float] = None
         best_cfg: Optional[KernelConfig] = None
         for cfg in candidates:
-            p = dataclasses.replace(
-                planner.plan(spec, backend=backend, algo=name,
-                             interpret=interpret),
-                config=cfg)
-            if p.algorithm is None:        # spec degraded to direct
+            p0 = planner.plan(spec, backend=backend, algo=name,
+                              interpret=interpret)
+            if p0.path == "direct":        # spec degraded to direct
                 continue
+            p = p0.with_config(cfg)        # composite: fans out to subs
             dt = _measure_plan(p, x, w, reps)
             if log:
                 log(f"autotune {name} {cfg.datapath}"

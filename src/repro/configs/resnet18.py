@@ -17,10 +17,25 @@ class CNNConfig:
     n_classes: int
     kind: str = "resnet"             # resnet | vgg
     stem_kernel: int = 3
-    conv_algo: str = "direct"        # direct | sfc6_7 | sfc6_6 | sfc4_4 | wino4
+    # 'auto', 'direct', or any name in api.registry.list_algorithms()
+    # (sfc6_7 / sfc6_6 / sfc4_4 / wino4 / wino2 / ... — the registry is
+    # open, so downstream-registered algorithms are valid here too);
+    # validated at construction so a typo'd config fails loudly instead
+    # of silently training on the direct path
+    conv_algo: str = "direct"
     quant: str = "none"              # none | int8 | int6 | int4
     act_granularity: str = "frequency"
     weight_granularity: str = "channel+frequency"
+
+    def __post_init__(self):
+        # late import: the registry pulls in the algorithm generators,
+        # and configs must stay importable on their own
+        from repro.api.registry import list_algorithms
+        valid = ("auto",) + list_algorithms()
+        if self.conv_algo not in valid:
+            raise ValueError(
+                f"conv_algo={self.conv_algo!r} is not registered; "
+                f"valid: {sorted(valid)}")
 
 
 RESNET18 = CNNConfig(

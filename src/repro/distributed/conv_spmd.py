@@ -36,6 +36,14 @@ Axes that do not divide the corresponding extent are dropped per
 multi-way data axis, ragged C_out — and that dimension is computed
 replicated instead: graceful degradation, never an error.
 
+Lowered (composite) plans need nothing special here: the planner's
+lowering pass hands every polyphase/grouped sub-problem to ``plan(...,
+backend="pallas_spmd")``, so each sub-plan is its own shard_map-wrapped
+apply with its own ``place_prepared`` placement — sub-plans inherit the
+shard layout by construction.  2-D depthwise specs shard their single
+channel axis over 'model' on input and weights alike (the elementwise
+path has no contraction to split).
+
 :meth:`SpmdPallasBackend.place_prepared` is the offline half:
 ``ConvPlan.prepare_weights`` routes prepared tensors through it, so
 ``wq``/``w_scale`` (and fp ``tw``) land on the mesh C_out-sharded once,
@@ -94,8 +102,17 @@ class SpmdPallasBackend:
     # ------------------------------------------------------------------
     def place_prepared(self, plan, prep):
         """Device-shard prepared weights: C_out over 'model', rest
-        replicated.  Non-divisible extents degrade to replication."""
-        if plan.spec.rank != 2:
+        replicated.  Non-divisible extents degrade to replication.
+
+        Grouped direct specs stay replicated: slicing C_out across shards
+        would misalign the group <-> input-block correspondence of
+        ``feature_group_count`` (grouped specs normally never get here —
+        the lowering pass splits them into per-group dense sub-plans,
+        each of which shards its own C_out/g — only a lowering-rejected
+        grouped direct plan lands on this path).  Depthwise shards its
+        single channel axis: ``apply`` co-shards the input channels.
+        """
+        if plan.spec.rank != 2 or plan.spec.groups > 1:
             return prep
         mesh = self.mesh
 
@@ -130,27 +147,37 @@ class SpmdPallasBackend:
         mesh = self.mesh
         b_ax = batch_axes(mesh)
 
+        # depthwise: in == out channels, so the channel axis shards over
+        # 'model' on BOTH the input and the weights (each shard runs the
+        # elementwise path on its channel block — still no cross-shard
+        # reduction, still bit-identical).  Grouped direct stays
+        # replicated on C_out: a shard slice would misalign
+        # feature_group_count's group <-> input-block pairing.
+        dw = plan.spec.depthwise
+        c_ax = "model" if dw else None
+        o_ax = None if plan.spec.groups > 1 else "model"
+
         operands = {"x": x}
-        specs = {"x": P(b_ax, None, None, None)}
+        specs = {"x": P(b_ax, None, None, c_ax)}
         if prep.quantized:
             operands.update(wq=prep.wq, w_scale=prep.w_scale,
                             act_scale=prep.act_scale)
-            specs.update(wq=P(None, None, "model"),
-                         w_scale=P(None, None, "model"),
+            specs.update(wq=P(None, None, o_ax),
+                         w_scale=P(None, None, o_ax),
                          act_scale=P(None, None))
             w_key = "wq"
         elif plan.algorithm is not None:
             operands["tw"] = prep.tw
-            specs["tw"] = P(None, None, None, "model")
+            specs["tw"] = P(None, None, None, o_ax)
             w_key = "tw"
         else:
             # direct path: HWIO weights; output channels stay independent
             operands["w"] = prep.w
-            specs["w"] = P(None, None, None, "model")
+            specs["w"] = P(None, None, None, o_ax)
             w_key = "w"
         if bias is not None:
             operands["bias"] = jnp.asarray(bias)
-            specs["bias"] = P("model")
+            specs["bias"] = P(o_ax)
         specs = {k: sanitize_pspec(s, jnp.shape(operands[k]), mesh)
                  for k, s in specs.items()}
         out_spec = P(specs["x"][0], None, None, specs[w_key][-1])

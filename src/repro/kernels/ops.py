@@ -23,7 +23,7 @@ import numpy as np
 from repro.core import conv2d as c2d
 from repro.core.generator import BilinearAlgorithm
 from repro.kernels.sfc_transform import sfc_transform, sfc_transform_quantize
-from repro.kernels.sfc_tdmm import tdmm_int8
+from repro.kernels.sfc_tdmm import tdmm_int8, tdmm_int8_depthwise
 from repro.kernels.sfc_inverse import sfc_inverse
 
 
@@ -100,6 +100,44 @@ def quantized_fastconv2d(x: jnp.ndarray, wq: jnp.ndarray,
                   k_block=k_block)
     O = Y.shape[-1]
     ty = jnp.transpose(Y, (1, 0, 2)).reshape(T, t, t, O)
+    y_tiles = sfc_inverse(ty, at, interpret=interpret,
+                          tile_block=tile_block, chan_block=chan_block)
+    return untile(y_tiles, algo, geom)
+
+
+@functools.partial(jax.jit, static_argnames=("algo", "padding", "bits",
+                                             "interpret", "tile_block",
+                                             "chan_block"))
+def quantized_fastconv2d_depthwise(x: jnp.ndarray, wq: jnp.ndarray,
+                                   act_scale: jnp.ndarray,
+                                   w_scale: jnp.ndarray,
+                                   algo: BilinearAlgorithm, *,
+                                   padding: str = "SAME", bits: int = 8,
+                                   interpret: bool = True,
+                                   tile_block: int = 8,
+                                   chan_block: int = 128) -> jnp.ndarray:
+    """int8 depthwise SFC convolution (staged pipeline).
+
+    x (B,H,W,C) f32; wq (t^2, 1, C) int8; act_scale (t,t); w_scale
+    (t,t,C) -> (B,H',W',C) f32.  Same three stages as the dense
+    ``quantized_fastconv2d`` with the t^2 GEMMs replaced by the
+    transform-domain elementwise product (``tdmm_int8_depthwise``) —
+    there is no channel contraction, so no k-blocking either.
+    """
+    t = algo.t
+    bt = jnp.asarray(algo.bt(), jnp.float32)
+    at = jnp.asarray(algo.at(), jnp.float32)
+    tiles, geom = extract_tiles(x, algo, padding)
+    xq = sfc_transform_quantize(tiles, bt, act_scale, bits=bits,
+                                interpret=interpret, tile_block=tile_block,
+                                chan_block=chan_block)
+    T = xq.shape[0]
+    C = xq.shape[-1]
+    X = jnp.transpose(xq.reshape(T, t * t, C), (1, 0, 2))   # (P, T, C)
+    Y = tdmm_int8_depthwise(X, wq.reshape(t * t, C),
+                            act_scale.reshape(t * t),
+                            w_scale.reshape(t * t, C), interpret=interpret)
+    ty = jnp.transpose(Y, (1, 0, 2)).reshape(T, t, t, C)
     y_tiles = sfc_inverse(ty, at, interpret=interpret,
                           tile_block=tile_block, chan_block=chan_block)
     return untile(y_tiles, algo, geom)

@@ -163,6 +163,46 @@ def auto_rows_per_step(algo: BilinearAlgorithm, B: int, nH: int, n_w: int,
     return 1
 
 
+def _quantize_strip_group(xg, bt, s, qmax, *, imgs: int, rows: int,
+                          n_w: int, M: int, L: int):
+    """Transform + per-frequency quantize one (imgs, span, Wp, cb) strip
+    group into the (P, imgs*rows*nW, cb) int8 matmul LHS.  Shared by the
+    dense and depthwise fused kernels so their integer grids are
+    bit-identical by construction."""
+    t = bt.shape[0]
+    q_cols = []
+    for im in range(imgs):                     # static unroll: strips
+        for r in range(rows):
+            xs = xg[im, r * M:r * M + L]       # (L, Wp, cb) f32
+            # row transform once for the whole strip; every tile
+            # column reuses it
+            rws = jnp.einsum("ti,iwc->twc", bt, xs,
+                             preferred_element_type=jnp.float32)
+            for jj in range(n_w):              # static unroll: cols
+                tx = jnp.einsum("uj,tjc->tuc", bt,
+                                rws[:, jj * M:jj * M + L, :],
+                                preferred_element_type=jnp.float32)
+                q = jnp.clip(jnp.round(tx / s[:, :, None]), -qmax, qmax)
+                q_cols.append(q.reshape(t * t, -1))    # (P, cb)
+    # (P, imgs*rows*nW, cb)
+    return jnp.stack(q_cols, axis=1).astype(jnp.int8)
+
+
+def _dequant_inverse_strip_group(y, at, t, *, imgs: int, rows: int,
+                                 n_w: int, M: int):
+    """(P, cols, cb) dequantized f32 -> (imgs, rows*M, nW*M, cb) spatial
+    output strip group (the A^T Y A correction-term inverse)."""
+    ty = y.reshape(t, t, imgs * rows, n_w, -1)
+    z = jnp.einsum("mt,tugnc->mugnc", at, ty,
+                   preferred_element_type=jnp.float32)
+    z = jnp.einsum("pu,mugnc->mgnpc", at, z,
+                   preferred_element_type=jnp.float32)
+    # (M, imgs*rows, nW, M, cb) -> (imgs, rows*M, nW*M, cb)
+    z = z.reshape(M, imgs, rows, n_w, M, -1)
+    z = jnp.transpose(z, (1, 2, 0, 3, 4, 5))
+    return z.reshape(imgs, rows * M, n_w * M, -1)
+
+
 def _fused_kernel(bt_ref, at_ref, sx_ref, sw_ref, x_ref, w_ref, o_ref,
                   acc_ref, *scratch, n_w: int, M: int, L: int, bits: int,
                   n_k: int, n_o: int, grid0: int, g_h: int, imgs: int,
@@ -246,23 +286,8 @@ def _fused_kernel(bt_ref, at_ref, sx_ref, sw_ref, x_ref, w_ref, o_ref,
             return x_ref[...]                      # (imgs, span, Wp, kb)
 
     def _quantized_strips():
-        xg = _load_group()
-        q_cols = []
-        for im in range(imgs):                     # static unroll: strips
-            for r in range(rows):
-                xs = xg[im, r * M:r * M + L]       # (L, Wp, kb) f32
-                # row transform once for the whole strip; every tile
-                # column reuses it
-                rws = jnp.einsum("ti,iwc->twc", bt, xs,
-                                 preferred_element_type=jnp.float32)
-                for jj in range(n_w):              # static unroll: cols
-                    tx = jnp.einsum("uj,tjc->tuc", bt,
-                                    rws[:, jj * M:jj * M + L, :],
-                                    preferred_element_type=jnp.float32)
-                    q = jnp.clip(jnp.round(tx / s[:, :, None]), -qmax, qmax)
-                    q_cols.append(q.reshape(t * t, -1))    # (P, kb)
-        # (P, imgs*rows*nW, kb)
-        return jnp.stack(q_cols, axis=1).astype(jnp.int8)
+        return _quantize_strip_group(_load_group(), bt, s, qmax, imgs=imgs,
+                                     rows=rows, n_w=n_w, M=M, L=L)
 
     if cache_xq:
         # strips depend on (strip group, k) only: compute on the first
@@ -284,22 +309,41 @@ def _fused_kernel(bt_ref, at_ref, sx_ref, sw_ref, x_ref, w_ref, o_ref,
         sw = sw_ref[...]                           # (P, cb)
         scale = s.reshape(t * t)[:, None, None] * sw[:, None, :]
         y = acc_ref[...].astype(jnp.float32) * scale   # (P, cols, cb)
-        ty = y.reshape(t, t, imgs * rows, n_w, -1)
-        z = jnp.einsum("mt,tugnc->mugnc", at, ty,
-                       preferred_element_type=jnp.float32)
-        z = jnp.einsum("pu,mugnc->mgnpc", at, z,
-                       preferred_element_type=jnp.float32)
-        # (M, imgs*rows, nW, M, cb) -> (imgs, rows*M, nW*M, cb)
-        z = z.reshape(M, imgs, rows, n_w, M, -1)
-        z = jnp.transpose(z, (1, 2, 0, 3, 4, 5))
-        o_ref[...] = z.reshape(imgs, rows * M, n_w * M, -1).astype(
-            o_ref.dtype)
+        o_ref[...] = _dequant_inverse_strip_group(
+            y, at, t, imgs=imgs, rows=rows, n_w=n_w, M=M).astype(o_ref.dtype)
+
+
+def _fused_dw_kernel(bt_ref, at_ref, sx_ref, sw_ref, x_ref, w_ref, o_ref, *,
+                     n_w: int, M: int, L: int, bits: int, imgs: int,
+                     rows: int):
+    """One (strip group, channel block) step of the depthwise pipeline.
+
+    Depthwise has no channel contraction, so the grid loses the C_in
+    k-dimension and the C_out blocks *are* the input channel blocks: the
+    t^2 MXU matmuls collapse to a VPU elementwise int32 product against
+    the (P, cb) weight block, and no accumulator scratch (and no xq
+    cache — each channel block is consumed exactly once) is needed.
+    """
+    bt = bt_ref[...]                               # (t, L)
+    t = bt.shape[0]
+    s = sx_ref[...]                                # (t, t)
+    qmax = 2 ** (bits - 1) - 1
+    xq = _quantize_strip_group(x_ref[...], bt, s, qmax, imgs=imgs,
+                               rows=rows, n_w=n_w, M=M, L=L)
+    w = w_ref[...]                                 # (P, cb) int8
+    prod = xq.astype(jnp.int32) * w[:, None, :].astype(jnp.int32)
+    at = at_ref[...]                               # (M, t)
+    sw = sw_ref[...]                               # (P, cb)
+    scale = s.reshape(t * t)[:, None, None] * sw[:, None, :]
+    y = prod.astype(jnp.float32) * scale           # (P, cols, cb)
+    o_ref[...] = _dequant_inverse_strip_group(
+        y, at, t, imgs=imgs, rows=rows, n_w=n_w, M=M).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("algo", "padding", "bits",
                                              "interpret", "k_block",
                                              "cout_block", "rows_per_step",
-                                             "double_buffer"))
+                                             "double_buffer", "depthwise"))
 def sfc_fused_conv2d(x: jnp.ndarray, wq: jnp.ndarray,
                      act_scale: jnp.ndarray, w_scale: jnp.ndarray,
                      algo: BilinearAlgorithm, *,
@@ -308,7 +352,8 @@ def sfc_fused_conv2d(x: jnp.ndarray, wq: jnp.ndarray,
                      k_block: Optional[int] = K_BLOCK,
                      cout_block: int = COUT_BLOCK,
                      rows_per_step: Optional[int] = 1,
-                     double_buffer: bool = False) -> jnp.ndarray:
+                     double_buffer: bool = False,
+                     depthwise: bool = False) -> jnp.ndarray:
     """int8 SFC convolution in one ``pallas_call``.
 
     x (B, H, W, Cin) f32; wq (t^2, Cin, Cout) int8; act_scale (t, t);
@@ -325,11 +370,24 @@ def sfc_fused_conv2d(x: jnp.ndarray, wq: jnp.ndarray,
     :func:`auto_rows_per_step`.  ``double_buffer`` switches the input
     strip reads to a manually DMA-pipelined two-slot VMEM buffer
     (prefetch of strip s+1 overlaps compute on strip s).
+
+    ``depthwise`` (wq (t^2, 1, C), w_scale (t, t, C)) swaps the t^2 MXU
+    matmuls for the transform-domain elementwise product
+    (``_fused_dw_kernel``): the grid drops the C_in reduction dim and
+    blocks over the shared in==out channel axis instead.  ``k_block``
+    and ``double_buffer`` are no-ops there — there is no reduction to
+    block, and each channel block's strip is read exactly once, so the
+    two-slot DMA pipeline has no cross-block reuse to overlap (the knobs
+    are accepted so one ``KernelConfig`` sweep serves both layouts;
+    every config remains bit-identical).
     """
     B, H, W, C = x.shape
     t, M, R, L = algo.t, algo.M, algo.R, algo.L
     P = t * t
-    assert wq.shape[0] == P and wq.shape[1] == C, (wq.shape, P, C)
+    if depthwise:
+        assert wq.shape == (P, 1, C), (wq.shape, P, C)
+    else:
+        assert wq.shape[0] == P and wq.shape[1] == C, (wq.shape, P, C)
     Cout = wq.shape[2]
     lo_h, hi_h, out_h = c2d.pad_amounts(H, M, R, padding)
     lo_w, hi_w, out_w = c2d.pad_amounts(W, M, R, padding)
@@ -337,6 +395,11 @@ def sfc_fused_conv2d(x: jnp.ndarray, wq: jnp.ndarray,
     nH = (xp.shape[1] - (R - 1)) // M
     nW = (xp.shape[2] - (R - 1)) // M
     Wp = xp.shape[2]
+    if depthwise:
+        return _fused_depthwise(xp, wq, act_scale, w_scale, algo,
+                                out_h=out_h, out_w=out_w, bits=bits,
+                                interpret=interpret, cout_block=cout_block,
+                                rows_per_step=rows_per_step, nH=nH, nW=nW)
 
     # channel blocking (both dims padded with zeros; zero channels quantize
     # to zero / carry zero scales, so they contribute nothing)
@@ -412,3 +475,69 @@ def sfc_fused_conv2d(x: jnp.ndarray, wq: jnp.ndarray,
     )(jnp.asarray(algo.bt(), jnp.float32), jnp.asarray(algo.at(), jnp.float32),
       act_scale.astype(jnp.float32), sw, xp, wqp)
     return out[:, :out_h, :out_w, :Cout]
+
+
+def _fused_depthwise(xp, wq, act_scale, w_scale, algo, *, out_h, out_w,
+                     bits, interpret, cout_block, rows_per_step, nH, nW):
+    """Depthwise half of :func:`sfc_fused_conv2d` (input already padded).
+
+    Grid = (strip groups, channel blocks): the channel axis is both the
+    input and the output blocking (zero-padded channels quantize to zero
+    and carry zero scales, contributing nothing).
+    """
+    B = xp.shape[0]
+    C = wq.shape[2]
+    t, M, L = algo.t, algo.M, algo.L
+    P = t * t
+    Wp = xp.shape[2]
+    cb = min(cout_block, _round_up(C, 8))
+    Cp = _round_up(C, cb)
+    n_c = Cp // cb
+
+    if rows_per_step is None:
+        # the dense budget helper over-counts depthwise slightly (it
+        # budgets a weight k-block and an int32 accumulator the dw kernel
+        # does not allocate) — a safe bound, never an overflow
+        rows_per_step = auto_rows_per_step(algo, B, nH, nW, Wp, cb, cb,
+                                           n_k=1, n_o=n_c)
+    imgs, rows = grouping(B, nH, rows_per_step)
+    g_h = -(-nH // rows)
+    nH_p = g_h * rows
+    g_b = B // imgs
+    span = (rows - 1) * M + L
+    grid0 = g_b * g_h
+
+    pad_h = (nH_p - 1) * M + L - xp.shape[1]
+    xp = jnp.pad(xp, ((0, 0), (0, max(0, pad_h)), (0, 0), (0, Cp - C)))
+    wqp = jnp.pad(wq.reshape(P, C), ((0, 0), (0, Cp - C)))
+    sw = jnp.pad(w_scale.reshape(P, C).astype(jnp.float32),
+                 ((0, 0), (0, Cp - C)))
+
+    kern = functools.partial(_fused_dw_kernel, n_w=nW, M=M, L=L, bits=bits,
+                             imgs=imgs, rows=rows)
+    out = pl.pallas_call(
+        kern,
+        grid=(grid0, n_c),
+        in_specs=[
+            pl.BlockSpec((t, L), lambda i, j: (0, 0)),
+            pl.BlockSpec((M, t), lambda i, j: (0, 0)),
+            pl.BlockSpec((t, t), lambda i, j: (0, 0)),
+            pl.BlockSpec((P, cb), lambda i, j: (0, j)),
+            # overlapping (span, Wp) strip groups at row stride rows*M,
+            # channel-blocked by j — element-offset (Unblocked) index map
+            pl.BlockSpec(
+                (imgs, span, Wp, cb),
+                lambda i, j, _gh=g_h, _im=imgs, _rm=rows * M:
+                ((i // _gh) * _im, (i % _gh) * _rm, 0, j * cb),
+                indexing_mode=pl.Unblocked()),
+            pl.BlockSpec((P, cb), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((imgs, rows * M, nW * M, cb),
+                               lambda i, j, _gh=g_h: (i // _gh, i % _gh,
+                                                      0, j)),
+        out_shape=jax.ShapeDtypeStruct((B, nH_p * M, nW * M, Cp),
+                                       jnp.float32),
+        interpret=interpret,
+    )(jnp.asarray(algo.bt(), jnp.float32), jnp.asarray(algo.at(), jnp.float32),
+      act_scale.astype(jnp.float32), sw, xp, wqp)
+    return out[:, :out_h, :out_w, :C]

@@ -10,6 +10,11 @@ activation scale sx[p] and per-frequency-per-channel weight scales sw[p, :]
 (paper Eq. 17).  Compared to direct int8 convolution, this stage runs
 t^2 / (M^2 R^2) = 1/3.24x fewer MACs for SFC-6(6x6,3x3).
 
+Depthwise 2-D convs have no channel contraction at all, so their
+"matmul" collapses to a VPU elementwise product per position —
+:func:`tdmm_int8_depthwise` is that stage (the lowering layer routes
+``groups == C`` specs here instead of the t^2 GEMMs).
+
 Blocking: grid (P, T/bt, N/bn[, K/bk]).  With ``k_block=None`` the full K
 (C_in) dimension is resident per step — for bt = bn = 128, K = 2048:
 256 KiB int8 X + 256 KiB W + 64 KiB int32 acc, comfortably within a v5e
@@ -61,6 +66,14 @@ def _tdmm_kblock_kernel(x_ref, w_ref, sx_ref, sw_ref, o_ref, acc_ref, *,
     def _dequant():
         scale = sx_ref[0] * sw_ref[0]                # (bn,) f32
         o_ref[0] = acc_ref[...].astype(jnp.float32) * scale[None, :]
+
+
+def _tdmm_dw_kernel(x_ref, w_ref, sx_ref, sw_ref, o_ref):
+    x = x_ref[0].astype(jnp.int32)                   # (bt, bc)
+    w = w_ref[0].astype(jnp.int32)                   # (bc,)
+    prod = x * w[None, :]                            # exact int32 products
+    scale = sx_ref[0] * sw_ref[0]                    # (bc,) f32
+    o_ref[0] = prod.astype(jnp.float32) * scale[None, :]
 
 
 def _pad_to(x, axis, mult):
@@ -128,3 +141,40 @@ def tdmm_int8(xq: jnp.ndarray, wq: jnp.ndarray, sx: jnp.ndarray,
         interpret=interpret,
     )(xq, wq, sx, sw_p)
     return out[:, :T, :N]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "t_block",
+                                             "n_block"))
+def tdmm_int8_depthwise(xq: jnp.ndarray, wq: jnp.ndarray, sx: jnp.ndarray,
+                        sw: jnp.ndarray, *, interpret: bool = True,
+                        t_block: int = T_BLOCK,
+                        n_block: int = N_BLOCK) -> jnp.ndarray:
+    """X (P, T, C) int8 x W (P, C) int8 -> (P, T, C) f32, elementwise.
+
+    The depthwise element-wise stage: no C_in contraction, so each
+    transform-domain position is a broadcast int32 product dequantized
+    with sx[p] * sw[p, c] — VPU work, no MXU, no reduction grid dim.
+    """
+    P, T, C = xq.shape
+    assert wq.shape == (P, C) and sx.shape == (P,) and sw.shape == (P, C), \
+        (xq.shape, wq.shape, sx.shape, sw.shape)
+    xq = _pad_to(xq, 1, t_block)
+    xq = _pad_to(xq, 2, n_block)
+    wq_p = _pad_to(wq, 1, n_block)
+    sw_p = _pad_to(sw, 1, n_block).astype(jnp.float32)
+    Tp, Cp = xq.shape[1], xq.shape[2]
+    out = pl.pallas_call(
+        _tdmm_dw_kernel,
+        grid=(P, Tp // t_block, Cp // n_block),
+        in_specs=[
+            pl.BlockSpec((1, t_block, n_block), lambda p, i, j: (p, i, j)),
+            pl.BlockSpec((1, n_block), lambda p, i, j: (p, j)),
+            pl.BlockSpec((1,), lambda p, i, j: (p,)),
+            pl.BlockSpec((1, n_block), lambda p, i, j: (p, j)),
+        ],
+        out_specs=pl.BlockSpec((1, t_block, n_block),
+                               lambda p, i, j: (p, i, j)),
+        out_shape=jax.ShapeDtypeStruct((P, Tp, Cp), jnp.float32),
+        interpret=interpret,
+    )(xq, wq_p, sx.astype(jnp.float32), sw_p)
+    return out[:, :T, :C]

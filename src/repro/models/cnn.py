@@ -1,10 +1,14 @@
 """CNNs from the paper's evaluation (ResNet-18 family, VGG-16 family).
 
-Every 3x3 stride-1 convolution is computed by a selectable algorithm
-(direct / Winograd F(4x4,3x3) / SFC-4(4,3) / SFC-6(6,3) / SFC-6(7,3)) with
-optional transform-domain fake quantization — exactly the substitution the
-paper performs on TorchVision models (§6.1).  Stride-2 and 1x1 convolutions
-always use the direct path (fast algorithms are stride-1 constructs).
+Every convolution routes through the ``repro.api`` planner: 3x3 stride-1
+layers run the selected fast algorithm (any registered name, or ``auto``)
+with optional transform-domain fake quantization — exactly the
+substitution the paper performs on TorchVision models (§6.1) — and the
+stride-2 stage-transition convs and the stride-2 stem are *lowered* by
+the planner onto polyphase stride-1 SFC sub-convs (``repro.api.lowering``),
+so they reach the fast path end-to-end instead of silently degrading.
+Only 1x1 projections (and shapes whose lowering the cost model rejects)
+use the direct path.
 """
 from __future__ import annotations
 
@@ -41,14 +45,16 @@ def conv_apply(x, w, b, cfg: CNNConfig, stride: int = 1,
                qhook=None) -> jnp.ndarray:
     """Algorithm-dispatched conv through the unified ``repro.api`` planner.
 
-    The planner degrades stride-2 / 1x1 / tap-mismatched convs to the
-    direct path; quantization stays hook-driven (dynamic fake quant for
-    training and PTQ simulation), so the spec itself is fp.
+    Stride-2 convs lower onto polyphase stride-1 sub-convs (path
+    'lowered'); 1x1 / tap-mismatched / lowering-rejected convs degrade to
+    direct.  Quantization stays hook-driven (dynamic fake quant for
+    training and PTQ simulation), so the spec itself is fp; on lowered
+    plans the hook reaches each sub-conv's transform domain.
     """
     spec = ConvSpec.for_conv2d(x.shape, w.shape, stride=stride,
                                padding="SAME")
     p = plan(spec, backend="reference", algo=cfg.conv_algo)
-    hook = qhook if p.path == "fast" else None
+    hook = qhook if p.path != "direct" else None
     return p.apply(x, w, bias=b, elementwise_hook=hook)
 
 

@@ -125,7 +125,23 @@ class PTQLayer:
         return jnp.asarray(act, jnp.float32), self.weight_scale
 
     def prepare(self, plan, w: jnp.ndarray):
-        """Offline-quantize ``w`` for ``plan`` using the calibrated scales."""
+        """Offline-quantize ``w`` for ``plan`` using the calibrated scales.
+
+        Direct plans have no transform domain — the raw weights pass
+        through unquantized, as before.  Lowered (composite) plans are
+        REJECTED rather than silently degraded: one PTQLayer holds ONE
+        (t, t) scale state, but a composite's sub-convs have different
+        tile sizes and input distributions (its calibration hook would
+        mix tensor shapes, too).  Calibrate composites per sub-problem
+        with ``CompositePlan.calibrate(x)`` ->
+        ``prepare_weights(w, act_scale=...)`` instead.
+        """
+        if plan.path == "lowered":
+            raise NotImplementedError(
+                "PTQLayer calibrates a single transform domain; lowered "
+                f"(composite) plans have one per sub-conv ({plan.algo_name})."
+                " Use CompositePlan.calibrate(x) + prepare_weights(w, "
+                "act_scale=<per-sub scales>) for the static-int8 path.")
         if plan.algorithm is None:
             return plan.prepare_weights(w)
         act_scale, w_scale = self.static_scales(plan.algorithm.t)

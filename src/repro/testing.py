@@ -21,7 +21,6 @@ Import from tests as ``from repro.testing import assert_conv_conformance``.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Sequence
 
 import jax.numpy as jnp
@@ -48,15 +47,19 @@ def fused_variant_configs(variants: Sequence[dict] = DEFAULT_FUSED_VARIANTS):
 
 
 def calibrated_prep(x, w, spec, algo_name: str):
-    """(reference plan, pallas plan, PreparedWeights) with absmax
+    """(reference plan, pallas plan, prepared weights) with absmax
     activation scales calibrated on ``x`` — the shared setup of every
     differential int8 case.  Degraded (direct) and fp plans skip
-    calibration and return ``prep=None``."""
+    calibration and return ``prep=None``.  Lowered (composite) plans
+    calibrate per sub-problem via ``CompositePlan.calibrate``."""
     from repro.api import plan, tuning
     p_ref = plan(spec, backend="reference", algo=algo_name)
     p_pal = plan(spec, backend="pallas", algo=algo_name)
-    if p_pal.algorithm is None or not spec.quant.enabled:
+    if p_pal.path == "direct" or not spec.quant.enabled:
         return p_ref, p_pal, None
+    if p_pal.path == "lowered":
+        return p_ref, p_pal, p_pal.prepare_weights(
+            w, act_scale=p_pal.calibrate(x))
     act = tuning.calibrate_act_scale(x, p_pal.algorithm, spec.quant,
                                      spec.padding)
     return p_ref, p_pal, p_pal.prepare_weights(w, act_scale=act)
@@ -74,17 +77,22 @@ def assert_conv_conformance(x, w, spec, algo_name: str = "auto", *,
     simulation.  fp specs: the pallas path must be fp-close to the
     reference backend.  A spec that degrades to the direct path is an
     ERROR unless ``allow_degraded`` — a planner regression silently
-    degrading fast-eligible specs must fail the suite loudly, not turn
-    it into a vacuous direct-vs-direct comparison (only the
-    deliberately-degrading cases, e.g. stride 2, opt in).  Raises
-    ``AssertionError`` naming the variant that diverged; returns the
-    reference output for callers that want extra checks.
+    degrading fast-eligible OR lowerable specs must fail the suite
+    loudly, not turn it into a vacuous direct-vs-direct comparison (only
+    the deliberately-degrading cases, e.g. a lowering that the cost
+    model rightly rejects, opt in).  Lowered (composite) plans sweep the
+    same staged/fused variants — ``with_config`` propagates each config
+    to every sub-plan, and the bit-identity contract holds because a sum
+    (or concat) of bit-identical sub-outputs in a fixed order is
+    bit-identical.  Raises ``AssertionError`` naming the variant that
+    diverged; returns the reference output for callers that want extra
+    checks.
     """
     from repro.api import tuning
     p_ref, p_pal, prep = calibrated_prep(x, w, spec, algo_name)
-    assert allow_degraded or p_pal.algorithm is not None, \
+    assert allow_degraded or p_pal.path != "direct", \
         f"spec unexpectedly degraded to the direct path: {spec}"
-    if p_pal.algorithm is None or not spec.quant.enabled:
+    if p_pal.path == "direct" or not spec.quant.enabled:
         prep = p_pal.prepare_weights(w)
         y_ref = p_ref.apply(x, prep)
         y_pal = p_pal.apply(x, prep)
@@ -92,8 +100,7 @@ def assert_conv_conformance(x, w, spec, algo_name: str = "auto", *,
                                    rtol=rtol, atol=atol)
         return y_ref
     y_ref = p_ref.apply(x, prep)
-    p_staged = dataclasses.replace(p_pal, config=tuning.DEFAULT_STAGED)
-    y_staged = p_staged.apply(x, prep)
+    y_staged = p_pal.with_config(tuning.DEFAULT_STAGED).apply(x, prep)
     assert y_staged.shape == y_ref.shape, \
         f"staged shape {y_staged.shape} != reference {y_ref.shape}"
     np.testing.assert_allclose(np.asarray(y_staged), np.asarray(y_ref),
@@ -101,7 +108,7 @@ def assert_conv_conformance(x, w, spec, algo_name: str = "auto", *,
                                err_msg="staged vs reference int8 simulation")
     want = np.asarray(y_staged)
     for cfg in fused_variant_configs(variants):
-        y = dataclasses.replace(p_pal, config=cfg).apply(x, prep)
+        y = p_pal.with_config(cfg).apply(x, prep)
         assert np.array_equal(np.asarray(y), want), (
             f"fused(k={cfg.k_block},co={cfg.cout_block},"
             f"r={cfg.rows_per_step},db={int(cfg.double_buffer)}) "

@@ -127,21 +127,28 @@ def test_auto_picks_fast_for_fp32():
     assert plan(spec, algo="auto").path == "fast"
 
 
-def test_auto_picks_direct_for_stride2_and_1x1():
+def test_auto_lowers_stride2_and_keeps_1x1_direct():
+    # stride-2 now LOWERS onto polyphase SFC sub-convs (the cost model
+    # confirms the composite beats strided direct at this shape); 1x1
+    # stays direct — there is nothing to transform
     s2 = ConvSpec(rank=2, kernel_size=3, stride=2, in_channels=64,
                   out_channels=64, spatial=(56, 56), quant=INT8_FREQ)
     p1x1 = ConvSpec(rank=2, kernel_size=1, in_channels=64,
                     out_channels=64, spatial=(56, 56), quant=INT8_FREQ)
-    assert plan(s2, algo="auto").path == "direct"
+    p = plan(s2, algo="auto")
+    assert p.path == "lowered" and p.algorithm is None
+    assert p.cost < plan(s2, algo="direct").cost
     assert plan(p1x1, algo="auto").path == "direct"
+    # native (non-lowered) selection still degrades strided specs
     assert select_algorithm(s2) == "direct"
 
 
-def test_explicit_algo_degrades_gracefully():
-    # stride-2 and tap mismatch silently resolve to direct, as each call
-    # site used to hand-roll
+def test_explicit_algo_lowers_or_degrades_gracefully():
+    # stride-2 with an explicit fast algorithm lowers (the honest reading
+    # of "run this on the fast path"); tap mismatch still resolves to
+    # direct, as each call site used to hand-roll
     s2 = ConvSpec(rank=2, kernel_size=3, stride=2)
-    assert plan(s2, algo="sfc6_6").path == "direct"
+    assert plan(s2, algo="sfc6_6").path == "lowered"
     r7 = ConvSpec(rank=2, kernel_size=7)
     assert plan(r7, algo="sfc6_6").path == "direct"
     with pytest.raises(KeyError):
@@ -182,9 +189,9 @@ def test_prepare_inside_jit_does_not_cache_tracers():
     x, w = _data(seed=6)
     spec = ConvSpec.for_conv2d(x.shape, w.shape)
     p = plan(spec, algo="sfc6_6")
-    before = len(p._prep_cache)
+    before = len(p._prep)
     y = jax.jit(lambda x, w: p.apply(x, w))(x, w)
-    assert len(p._prep_cache) == before        # tracers never cached
+    assert len(p._prep) == before              # tracers never cached
     np.testing.assert_allclose(np.asarray(y), np.asarray(p.apply(x, w)),
                                rtol=1e-5, atol=1e-5)
 
@@ -324,11 +331,19 @@ def test_spec_validation():
         ConvSpec(rank=1, depthwise=False)
     with pytest.raises(ValueError):
         ConvSpec(rank=2, padding="CAUSAL")
-    with pytest.raises(ValueError):
-        ConvSpec(rank=2, depthwise=True)
+    ConvSpec(rank=2, depthwise=True)      # 2-D depthwise is supported now
     with pytest.raises(ValueError):   # stride-1 only: no strided 1-D path
         ConvSpec(rank=1, kernel_size=4, stride=2, depthwise=True,
                  padding="CAUSAL")
+    with pytest.raises(ValueError):   # channels must divide into groups
+        ConvSpec(rank=2, groups=3, in_channels=8, out_channels=8)
+    with pytest.raises(ValueError):   # depthwise already means groups == C
+        ConvSpec(rank=2, depthwise=True, groups=2)
+    with pytest.raises(ValueError):   # grouped conv is rank-2 only
+        ConvSpec(rank=1, kernel_size=4, depthwise=True, padding="CAUSAL",
+                 groups=2)
+    with pytest.raises(ValueError):   # depthwise: out == in channels
+        ConvSpec(rank=2, depthwise=True, in_channels=8, out_channels=16)
 
 
 def test_hook_rejected_on_rank1_fast_path():

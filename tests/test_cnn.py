@@ -55,6 +55,79 @@ def test_vgg_forward():
     assert vgg_forward(p, cfg, x).shape == (2, 10)
 
 
+def _resnet_conv_specs(cfg):
+    """(name, spec) for every conv the forward pass plans, mirroring
+    ``resnet_forward``'s shape evolution."""
+    from repro.api import ConvSpec
+    specs = []
+    hw = cfg.image_size
+    stem_stride = 2 if cfg.image_size >= 128 else 1
+    specs.append(("stem", ConvSpec(
+        rank=2, kernel_size=cfg.stem_kernel, stride=stem_stride,
+        in_channels=3, out_channels=cfg.widths[0], spatial=(hw, hw))))
+    hw = -(-hw // stem_stride)
+    if cfg.image_size >= 128:
+        hw = -(-hw // 2)                       # stem max-pool
+    cin = cfg.widths[0]
+    for si, (n_blocks, width) in enumerate(zip(cfg.stages, cfg.widths)):
+        for bi in range(n_blocks):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            specs.append((f"s{si}b{bi}.conv1", ConvSpec(
+                rank=2, kernel_size=3, stride=stride, in_channels=cin,
+                out_channels=width, spatial=(hw, hw))))
+            hw_out = -(-hw // stride)
+            specs.append((f"s{si}b{bi}.conv2", ConvSpec(
+                rank=2, kernel_size=3, in_channels=width,
+                out_channels=width, spatial=(hw_out, hw_out))))
+            if stride != 1 or cin != width:
+                specs.append((f"s{si}b{bi}.proj", ConvSpec(
+                    rank=2, kernel_size=1, stride=stride, in_channels=cin,
+                    out_channels=width, spatial=(hw, hw))))
+            hw, cin = hw_out, width
+    return specs
+
+
+def test_resnet_stride2_layers_lower_end_to_end():
+    """Every stride-2 conv (stage transitions AND the stride-2 stem) now
+    resolves to a lowered fast plan — not direct — and the forward pass
+    matches the pre-refactor forward (lowering disabled: stride-2 layers
+    direct, stride-1 layers fast) to fp32 epsilon, and the int8 config
+    stays within the conformance envelope of the fp32 forward."""
+    from repro.api import lowering, plan
+    cfg = dataclasses.replace(
+        SMOKE_CNN, name="stem-smoke", image_size=128, stem_kernel=7,
+        conv_algo="sfc6_6")
+    p = init_resnet(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(np.random.RandomState(0).randn(1, 128, 128, 3),
+                    jnp.float32)
+    y = resnet_forward(p, cfg, x)
+    strided = [(n, s) for n, s in _resnet_conv_specs(cfg) if s.stride == 2]
+    assert any(n == "stem" for n, _ in strided)
+    for name, spec in strided:
+        pl_ = plan(spec, backend="reference", algo=cfg.conv_algo)
+        if spec.kernel_size == 1:
+            assert pl_.path == "direct", name       # 1x1 projections
+        else:
+            assert pl_.path == "lowered", \
+                f"{name} still degrades to {pl_.path}"
+    # stride-1 layers plan exactly as before (identical memoized plans),
+    # so the delta vs the lowering-disabled forward isolates the strided
+    # layers: direct vs polyphase arithmetic of the same convolution
+    with lowering.disabled():
+        for name, spec in _resnet_conv_specs(cfg):
+            if spec.stride == 2 and spec.kernel_size > 1:
+                assert plan(spec, backend="reference",
+                            algo=cfg.conv_algo).path == "direct"
+        y_pre = resnet_forward(p, cfg, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_pre),
+                               rtol=1e-3, atol=1e-3)
+    # int8: transform-domain fake quant now reaches the lowered layers too
+    qcfg = dataclasses.replace(cfg, quant="int8")
+    yq = resnet_forward(p, qcfg, x)
+    rel = float(jnp.linalg.norm(yq - y) / (jnp.linalg.norm(y) + 1e-9))
+    assert rel < 0.15
+
+
 def test_cnn_gradients():
     cfg = dataclasses.replace(SMOKE_CNN, conv_algo="sfc6_6", quant="int8")
     p = init_resnet(jax.random.PRNGKey(0), cfg)

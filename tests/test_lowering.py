@@ -1,0 +1,388 @@
+"""Lowering pass: polyphase stride-2, grouped, and 2-D depthwise convs.
+
+tier-1 keeps the deterministic unit corpus (geometry laws, plan-shape
+assertions, small conformance cases, cost-model honesty in both
+directions); the exhaustive cross-shape sweep rides the ``kernels``
+marker job like the rest of the conformance suite.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import ConvSpec, CompositePlan, plan
+from repro.api.lowering import disabled, phase_taps, strided_lo_out
+from repro.quant.fake_quant import INT8_FREQ
+from repro.testing import assert_conv_conformance
+
+# narrow fused sweep for composite cases: every sub-conv runs per variant,
+# so the tier-1 corpus checks the default grid, a ragged k-block, and the
+# batched+double-buffered grid (the full default sweep is the kernels job)
+FAST_VARIANTS = (
+    dict(k_block=128, cout_block=128, rows_per_step=1),
+    dict(k_block=64, cout_block=128, rows_per_step=2, double_buffer=True),
+)
+
+
+def _data(hw=12, cin=8, cout=8, r=3, seed=0, cin_w=None, batch=2):
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(batch, hw, hw, cin), jnp.float32)
+    w = jnp.asarray(rng.randn(r, r, cin_w or cin, cout) * 0.2, jnp.float32)
+    return x, w
+
+
+# ----------------------------------------------------------------------
+# geometry laws
+# ----------------------------------------------------------------------
+def test_phase_taps_partition_kernel():
+    # the phases partition the R taps exactly, for every (R, stride)
+    for R in range(1, 9):
+        for s in (2, 3, 4):
+            assert sum(phase_taps(R, a, s) for a in range(s)) == R
+
+
+def test_strided_lo_out_matches_lax():
+    # the polyphase pad/out geometry must agree with XLA's convention
+    rng = np.random.RandomState(0)
+    for size, R, s, pad in [(14, 3, 2, "SAME"), (15, 3, 2, "SAME"),
+                            (14, 3, 2, "VALID"), (17, 7, 2, "VALID"),
+                            (224, 7, 2, "SAME"), (9, 5, 3, "SAME")]:
+        x = jnp.asarray(rng.randn(1, size, size, 1), jnp.float32)
+        w = jnp.ones((R, R, 1, 1), jnp.float32)
+        out = jax.lax.conv_general_dilated(
+            x, w, (s, s), pad, dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        assert strided_lo_out(size, R, s, pad)[1] == out.shape[1], \
+            (size, R, s, pad)
+
+
+# ----------------------------------------------------------------------
+# plan shapes: what lowers, what doesn't
+# ----------------------------------------------------------------------
+def test_resnet_stage_transitions_lower_and_beat_direct():
+    """Acceptance: every ResNet-18 (224) stride-2 3x3 stage transition and
+    the stride-2 7x7 stem plan onto SFC sub-convs, and the BOPs model
+    prices the composite below strided direct."""
+    shapes = [(56, 64, 128), (28, 128, 256), (14, 256, 512)]
+    for hw, cin, cout in shapes:
+        for quant in (INT8_FREQ, None):
+            kw = {"quant": quant} if quant else {}
+            spec = ConvSpec(rank=2, kernel_size=3, stride=2,
+                            in_channels=cin, out_channels=cout,
+                            spatial=(hw, hw), **kw)
+            p = plan(spec, algo="auto")
+            assert p.path == "lowered", spec
+            assert any(sp.path == "fast" for sp in p.sub_plans)
+            assert all(sp.algorithm is None or sp.algorithm.kind == "sfc"
+                       for sp in p.sub_plans)
+            assert p.cost < plan(spec, algo="direct").cost
+    stem = ConvSpec(rank=2, kernel_size=7, stride=2, in_channels=3,
+                    out_channels=64, spatial=(224, 224), quant=INT8_FREQ)
+    ps = plan(stem, algo="auto")
+    assert ps.path == "lowered"
+    assert ps.cost < plan(stem, algo="direct").cost
+    # the 7x7 phases are 4- and 3-tap sub-kernels
+    assert sorted({m[2] for m in ps.sub_meta}) == [3, 4]
+
+
+def test_cost_model_honest_when_lowering_loses():
+    """Auto must NOT lower when the composite loses: tiny-channel stride-2
+    (transform overhead dominates) and strided depthwise (per-channel
+    transforms with no C_out amortization) stay direct."""
+    tiny = ConvSpec(rank=2, kernel_size=3, stride=2, in_channels=4,
+                    out_channels=4, spatial=(12, 12), quant=INT8_FREQ)
+    assert plan(tiny, algo="auto").path == "direct"
+    dw2 = ConvSpec(rank=2, kernel_size=3, stride=2, depthwise=True,
+                   in_channels=256, out_channels=256, spatial=(28, 28),
+                   quant=INT8_FREQ)
+    assert plan(dw2, algo="auto").path == "direct"
+    # 2-tap stride-2 lowers to four pointwise subs: no fast sub at all
+    r2 = ConvSpec(rank=2, kernel_size=2, stride=2, in_channels=64,
+                  out_channels=64, spatial=(16, 16))
+    assert plan(r2, algo="auto").path == "direct"
+
+
+def test_explicit_algo_forces_lowering():
+    spec = ConvSpec(rank=2, kernel_size=3, stride=2, in_channels=4,
+                    out_channels=4, spatial=(10, 10))
+    p = plan(spec, algo="sfc6_7_r2")
+    assert p.path == "lowered"
+    # the explicitly requested 2-tap algorithm serves the 2-tap phases
+    assert any(sp.algo_name == "sfc6_7_r2" for sp in p.sub_plans)
+
+
+def test_disabled_restores_pre_lowering_behaviour():
+    spec = ConvSpec(rank=2, kernel_size=3, stride=2, in_channels=64,
+                    out_channels=128, spatial=(56, 56), quant=INT8_FREQ)
+    assert plan(spec, algo="auto").path == "lowered"
+    with disabled():
+        assert plan(spec, algo="auto").path == "direct"
+    assert plan(spec, algo="auto").path == "lowered"
+
+
+def test_grouped_subplans_shared():
+    spec = ConvSpec(rank=2, kernel_size=3, groups=4, in_channels=32,
+                    out_channels=32, spatial=(12, 12))
+    p = plan(spec, algo="sfc6_6")
+    assert isinstance(p, CompositePlan) and p.kind == "grouped"
+    assert len(p.sub_plans) == 4
+    # one memoized sub-plan object serves every group (one prepared
+    # -weight layout)
+    assert all(sp is p.sub_plans[0] for sp in p.sub_plans)
+
+
+def test_depthwise_plans_native_fast():
+    spec = ConvSpec(rank=2, kernel_size=3, depthwise=True, in_channels=64,
+                    out_channels=64, spatial=(28, 28), quant=INT8_FREQ)
+    p = plan(spec, algo="auto")
+    assert p.path == "fast" and p.algorithm.kind == "sfc"
+
+
+# ----------------------------------------------------------------------
+# conformance: every lowering bit-checks against the direct reference
+# ----------------------------------------------------------------------
+def test_stride2_conformance_fp32_and_int8():
+    x, w = _data(hw=14, cin=8, cout=8, seed=1)
+    for quant in (None, INT8_FREQ):
+        kw = {"quant": quant} if quant else {}
+        spec = ConvSpec.for_conv2d(x.shape, w.shape, stride=2, **kw)
+        y = assert_conv_conformance(x, w, spec, "sfc4_4_r2",
+                                    variants=FAST_VARIANTS)
+        # and the whole composite equals the strided direct oracle
+        y_direct = plan(spec, algo="direct").apply(x, w)
+        tol = 1e-4 if quant is None else 0.08
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_direct),
+                                   rtol=tol, atol=tol * float(
+                                       jnp.abs(y_direct).max()))
+
+
+def test_stride2_valid_padding_conformance():
+    x, w = _data(hw=13, cin=8, cout=8, seed=2)
+    spec = ConvSpec.for_conv2d(x.shape, w.shape, stride=2, padding="VALID",
+                               quant=INT8_FREQ)
+    assert_conv_conformance(x, w, spec, "sfc4_4_r2", variants=FAST_VARIANTS)
+
+
+def test_stem_7x7_stride2_conformance():
+    x, w = _data(hw=18, cin=3, cout=8, r=7, seed=3, batch=1)
+    spec = ConvSpec.for_conv2d(x.shape, w.shape, stride=2, quant=INT8_FREQ)
+    p = plan(spec, backend="pallas", algo="sfc6_6_r4")
+    assert p.path == "lowered"
+    assert_conv_conformance(x, w, spec, "sfc6_6_r4", variants=FAST_VARIANTS)
+
+
+def test_grouped_conformance_fp32_and_int8():
+    x, w = _data(hw=12, cin=16, cout=16, cin_w=4, seed=4)
+    for quant in (None, INT8_FREQ):
+        kw = {"quant": quant} if quant else {}
+        spec = ConvSpec.for_conv2d(x.shape, w.shape, groups=4, **kw)
+        y = assert_conv_conformance(x, w, spec, "sfc6_6",
+                                    variants=FAST_VARIANTS)
+        y_direct = plan(spec, algo="direct").apply(x, w)
+        tol = 1e-4 if quant is None else 0.08
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_direct),
+                                   rtol=tol, atol=tol * float(
+                                       jnp.abs(y_direct).max()))
+
+
+def test_depthwise_conformance_fp32_and_int8():
+    rng = np.random.RandomState(5)
+    x = jnp.asarray(rng.randn(2, 12, 12, 16), jnp.float32)
+    w = jnp.asarray(rng.randn(3, 3, 1, 16) * 0.3, jnp.float32)
+    for quant in (None, INT8_FREQ):
+        kw = {"quant": quant} if quant else {}
+        spec = ConvSpec.for_conv2d_depthwise(x.shape, w.shape, **kw)
+        y = assert_conv_conformance(x, w, spec, "sfc6_6")
+        y_direct = plan(spec, algo="direct").apply(x, w)
+        tol = 1e-4 if quant is None else 0.08
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_direct),
+                                   rtol=tol, atol=tol * float(
+                                       jnp.abs(y_direct).max()))
+
+
+def test_depthwise_stride2_polyphase_recursion():
+    """A strided depthwise spec composes both mechanisms: polyphase into
+    stride-1 depthwise sub-specs running the elementwise path."""
+    rng = np.random.RandomState(6)
+    x = jnp.asarray(rng.randn(1, 14, 14, 8), jnp.float32)
+    w = jnp.asarray(rng.randn(3, 3, 1, 8) * 0.3, jnp.float32)
+    spec = ConvSpec.for_conv2d_depthwise(x.shape, w.shape, stride=2)
+    p = plan(spec, algo="sfc4_4_r2")
+    assert p.path == "lowered" and p.kind == "polyphase"
+    assert all(sp.spec.depthwise for sp in p.sub_plans)
+    y = p.apply(x, w)
+    y_direct = plan(spec, algo="direct").apply(x, w)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_direct),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------------------------------------------------
+# composite plan mechanics
+# ----------------------------------------------------------------------
+def test_composite_prepare_weights_cached():
+    x, w = _data(hw=14, seed=7)
+    spec = ConvSpec.for_conv2d(x.shape, w.shape, stride=2)
+    p = plan(spec, algo="sfc4_4_r2")
+    prep1 = p.prepare_weights(w)
+    prep2 = p.prepare_weights(w)
+    assert prep1 is prep2
+    assert len(prep1.subs) == len(p.sub_plans)
+    y1 = p.apply(x, prep1)
+    y2 = p.apply(x, w)
+    assert bool(jnp.all(y1 == y2))
+
+
+def test_composite_prepare_skips_tracers():
+    x, w = _data(hw=14, seed=8)
+    spec = ConvSpec.for_conv2d(x.shape, w.shape, stride=2)
+    p = plan(spec, algo="sfc4_4_r2")
+    before = len(p._prep)
+    y = jax.jit(lambda x, w: p.apply(x, w))(x, w)
+    assert len(p._prep) == before
+    np.testing.assert_allclose(np.asarray(y), np.asarray(p.apply(x, w)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_composite_hook_reaches_subconvs():
+    """elementwise_hook is forwarded to every sub-plan with a transform
+    domain; direct subs (the 1x1 centre phase) are skipped."""
+    x, w = _data(hw=14, seed=9)
+    spec = ConvSpec.for_conv2d(x.shape, w.shape, stride=2)
+    p = plan(spec, backend="reference", algo="sfc4_4_r2")
+    n_fast = sum(1 for sp in p.sub_plans if sp.path != "direct")
+    calls = []
+
+    def hook(tx, tw):
+        calls.append(tx.shape)
+        return tx, tw
+
+    p.apply(x, w, elementwise_hook=hook)
+    assert len(calls) == n_fast > 0
+
+
+def test_serving_cache_serves_lowered_plans():
+    from repro.api import serving_cache
+    cache = serving_cache.ServingCache(maxsize=8)
+    x, w = _data(hw=14, seed=10)
+    spec = ConvSpec.for_conv2d(x.shape, w.shape, stride=2)
+    p1, prep1 = cache.get(spec, w, algo="sfc4_4_r2")
+    p2, prep2 = cache.get(spec, w, algo="sfc4_4_r2")
+    assert p1 is p2 and prep1 is prep2
+    assert cache.stats()["hits"] == 1 and cache.stats()["prepares"] == 1
+
+
+def test_measured_latency_overrides_lowering_decision():
+    """Measured wall-clock takes precedence over the BOPs lower-vs-direct
+    verdict (the planner-wide contract), in both directions — but only
+    once BOTH sides have been timed on this host (partial-sweep rule)."""
+    from repro.api import tuning
+    spec = ConvSpec(rank=2, kernel_size=3, stride=2, in_channels=64,
+                    out_channels=128, spatial=(56, 56), quant=INT8_FREQ)
+    assert plan(spec, algo="auto").path == "lowered"   # BOPs verdict
+    # host measured the composite slower than strided direct -> direct
+    tuning.record(spec, "reference", "direct", 1e-3)
+    tuning.record(spec, "reference", "sfc6_6", 5e-3)
+    assert plan(spec, algo="auto").path == "direct"
+    # re-tuned the other way round -> lowered again
+    tuning.record(spec, "reference", "sfc6_6", 5e-4)
+    assert plan(spec, algo="auto").path == "lowered"
+    # one-sided measurements leave the analytic verdict in charge
+    tuning.clear()
+    tuning.record(spec, "reference", "direct", 1e-9)
+    assert plan(spec, algo="auto").path == "lowered"
+
+
+def test_measured_config_rides_lowered_plan():
+    """The autotuned winning KernelConfig measured for the ORIGINAL
+    strided spec rides the composite: every sub-plan executes it (same
+    contract as a native plan carrying its measured config)."""
+    from repro.api import tuning
+    from repro.api.tuning import KernelConfig
+    spec = ConvSpec(rank=2, kernel_size=3, stride=2, in_channels=64,
+                    out_channels=128, spatial=(56, 56), quant=INT8_FREQ)
+    cfg = KernelConfig(datapath="fused", rows_per_step=4,
+                       double_buffer=True)
+    tuning.record(spec, "reference", "sfc6_6", 1e-3, cfg)
+    p = plan(spec, algo="auto")
+    assert p.path == "lowered"
+    assert p.config == cfg
+    assert all(sp.config == cfg for sp in p.sub_plans)
+
+
+def test_ptq_prepare_rejects_composite_plans():
+    """PTQLayer holds ONE (t, t) scale state; a lowered plan has one
+    transform domain per sub-conv — prepare must fail loudly instead of
+    silently returning unquantized weights."""
+    from repro.quant.ptq import PTQLayer
+    x, w = _data(hw=14, seed=12)
+    spec = ConvSpec.for_conv2d(x.shape, w.shape, stride=2, quant=INT8_FREQ)
+    p = plan(spec, backend="pallas", algo="sfc4_4_r2")
+    assert p.path == "lowered"
+    with pytest.raises(NotImplementedError):
+        PTQLayer(config=spec.quant).prepare(p, w)
+    # the supported composite static-int8 path
+    prep = p.prepare_weights(w, act_scale=p.calibrate(x))
+    assert prep.quantized
+
+
+def test_composite_gradients_flow():
+    x, w = _data(hw=14, seed=11)
+    spec = ConvSpec.for_conv2d(x.shape, w.shape, stride=2)
+    p = plan(spec, algo="sfc4_4_r2")
+    g = jax.grad(lambda w: jnp.sum(p.apply(x, w) ** 2))(w)
+    assert g.shape == w.shape
+    assert bool(jnp.all(jnp.isfinite(g))) and float(jnp.abs(g).sum()) > 0
+
+
+# ----------------------------------------------------------------------
+# exhaustive sweep — kernels marker job
+# ----------------------------------------------------------------------
+@pytest.mark.kernels
+@pytest.mark.parametrize("padding", ["SAME", "VALID"])
+@pytest.mark.parametrize("hw,cin,cout,r,algo", [
+    (14, 8, 16, 3, "auto_force"), (15, 16, 8, 3, "auto_force"),
+    (16, 8, 8, 3, "sfc4_4_r2"), (17, 4, 4, 5, "auto_force"),
+    (18, 3, 8, 7, "sfc6_6_r4"), (13, 8, 8, 4, "auto_force"),
+])
+def test_lowering_sweep_stride2(hw, cin, cout, r, algo, padding):
+    """Exhaustive polyphase conformance: odd/even extents, every phase
+    layout (R = 3, 4, 5, 7), both paddings, fp32 + int8, full fused
+    variant sweep per sub-conv."""
+    x, w = _data(hw=hw, cin=cin, cout=cout, r=r, seed=hw)
+    if algo == "auto_force":
+        # force lowering independently of shape profitability: request a
+        # registered algorithm whose taps match one of the phases
+        algo = "sfc4_4_r2" if phase_taps(r, 0, 2) == 2 else "sfc6_6_r4"
+    for quant in (None, INT8_FREQ):
+        kw = {"quant": quant} if quant else {}
+        spec = ConvSpec.for_conv2d(x.shape, w.shape, stride=2,
+                                   padding=padding, **kw)
+        p = plan(spec, backend="pallas", algo=algo)
+        assert p.path == "lowered", spec
+        y = assert_conv_conformance(x, w, spec, algo)
+        y_direct = plan(spec, algo="direct").apply(x, w)
+        tol = 2e-4 if quant is None else 0.1
+        np.testing.assert_allclose(
+            np.asarray(y), np.asarray(y_direct), rtol=tol,
+            atol=tol * float(jnp.abs(y_direct).max()))
+
+
+@pytest.mark.kernels
+@pytest.mark.parametrize("cin,groups", [(16, 2), (24, 3), (32, 8)])
+def test_lowering_sweep_grouped(cin, groups):
+    x, w = _data(hw=12, cin=cin, cout=cin, cin_w=cin // groups, seed=cin)
+    for quant in (None, INT8_FREQ):
+        kw = {"quant": quant} if quant else {}
+        spec = ConvSpec.for_conv2d(x.shape, w.shape, groups=groups, **kw)
+        assert_conv_conformance(x, w, spec, "sfc6_6")
+
+
+@pytest.mark.kernels
+@pytest.mark.parametrize("hw,c", [(12, 8), (17, 24), (9, 128)])
+def test_lowering_sweep_depthwise(hw, c):
+    rng = np.random.RandomState(hw + c)
+    x = jnp.asarray(rng.randn(2, hw, hw, c), jnp.float32)
+    w = jnp.asarray(rng.randn(3, 3, 1, c) * 0.3, jnp.float32)
+    for quant in (None, INT8_FREQ):
+        kw = {"quant": quant} if quant else {}
+        spec = ConvSpec.for_conv2d_depthwise(x.shape, w.shape, **kw)
+        assert_conv_conformance(x, w, spec, "sfc6_6")

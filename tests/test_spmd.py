@@ -122,10 +122,13 @@ def test_nondivisible_axes_sanitized(spmd):
 
 
 def test_direct_path_parity(spmd):
-    """stride-2 degrades to the direct path, still sharded (batch +
-    output channels of the XLA conv are independent)."""
+    """1x1 stride-2 (a ResNet projection shortcut) stays on the direct
+    path, still sharded (batch + output channels of the XLA conv are
+    independent)."""
     spmd()
-    x, w = _data(seed=5)
+    rng = np.random.RandomState(5)
+    x = jnp.asarray(rng.randn(4, 12, 12, 16), jnp.float32)
+    w = jnp.asarray(rng.randn(1, 1, 16, 32) * 0.2, jnp.float32)
     spec = ConvSpec.for_conv2d(x.shape, w.shape, stride=2)
     p_s = plan(spec, backend="pallas_spmd")
     p_1 = plan(spec, backend="pallas")
@@ -133,6 +136,48 @@ def test_direct_path_parity(spmd):
     y_s = p_s.apply(x, w)
     y_1 = p_1.apply(x, w)
     assert bool(jnp.all(y_s == y_1))
+
+
+def test_lowered_polyphase_parity(spmd):
+    """A lowered stride-2 plan on ``pallas_spmd``: every polyphase
+    sub-plan inherits the backend, so each sub-conv is its own
+    shard_map'd fused kernel — bit-identical to the single-device
+    composite (the phase sum adds floats in the same order)."""
+    spmd()
+    x, w = _data(seed=9)
+    spec = ConvSpec.for_conv2d(x.shape, w.shape, stride=2, quant=INT8_FREQ)
+    p_s = plan(spec, backend="pallas_spmd", algo="sfc4_4_r2")
+    p_1 = plan(spec, backend="pallas", algo="sfc4_4_r2")
+    assert p_s.path == "lowered" == p_1.path
+    assert all(sp.backend == "pallas_spmd" for sp in p_s.sub_plans)
+    y_s = p_s.apply(x, p_s.prepare_weights(w, act_scale=p_s.calibrate(x)))
+    y_1 = p_1.apply(x, p_1.prepare_weights(w, act_scale=p_1.calibrate(x)))
+    assert y_s.shape == y_1.shape
+    assert bool(jnp.all(y_s == y_1))
+
+
+def test_depthwise_channel_sharded_parity(spmd):
+    """2-D depthwise shards its single channel axis over 'model' on the
+    input AND the weights (elementwise path: no contraction to split) —
+    bit-identical to single-device for int8 and fp."""
+    spmd()
+    rng = np.random.RandomState(10)
+    x = jnp.asarray(rng.randn(4, 12, 12, 16), jnp.float32)
+    w = jnp.asarray(rng.randn(3, 3, 1, 16) * 0.3, jnp.float32)
+    for quant in (INT8_FREQ, None):
+        kw = {"quant": quant} if quant else {}
+        spec = ConvSpec.for_conv2d_depthwise(x.shape, w.shape, **kw)
+        p_s = plan(spec, backend="pallas_spmd", algo="sfc6_6")
+        p_1 = plan(spec, backend="pallas", algo="sfc6_6")
+        assert p_s.path == "fast"
+        if quant:
+            act = calibrate_act_scale(x, p_1.algorithm, spec.quant, "SAME")
+            y_s = p_s.apply(x, p_s.prepare_weights(w, act_scale=act))
+            y_1 = p_1.apply(x, p_1.prepare_weights(w, act_scale=act))
+        else:
+            y_s = p_s.apply(x, w)
+            y_1 = p_1.apply(x, w)
+        assert bool(jnp.all(y_s == y_1))
 
 
 @pytest.mark.skipif(MESH[1] < 2, reason="needs a >1 model axis")

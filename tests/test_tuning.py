@@ -11,6 +11,7 @@ import json
 import threading
 import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -71,6 +72,55 @@ def test_record_roundtrips_config_and_lookup():
     got = tuning.get_config(spec, "pallas", "sfc4_4")
     assert got == cfg and got.k_block is None
     assert tuning.lookup(spec, "pallas")["sfc4_4"]["time_s"] == 2e-3
+
+
+def test_old_cache_entries_survive_new_spec_fields(tmp_path):
+    """Timing-cache entries written before the lowering PR (no ``groups``
+    field, no 2-D ``depthwise``, configs without the newer knobs, plus
+    unknown future keys) must keep loading and resolving for the specs
+    they keyed — the ``KernelConfig.from_json`` tolerance pattern, now
+    extended to ``spec_key`` (non-default-only tokens)."""
+    spec = ConvSpec(rank=2, kernel_size=3, in_channels=16, out_channels=16,
+                    spatial=(10, 10), quant=INT8_FREQ)
+    # the pre-PR key literally had no groups/depthwise tokens: today's
+    # key for a default (dense, groups=1) spec must be identical
+    old_key = (f"r2k3s1pSAMEci16co16sp(10, 10)"
+               f"qa8w8frequency-channel+frequency|pallas"
+               f"|{jax.default_backend()}|i1")
+    assert tuning.spec_key(spec, "pallas") == old_key
+    old_cache = {old_key: {
+        # config written by PR 2: no rows_per_step/double_buffer fields,
+        # plus a key from some future version
+        "sfc4_4": {"time_s": 1.5e-3,
+                   "config": {"datapath": "staged", "tile_block": 8,
+                              "chan_block": 128, "k_block": 64,
+                              "cout_block": 128, "future_knob": True}},
+        "sfc6_6": {"time_s": 2.5e-3},
+        "direct": {"time_s": 3.0e-3},
+    }}
+    path = tmp_path / "old_tuning.json"
+    path.write_text(json.dumps(old_cache))
+    tuning.set_cache_path(str(path))
+    try:
+        assert tuning.lookup(spec, "pallas")["sfc4_4"]["time_s"] == 1.5e-3
+        cfg = tuning.get_config(spec, "pallas", "sfc4_4")
+        assert cfg.datapath == "staged" and cfg.k_block == 64
+        # missing knobs default, unknown knobs drop
+        assert cfg.rows_per_step == KernelConfig().rows_per_step
+        assert cfg.double_buffer is False
+        # the measured entry governs planning, as before the refactor
+        assert plan(spec, backend="pallas", algo="auto").algo_name == "sfc4_4"
+        # non-default new fields key DIFFERENTLY (no false sharing with
+        # old entries): grouped/depthwise specs miss this cache entry
+        import dataclasses as dc
+        g = dc.replace(spec, groups=2)
+        dw = dc.replace(spec, depthwise=True, groups=1)
+        assert tuning.spec_key(g, "pallas") != old_key
+        assert tuning.spec_key(dw, "pallas") != old_key
+        assert tuning.lookup(g, "pallas") == {}
+        assert tuning.lookup(dw, "pallas") == {}
+    finally:
+        tuning.set_cache_path(None)
 
 
 def _int8_case(cin=24, cout=8, hw=10, seed=0):
