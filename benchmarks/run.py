@@ -12,7 +12,9 @@ the batched multi-tile-row fused variant) and APPENDS a timestamped
 git-SHA entry to ``BENCH_conv.json["trajectory"]``, so the accumulated
 history rides the committed file across PRs.  ``scaleout`` appends the
 SPMD per-shard-count rows to the same artifact (forced host-device mesh
-on single-device hosts).
+on single-device hosts); ``serving`` appends the open-loop
+continuous-batching SLO rows (``repro.serve`` engine, p50/p95/p99 +
+goodput + occupancy + cache hit rate) under the ``"serving"`` key.
 """
 import sys
 import time
@@ -20,7 +22,7 @@ import time
 
 def main() -> None:
     from benchmarks import (appendixB_iterative, fig4_accuracy_vs_bops,
-                            fig5_layer_mse, roofline, scaleout,
+                            fig5_layer_mse, roofline, scaleout, serving,
                             table1_algorithms, table3_throughput,
                             table45_granularity)
     suites = {
@@ -32,6 +34,7 @@ def main() -> None:
         "appendixB": appendixB_iterative.run,
         "roofline": roofline.run,
         "scaleout": scaleout.run,
+        "serving": serving.run,
     }
     selected = sys.argv[1:] or list(suites)
     t0 = time.time()

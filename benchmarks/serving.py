@@ -1,0 +1,216 @@
+"""Open-loop serving benchmark: drive ``repro.serve.Engine`` with
+synthetic traffic and land SLO rows in ``BENCH_conv.json["serving"]``.
+
+  PYTHONPATH=src python -m benchmarks.run serving
+  PYTHONPATH=src python -m benchmarks.serving --smoke       # the CI job
+
+Methodology (EXPERIMENTS.md §Serving): arrivals are *open-loop* — a
+Poisson (and a bursty Markov-modulated Poisson) process schedules submit
+times independently of the engine's completions, so queueing delay and
+the latency tail are measured rather than hidden.  Each row is one
+(process, rate) cell: streaming-histogram p50/p95/p99 for queue wait,
+service, and end-to-end latency, per-class SLO attainment, goodput
+(deadline-met requests per second of wall clock), batch occupancy
+(requests per dispatch AND images folded per fused grid step), serving
+cache hit rate, and the pad-to-bucket waste fraction.
+
+Numbers on this host are interpret-mode Pallas on CPU — they rank
+serving policies (batching on/off, bucket tables, admission bounds)
+against each other and track the trajectory across PRs; they are not
+TPU latencies.  The artifact is merged, never overwritten, and a
+timestamped git-SHA entry rides ``trajectory`` like the table3/scaleout
+suites.
+"""
+from __future__ import annotations
+
+import argparse
+import datetime
+import json
+import os
+import subprocess
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+BENCH_PATH = os.environ.get("REPRO_BENCH_OUT", "BENCH_conv.json")
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], capture_output=True,
+            text=True, check=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__))).stdout.strip()
+    except Exception:
+        return "unknown"
+
+
+def _build_engine(cap: int, max_batch: int):
+    import jax.numpy as jnp
+
+    from repro.quant import INT8_FREQ
+    from repro.serve import BucketTable, Engine
+
+    cin, cout = 8, 16
+    rng = np.random.RandomState(0)
+    w = jnp.asarray(rng.randn(3, 3, cin, cout) * 0.1, jnp.float32)
+    shapes = [(h, h) for h in (10, 14, 20, 28) if h <= cap]
+    table = BucketTable.for_workload(shapes, kernel_size=3,
+                                     in_channels=cin, out_channels=cout,
+                                     quant=INT8_FREQ)
+    # round_batches bounds the dispatch shapes to powers of two so
+    # warm_compile can pre-trace ALL of them: live traffic never pays a
+    # first-shape compile, and the measured tail is queueing, not XLA
+    eng = Engine(w, table, max_batch=max_batch, round_batches=True,
+                 warm_compile=True)
+    workload = {"kernel": 3, "cin": cin, "cout": cout, "quant": "int8",
+                "buckets": [b.name for b in table.buckets],
+                "max_batch": max_batch}
+    return eng, workload
+
+
+def _drive(eng, events, log) -> Dict:
+    """Submit one traffic schedule open-loop; return the engine snapshot
+    plus wall-clock goodput."""
+    import jax.numpy as jnp
+
+    from repro.serve import RejectedError
+
+    rng = np.random.RandomState(42)
+    # inputs pre-generated so submit-time work is only the submit
+    xs = [jnp.asarray(rng.randn(h, w, 8), jnp.float32)
+          for (h, w) in (e.shape for e in events)]
+    eng.start()
+    t0 = time.perf_counter()
+    futures = []
+    for ev, x in zip(events, xs):
+        now = time.perf_counter() - t0
+        if ev.t > now:
+            time.sleep(ev.t - now)
+        futures.append((eng.submit(x, ev.slo), ev))
+    eng.drain(timeout=600)
+    wall_s = time.perf_counter() - t0
+    eng.stop()
+
+    good = rejected = 0
+    for f, ev in futures:
+        try:
+            r = f.result(timeout=0)
+            good += int(r.deadline_met)
+        except RejectedError:
+            rejected += 1
+    snap = eng.snapshot()
+    snap["wall_s"] = wall_s
+    snap["goodput_rps"] = good / wall_s if wall_s > 0 else 0.0
+    snap["rejected"] = rejected
+    return snap
+
+
+def _row(process: str, rate_hz: float, n: int, snap: Dict) -> Dict:
+    occ = snap["batch_occupancy"]
+    return {
+        "process": process, "rate_hz": rate_hz, "requests": n,
+        "wall_s": snap["wall_s"],
+        "p50_ms": snap["e2e_ms"]["p50_ms"],
+        "p95_ms": snap["e2e_ms"]["p95_ms"],
+        "p99_ms": snap["e2e_ms"]["p99_ms"],
+        "queue_wait_p50_ms": snap["queue_wait_ms"]["p50_ms"],
+        "service_p50_ms": snap["service_ms"]["p50_ms"],
+        "goodput_rps": snap["goodput_rps"],
+        "slo_attainment": snap["slo_attainment"],
+        "slo": snap["slo"],
+        "occupancy_mean": occ["mean"], "occupancy_max": occ["max"],
+        "imgs_per_step_mean": occ["imgs_per_step_mean"],
+        "cache_hit_rate": snap["serving_cache"]["hit_rate"],
+        "cache_evictions": snap["serving_cache"]["evictions"],
+        "pad_waste_frac": snap["pad_waste_frac"],
+        "rejected": snap["rejected"],
+        "queue_depth_max": snap["queue_depth"]["max"],
+    }
+
+
+def run(log=print, bench_path: Optional[str] = None, *,
+        smoke: bool = False) -> Dict:
+    import jax
+
+    from repro.serve import default_shape_mix, synthesize
+
+    bench_path = bench_path or BENCH_PATH
+    cap = int(os.environ.get("REPRO_BENCH_SPATIAL_CAP", "28"))
+    n = 24 if smoke else 48
+    # rates chosen against interpret-mode service times (~2-40ms/dispatch
+    # warm): the low rate measures the healthy regime, the high rate
+    # pushes utilization past 1 so queueing, continuous-batch folding,
+    # and SLO misses actually appear in the tail
+    rates = [200.0] if smoke else [20.0, 200.0]
+    max_batch = 4 if smoke else 8
+    mix = default_shape_mix(cap)
+
+    cells = [("poisson", r) for r in rates] + [("bursty", rates[-1])]
+    rows: List[Dict] = []
+    for process, rate in cells:
+        # a fresh engine per cell: rows are independent measurements, and
+        # warm (plan + calibrate + prepare) stays off the request path
+        eng, workload = _build_engine(cap, max_batch)
+        events = synthesize(n, process=process, rate_hz=rate, mix=mix,
+                            seed=7)
+        snap = _drive(eng, events, log)
+        row = _row(process, rate, n, snap)
+        rows.append(row)
+        log(f"serving {process}@{rate:.0f}rps: "
+            f"p50={row['p50_ms']:.0f}ms p95={row['p95_ms']:.0f}ms "
+            f"p99={row['p99_ms']:.0f}ms goodput={row['goodput_rps']:.1f}rps "
+            f"slo={row['slo_attainment']:.2f} "
+            f"occ={row['occupancy_mean']:.2f} "
+            f"imgs/step={row['imgs_per_step_mean']:.2f} "
+            f"hit={row['cache_hit_rate']:.2f} "
+            f"waste={row['pad_waste_frac']:.2f}")
+
+    # accumulate, never overwrite: other suites' keys and the cross-PR
+    # trajectory survive this run (same merge discipline as table3)
+    bench = {}
+    if os.path.exists(bench_path):
+        try:
+            with open(bench_path) as f:
+                bench = json.load(f)
+        except ValueError:
+            bench = {}
+    if not isinstance(bench, dict):
+        bench = {}
+    bench["serving"] = {
+        "host": {"platform": jax.default_backend(), "jax": jax.__version__,
+                 "interpret": True},
+        "workload": workload, "spatial_cap": cap, "smoke": smoke,
+        "rows": rows,
+    }
+    entry = {
+        "ts": datetime.datetime.now(datetime.timezone.utc)
+        .isoformat(timespec="seconds"),
+        "git_sha": _git_sha(),
+        "platform": jax.default_backend(), "jax": jax.__version__,
+        "serving": [{k: r[k] for k in
+                     ("process", "rate_hz", "p50_ms", "p95_ms", "p99_ms",
+                      "goodput_rps", "slo_attainment", "occupancy_mean",
+                      "imgs_per_step_mean", "cache_hit_rate")}
+                    for r in rows],
+    }
+    bench.setdefault("trajectory", []).append(entry)
+    with open(bench_path, "w") as f:
+        json.dump(bench, f, indent=1)
+    log(f"bench_artifact,{bench_path} "
+        f"(trajectory: {len(bench['trajectory'])} entries)")
+    return {"bench_path": bench_path, "rows": rows}
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small open-loop run (the CI serve job)")
+    ap.add_argument("--out", default=None, help="BENCH_conv.json path")
+    args = ap.parse_args(argv)
+    run(bench_path=args.out, smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -28,6 +28,7 @@ one process-wide default cache — the serving launcher's view.
 """
 from __future__ import annotations
 
+import os
 import threading
 from collections import OrderedDict
 from typing import Any, Dict, Optional, Tuple
@@ -37,20 +38,41 @@ import jax
 from repro.api.plan import ConvPlan, PreparedWeights
 from repro.api.spec import ConvSpec
 
+_ENV_MAXSIZE = "REPRO_SERVING_CACHE_SIZE"
+_DEFAULT_MAXSIZE = 256
+
+
+def default_maxsize() -> int:
+    """Deployment-configurable bound for the default cache
+    (``REPRO_SERVING_CACHE_SIZE``); invalid values fall back loudly-ish
+    to the built-in default rather than crashing a serving process at
+    import time."""
+    raw = os.environ.get(_ENV_MAXSIZE)
+    if raw is None:
+        return _DEFAULT_MAXSIZE
+    try:
+        n = int(raw)
+    except ValueError:
+        return _DEFAULT_MAXSIZE
+    return n if n >= 1 else _DEFAULT_MAXSIZE
+
 
 class ServingCache:
     """Thread-safe LRU of (ConvSpec, backend, algo, weights) -> prepared
     execution state.  Entries pin their operands, so id-based identity
-    stays valid for the entry's lifetime."""
+    stays valid for the entry's lifetime.  ``maxsize=None`` resolves from
+    ``REPRO_SERVING_CACHE_SIZE`` (default 256)."""
 
-    def __init__(self, maxsize: int = 256):
+    def __init__(self, maxsize: Optional[int] = None):
+        if maxsize is None:
+            maxsize = default_maxsize()
         if maxsize < 1:
             raise ValueError(f"maxsize must be >= 1: {maxsize}")
         self._maxsize = maxsize
         self._lock = threading.Lock()
         self._entries: "OrderedDict[tuple, Tuple[tuple, PreparedWeights]]" \
             = OrderedDict()
-        self._hits = self._misses = self._prepares = 0
+        self._hits = self._misses = self._prepares = self._evictions = 0
 
     def get(self, spec: ConvSpec, w, *, backend: str = "reference",
             algo: str = "auto", interpret: bool = True,
@@ -98,20 +120,29 @@ class ServingCache:
         prep = p.prepare_weights(w, act_scale=act_scale, w_scale=w_scale)
         with self._lock:
             self._prepares += 1
-            while len(self._entries) >= self._maxsize:
+            # replacing an invalidated same-key entry is not an eviction:
+            # only capacity-driven LRU pops count, so a nonzero
+            # ``evictions`` under steady traffic means the cache is sized
+            # below the live working set (re-prepare churn on hot specs)
+            while len(self._entries) >= self._maxsize \
+                    and ck not in self._entries:
                 self._entries.popitem(last=False)
+                self._evictions += 1
             self._entries[ck] = (operands, prep, p)
+            self._entries.move_to_end(ck)     # replaced entries become MRU
         return p, prep
 
     def stats(self) -> Dict[str, int]:
         with self._lock:
             return {"hits": self._hits, "misses": self._misses,
-                    "prepares": self._prepares, "size": len(self._entries)}
+                    "prepares": self._prepares,
+                    "evictions": self._evictions,
+                    "size": len(self._entries)}
 
     def clear(self) -> None:
         with self._lock:
             self._entries.clear()
-            self._hits = self._misses = self._prepares = 0
+            self._hits = self._misses = self._prepares = self._evictions = 0
 
 
 _DEFAULT = ServingCache()

@@ -1,11 +1,15 @@
-"""Serving launcher: continuous-batch greedy decoding loop.
+"""Serving launcher: continuous-batch greedy decoding loop (thin CLI).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b \
       --batch 4 --gen 32
 
-Production shape: requests queue in, are packed into the fixed decode batch,
-and finished sequences are replaced without recompiling (static shapes).
-On the 16x16 mesh the same ``decode_step`` the dry-run proves out serves
+Production shape: requests queue in, are packed into the fixed decode
+batch, and finished sequences are replaced without recompiling (static
+shapes).  The admission/drain/KV-wrap state machine lives in
+``repro.serve.slots.SlotLoop`` and the prompt source in
+``repro.serve.traffic.PromptStream`` — this module only parses arguments,
+builds the model, and feeds the jitted ``decode_step`` to the loop.  On
+the 16x16 mesh the same ``decode_step`` the dry-run proves out serves
 decode_32k / long_500k; ``--smoke`` (the default) runs the reduced config
 on CPU and ``--no-smoke`` serves the full ``get_config`` architecture.
 
@@ -19,7 +23,6 @@ entry.
 from __future__ import annotations
 
 import argparse
-import time
 from typing import Dict, Optional, Sequence
 
 import jax
@@ -28,19 +31,7 @@ import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.models.registry import build
-
-
-class RequestQueue:
-    """Synthetic open-loop request stream (prompt lengths vary)."""
-
-    def __init__(self, vocab: int, seed: int = 0):
-        self.rng = np.random.RandomState(seed)
-        self.vocab = vocab
-        self.served = 0
-
-    def next_prompt(self):
-        n = int(self.rng.randint(4, 16))
-        return self.rng.randint(0, self.vocab, size=n).tolist()
+from repro.serve import PromptStream, SlotLoop
 
 
 def parse_args(argv: Optional[Sequence[str]] = None) -> argparse.Namespace:
@@ -55,6 +46,9 @@ def parse_args(argv: Optional[Sequence[str]] = None) -> argparse.Namespace:
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--prompt-min", type=int, default=4)
+    ap.add_argument("--prompt-max", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
     return ap.parse_args(argv)
 
 
@@ -107,7 +101,9 @@ def main(argv: Optional[Sequence[str]] = None):
     cfg = resolve_config(args)
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    queue = RequestQueue(cfg.vocab_size)
+    prompts = PromptStream(cfg.vocab_size,
+                           lengths=(args.prompt_min, args.prompt_max),
+                           seed=args.seed)
 
     cache_stats = warm_conv_plans(cfg, params, args.batch, args.max_len)
     if cache_stats["size"]:
@@ -124,61 +120,25 @@ def main(argv: Optional[Sequence[str]] = None):
     serve = jax.jit(model.decode_step, donate_argnums=(1,))
     cache = model.init_cache(params, args.batch, args.max_len, memory)
 
-    # continuous batching state (host side); the initial fill respects the
-    # --requests budget too — surplus slots simply idle
-    prompts = [queue.next_prompt() for _ in range(args.batch)]
-    pos = np.zeros(args.batch, np.int32)
-    remaining = np.full(args.batch, args.gen, np.int32)
-    tok = np.array([[p[0]] for p in prompts], np.int32)
-    started = min(args.batch, args.requests)
-    active = np.arange(args.batch) < started
-    done = 0
-    t0 = time.time()
-    steps = 0
-    while done < args.requests:
+    def step_fn(tok: np.ndarray, pos: np.ndarray) -> np.ndarray:
+        nonlocal cache
         logits, cache = serve(params, cache, jnp.asarray(tok),
                               jnp.asarray(pos))
-        nxt = np.asarray(jnp.argmax(logits[:, -1], -1), np.int32)
-        steps += 1
-        for i in range(args.batch):
-            if not active[i]:                      # drained slot: budget hit
-                continue
-            pos[i] += 1
-            if pos[i] < len(prompts[i]):           # still consuming prompt
-                tok[i, 0] = prompts[i][pos[i]]
-            elif remaining[i] > 0:                  # generating
-                tok[i, 0] = nxt[i]
-                remaining[i] -= 1
-            else:                                   # finished -> swap in new
-                done += 1
-                if started < args.requests:        # admit within the budget
-                    prompts[i] = queue.next_prompt()
-                    pos[i] = 0
-                    remaining[i] = args.gen
-                    tok[i, 0] = prompts[i][0]
-                    started += 1
-                else:                               # budget reached: drain
-                    active[i] = False
-            if active[i] and pos[i] >= args.max_len - 1:
-                # safety wrap: the sequence hit the KV budget — count the
-                # truncated request and admit a replacement only within
-                # the same budget as the normal completion path above
-                done += 1
-                if started < args.requests:
-                    pos[i] = 0
-                    prompts[i] = queue.next_prompt()
-                    remaining[i] = args.gen
-                    tok[i, 0] = prompts[i][0]
-                    started += 1
-                else:
-                    active[i] = False
-    dt = time.time() - t0
-    print(f"served {done} requests in {dt:.1f}s "
-          f"({steps} steps, {args.batch*steps/dt:.0f} tok/s on "
-          f"{jax.devices()[0].platform})")
+        return np.asarray(jnp.argmax(logits[:, -1], -1), np.int32)
+
+    loop = SlotLoop(batch=args.batch, gen=args.gen, max_len=args.max_len,
+                    requests=args.requests, prompts=prompts)
+    stats = loop.run(step_fn)
+    lat = stats.latency_ms
+    print(f"served {stats.served} requests in {stats.elapsed_s:.1f}s "
+          f"({stats.steps} steps, {stats.tok_per_s:.0f} tok/s on "
+          f"{jax.devices()[0].platform}; {stats.wrapped} KV-wrapped; "
+          f"request latency p50={lat.percentile(50):.0f}ms "
+          f"p99={lat.percentile(99):.0f}ms)")
     if cache_stats["size"]:
         from repro.api import serving_cache
         print(f"conv_cache,{serving_cache.stats()}")
+    return stats
 
 
 if __name__ == "__main__":

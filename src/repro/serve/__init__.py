@@ -1,0 +1,35 @@
+"""``repro.serve`` — the continuous-batching serving subsystem.
+
+The first real subsystem above the planner (ROADMAP item: serving tier
+with SLO accounting): heterogeneous request shapes map onto a small set
+of warm ``ConvSpec`` buckets (``bucketing``), admission + continuous
+batching fold concurrent requests into the fused kernel's
+``rows_per_step`` image-folding grid (``batcher``, ``engine``), every
+latency lands in streaming histograms with per-class SLO attainment
+(``metrics``), and an open-loop synthetic traffic generator drives it
+(``traffic``).  The LM decode launcher's slot loop lives here too
+(``slots``) so ``repro.launch.serve`` stays a thin CLI.
+"""
+from repro.serve.batcher import (AdmissionPolicy, Batch, BatchQueue,
+                                 fold_rows_per_step)
+from repro.serve.bucketing import Bucket, BucketTable
+from repro.serve.engine import Engine, results
+from repro.serve.metrics import LatencyHistogram, MetricsRegistry
+from repro.serve.slots import SlotLoop, SlotLoopStats
+from repro.serve.traffic import (PromptStream, ShapeMix, TrafficEvent,
+                                 bursty_arrivals, default_shape_mix,
+                                 poisson_arrivals, synthesize)
+from repro.serve.types import (BATCH, INTERACTIVE, SLO_CLASSES, Request,
+                               RejectedError, Result, SLOClass)
+
+__all__ = [
+    "Engine", "results",
+    "AdmissionPolicy", "Batch", "BatchQueue", "fold_rows_per_step",
+    "Bucket", "BucketTable",
+    "LatencyHistogram", "MetricsRegistry",
+    "SlotLoop", "SlotLoopStats",
+    "PromptStream", "ShapeMix", "TrafficEvent", "poisson_arrivals",
+    "bursty_arrivals", "default_shape_mix", "synthesize",
+    "Request", "Result", "RejectedError", "SLOClass", "SLO_CLASSES",
+    "INTERACTIVE", "BATCH",
+]

@@ -1,0 +1,158 @@
+"""Admission control and continuous batch formation.
+
+The batcher owns the request queue between ``Engine.submit`` and the
+dispatch loop.  Formation is per-bucket FCFS: a batch is the head
+request's bucket plus every queued request of the same bucket (up to
+``max_batch``), preserving arrival order for the rest — heterogeneous
+shapes never mix inside one dispatch, so each dispatch is one warm
+``ConvSpec`` and one fused-kernel launch.
+
+:func:`fold_rows_per_step` is the serving-side view of the fused kernel's
+image-folding grid (``repro.kernels.sfc_fused.grouping``): given the
+batch the batcher formed, pick the ``rows_per_step`` that folds *whole
+images* — ideally the entire batch — into one grid step, walking down
+through the same VMEM-budget arithmetic (``fused_vmem_bytes``) the
+kernel's own auto-grouping uses, so the batcher never requests a grid
+step the kernel would spill on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import deque
+from typing import Deque, List, Optional, Tuple
+
+from repro.serve.bucketing import Bucket
+from repro.serve.types import Request
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionPolicy:
+    """Bounded-queue admission: reject rather than queue unboundedly.
+
+    ``max_queue_depth`` is the back-pressure bound (an open-loop arrival
+    process does not slow down when the engine falls behind — without a
+    bound the queue, and every latency behind it, grows without limit).
+    Requests whose shape fits no bucket are rejected outright: padding
+    down (truncation) would silently corrupt outputs.
+    """
+
+    max_queue_depth: int = 256
+
+    def admit(self, request: Request, bucket: Optional[Bucket],
+              queue_depth: int) -> Tuple[bool, Optional[str]]:
+        if bucket is None:
+            h, w = request.shape
+            return False, f"no bucket fits shape ({h}, {w})"
+        if queue_depth >= self.max_queue_depth:
+            return False, f"queue depth {queue_depth} at limit " \
+                          f"{self.max_queue_depth}"
+        return True, None
+
+
+@dataclasses.dataclass
+class Batch:
+    """One dispatch unit: same-bucket requests in arrival order."""
+
+    bucket: Bucket
+    requests: List[Request]
+
+    def __len__(self) -> int:
+        return len(self.requests)
+
+
+class BatchQueue:
+    """Thread-safe FCFS queue with per-bucket batch formation."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._nonempty = threading.Condition(self._lock)
+        self._q: Deque[Tuple[Request, Bucket]] = deque()
+
+    def depth(self) -> int:
+        with self._lock:
+            return len(self._q)
+
+    def put(self, request: Request, bucket: Bucket) -> None:
+        with self._nonempty:
+            self._q.append((request, bucket))
+            self._nonempty.notify()
+
+    def take_batch(self, max_batch: int,
+                   timeout: Optional[float] = None) -> Optional[Batch]:
+        """Form one batch: the oldest request's bucket, joined by every
+        queued same-bucket request up to ``max_batch`` (others keep their
+        positions).  Blocks up to ``timeout`` for a first request;
+        ``timeout=0`` polls.  Returns None when nothing arrived."""
+        with self._nonempty:
+            if not self._q and timeout != 0:
+                self._nonempty.wait(timeout)
+            if not self._q:
+                return None
+            head_bucket = self._q[0][1]
+            taken, rest = [], deque()
+            for req, bucket in self._q:
+                if bucket is head_bucket and len(taken) < max_batch:
+                    taken.append(req)
+                else:
+                    rest.append((req, bucket))
+            self._q = rest
+            return Batch(bucket=head_bucket, requests=taken)
+
+
+def _divisors_desc(n: int) -> List[int]:
+    return [d for d in range(n, 0, -1) if n % d == 0]
+
+
+def fold_rows_per_step(plan, batch_size: int) -> Optional[Tuple[int, int, int]]:
+    """(rows_per_step, imgs, rows) folding the batch into the fused grid.
+
+    Prefers folding the whole batch's images into one grid step
+    (``rows_per_step = imgs * nH``), walking down the divisors of the
+    batch size while the per-step footprint exceeds the kernel's VMEM
+    budget, then falling back to partial-image row groups.  Returns None
+    for plans the folding does not apply to (direct/lowered paths,
+    unquantized, or a measured config that picked the staged datapath) —
+    the dispatch then runs the plan as-is and batching still amortizes
+    launch overhead, just not grid-step occupancy.
+    """
+    from repro.api import tuning
+    from repro.core import conv2d as c2d
+    from repro.kernels import sfc_fused as sf
+    spec = plan.spec
+    if plan.path != "fast" or plan.algorithm is None \
+            or not spec.quant.enabled or spec.depthwise \
+            or spec.spatial is None:
+        return None
+    cfg = plan.config or tuning.DEFAULT_FUSED
+    if cfg.datapath != "fused":
+        return None
+    algo = plan.algorithm
+    H, W = spec.spatial
+    lo_h, hi_h, _ = c2d.pad_amounts(H, algo.M, algo.R, spec.padding)
+    lo_w, hi_w, _ = c2d.pad_amounts(W, algo.M, algo.R, spec.padding)
+    nH = (H + lo_h + hi_h - (algo.R - 1)) // algo.M
+    nW = (W + lo_w + hi_w - (algo.R - 1)) // algo.M
+    Wp = W + lo_w + hi_w
+    C, Cout = spec.in_channels, spec.out_channels
+    kb = sf._round_up(C, 8) if cfg.k_block is None \
+        else min(cfg.k_block, sf._round_up(C, 8))
+    n_k = sf._round_up(C, kb) // kb
+    cb = min(cfg.cout_block, sf._round_up(Cout, 8))
+    n_o = sf._round_up(Cout, cb) // cb
+    P = algo.t * algo.t
+
+    def fits(imgs: int, rows: int) -> bool:
+        cols = imgs * rows * nW
+        return sf.fused_vmem_bytes(
+            algo, nW, Wp, kb, cb, n_k=n_k, rows=rows, imgs=imgs,
+            cache_xq=sf.cache_fits(n_o, n_k, P, cols, kb),
+            double_buffer=cfg.double_buffer) <= sf.VMEM_LIMIT_BYTES
+
+    for imgs in _divisors_desc(max(1, batch_size)):
+        if fits(imgs, nH):
+            return imgs * nH, imgs, nH
+    for rows in (r for r in (8, 4, 2, 1) if r < nH):
+        if fits(1, rows):
+            return rows, 1, rows
+    return 1, 1, 1

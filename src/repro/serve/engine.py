@@ -1,0 +1,323 @@
+"""The continuous-batching conv serving engine.
+
+``Engine`` is the subsystem's assembly: bucket table + admission policy +
+batch queue + metrics + the ConvSpec-keyed serving cache, around one conv
+workload's weights.  The lifecycle:
+
+  * construction *warms* every bucket: each bucket's ``ConvSpec`` is
+    planned, its activation scales calibrated, and its weights prepared
+    (transformed + int8-quantized) through ``repro.api.serving_cache`` —
+    so the request path never plans, never transforms, never quantizes
+    (assertable: cache ``prepares`` stays at the bucket count under load);
+  * :meth:`submit` stamps arrival (``time.perf_counter``), runs admission
+    (bucket fit + queue bound) and returns a ``concurrent.futures.Future``
+    immediately — the caller never blocks on the batch;
+  * a dispatch thread (:meth:`start`; or deterministic :meth:`step` calls
+    in tests) drains the queue one same-bucket batch at a time, pads each
+    request to the bucket, stacks them, and folds the whole batch into
+    the fused kernel's ``rows_per_step`` image-folding grid
+    (``batcher.fold_rows_per_step``) — ≥2 concurrent requests ride ONE
+    grid step, which is where continuous batching actually meets the MXU;
+  * every result is cropped back to the request's own output extent and
+    resolved into its future with full timing/SLO accounting.
+
+Bit-identity: folding is the fused kernel's grouping dimension, which is
+bit-identical across group sizes (PR 4 invariant), and bucket padding is
+output-exact (``bucketing``) — so a batched engine answer equals the
+per-request answer bit-for-bit (tests/test_serve_engine.py, and the
+bucket specs run under ``repro.testing.assert_conv_conformance``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import serving_cache as sc
+from repro.serve.batcher import (AdmissionPolicy, Batch, BatchQueue,
+                                 fold_rows_per_step)
+from repro.serve.bucketing import Bucket, BucketTable
+from repro.serve.metrics import MetricsRegistry
+from repro.serve.types import (BATCH, Request, RejectedError, Result,
+                               SLOClass)
+
+
+class Engine:
+    """Continuous-batching serving engine over one conv workload."""
+
+    def __init__(self, w, buckets: BucketTable, *,
+                 backend: str = "pallas", algo: str = "auto",
+                 interpret: bool = True, max_batch: int = 8,
+                 admission: Optional[AdmissionPolicy] = None,
+                 cache: Optional[sc.ServingCache] = None,
+                 metrics: Optional[MetricsRegistry] = None,
+                 clock: Callable[[], float] = time.perf_counter,
+                 calib_seed: int = 0, round_batches: bool = False,
+                 warm_compile: bool = False):
+        self.w = w
+        self.buckets = buckets
+        self.backend = backend
+        self.algo = algo
+        self.interpret = interpret
+        self.max_batch = int(max_batch)
+        self.admission = admission or AdmissionPolicy()
+        self.cache = cache if cache is not None else sc.ServingCache()
+        self.metrics = metrics or MetricsRegistry()
+        self.clock = clock
+        self.queue = BatchQueue()
+        self._act_scales: Dict[str, Optional[jnp.ndarray]] = {}
+        self.round_batches = round_batches
+        self._thread: Optional[threading.Thread] = None
+        self._running = threading.Event()
+        self._inflight = 0
+        self._inflight_zero = threading.Condition()
+        self._warm(calib_seed)
+        if warm_compile:
+            self._warm_compile()
+
+    # ------------------------------------------------------------------
+    # startup: warm every bucket off the request path
+    # ------------------------------------------------------------------
+    def _warm(self, calib_seed: int) -> None:
+        """Plan + calibrate + prepare each bucket through the serving
+        cache.  Activation scales are absmax-calibrated per bucket on a
+        synthetic batch (a deployment would substitute PTQ calibration
+        data); the scale arrays are pinned here so the cache's identity
+        checks hold for the engine's lifetime."""
+        from repro.api.tuning import calibrate_act_scale
+        rng = np.random.RandomState(calib_seed)
+        for b in self.buckets.buckets:
+            p = self._plan(b)
+            scale = None
+            if p.spec.quant.enabled and p.path == "fast" \
+                    and p.algorithm is not None:
+                xc = jnp.asarray(
+                    rng.randn(1, b.h, b.w, b.spec.in_channels), jnp.float32)
+                scale = calibrate_act_scale(xc, p.algorithm, p.spec.quant,
+                                            p.spec.padding)
+            self._act_scales[b.name] = scale
+            self.cache.get(b.spec, self.w, backend=self.backend,
+                           algo=self.algo, interpret=self.interpret,
+                           act_scale=scale, key=("serve", b.name))
+
+    def _plan(self, bucket: Bucket):
+        from repro.api import planner
+        return planner.plan(bucket.spec, backend=self.backend,
+                            algo=self.algo, interpret=self.interpret)
+
+    # ---- batch-shape bounding ----------------------------------------
+    def _batch_sizes(self) -> List[int]:
+        """The dispatch batch shapes this engine can emit (with
+        ``round_batches``: powers of two up to ``max_batch``, plus
+        ``max_batch`` itself) — the set ``_warm_compile`` pre-traces."""
+        if not self.round_batches:
+            return list(range(1, self.max_batch + 1))
+        sizes, s = [], 1
+        while s < self.max_batch:
+            sizes.append(s)
+            s *= 2
+        sizes.append(self.max_batch)
+        return sizes
+
+    def _round_batch(self, n: int) -> int:
+        if not self.round_batches:
+            return n
+        return next(s for s in self._batch_sizes() if s >= n)
+
+    def _warm_compile(self) -> None:
+        """Trace/compile every (bucket, batch shape) dispatch off the
+        request path: one zero-input dispatch per combination, routed
+        through the exact request-path code (fold config included), so
+        live traffic never pays a first-shape compile."""
+        for b in self.buckets.buckets:
+            for s in self._batch_sizes():
+                reqs = [Request(x=jnp.zeros((b.h, b.w, b.spec.in_channels),
+                                            jnp.float32),
+                                slo=BATCH, arrival_t=self.clock())
+                        for _ in range(s)]
+                self._dispatch(Batch(bucket=b, requests=reqs), record=False)
+
+    # ------------------------------------------------------------------
+    # request path
+    # ------------------------------------------------------------------
+    def submit(self, x, slo: SLOClass = BATCH) -> Future:
+        """Admit one (h, w, C_in) image; returns a Future of ``Result``.
+
+        Rejections resolve the future immediately with
+        :class:`RejectedError` — an open-loop client observes back
+        pressure as failed futures, not blocked submits.
+        """
+        req = Request(x=x, slo=slo, arrival_t=self.clock())
+        self.metrics.inc("submitted")
+        h, w = req.shape
+        bucket = self.buckets.bucket_for(h, w)
+        ok, reason = self.admission.admit(req, bucket, self.queue.depth())
+        if not ok:
+            self.metrics.inc("rejected")
+            req.future.set_exception(RejectedError(reason))
+            return req.future
+        req.bucket_name = bucket.name
+        self.metrics.inc("admitted")
+        with self._inflight_zero:
+            self._inflight += 1
+        self.queue.put(req, bucket)
+        return req.future
+
+    # ------------------------------------------------------------------
+    # dispatch
+    # ------------------------------------------------------------------
+    def step(self, timeout: Optional[float] = 0) -> int:
+        """Drain ONE batch synchronously; returns requests served (0 when
+        the queue stayed empty).  The deterministic entry point tests and
+        the dispatch thread share."""
+        batch = self.queue.take_batch(self.max_batch, timeout=timeout)
+        if batch is None:
+            return 0
+        try:
+            self._dispatch(batch)
+        except Exception as e:             # resolve, don't wedge callers
+            for r in batch.requests:
+                if not r.future.done():
+                    r.future.set_exception(e)
+            raise
+        finally:
+            with self._inflight_zero:
+                self._inflight -= len(batch)
+                if self._inflight == 0:
+                    self._inflight_zero.notify_all()
+        return len(batch)
+
+    def _dispatch(self, batch: Batch, record: bool = True) -> None:
+        bucket = batch.bucket
+        t_dispatch = self.clock()
+        depth_after = self.queue.depth()
+        B_real = len(batch)
+        B = self._round_batch(B_real)
+        imgs_list = [BucketTable.pad_to(r.x, bucket)
+                     for r in batch.requests]
+        if B > B_real:
+            # round the batch shape up with zero images (outputs dropped):
+            # the compile-shape set stays bounded, per-image independence
+            # keeps every real output bit-identical
+            zero = jnp.zeros_like(imgs_list[0])
+            imgs_list += [zero] * (B - B_real)
+        xb = jnp.stack(imgs_list)
+        plan, prep = self.cache.get(
+            bucket.spec, self.w, backend=self.backend, algo=self.algo,
+            interpret=self.interpret,
+            act_scale=self._act_scales[bucket.name],
+            key=("serve", bucket.name))
+        fold = fold_rows_per_step(plan, B)
+        if fold is not None:
+            rows_per_step, imgs, _ = fold
+            run = plan.with_config(dataclasses.replace(
+                plan.config or _default_fused(),
+                rows_per_step=rows_per_step))
+        else:
+            imgs = 1
+            run = plan
+        y = jax.block_until_ready(run.apply(xb, prep))
+        t_done = self.clock()
+        if not record:
+            return
+        service_ms = (t_done - t_dispatch) * 1e3
+        self.metrics.record_dispatch(
+            occupancy=B_real, imgs_per_step=imgs,
+            queue_depth=depth_after, service_ms=service_ms)
+        if B > B_real:
+            self.metrics.inc("batch_pad_imgs", B - B_real)
+        for i, r in enumerate(batch.requests):
+            r.t_dispatch, r.t_done = t_dispatch, t_done
+            h, w = r.shape
+            yi = BucketTable.crop_output(y[i], h, w, bucket)
+            queue_wait_ms = (t_dispatch - r.arrival_t) * 1e3
+            e2e_ms = (t_done - r.arrival_t) * 1e3
+            met = r.slo.met(e2e_ms)
+            self.metrics.record_request(
+                queue_wait_ms=queue_wait_ms, e2e_ms=e2e_ms,
+                slo_name=r.slo.name, met=met,
+                real_px=h * w, padded_px=bucket.h * bucket.w)
+            r.future.set_result(Result(
+                y=yi, request_id=r.id, bucket_name=bucket.name,
+                batch_size=len(batch), imgs_per_step=imgs,
+                queue_wait_ms=queue_wait_ms, service_ms=service_ms,
+                e2e_ms=e2e_ms, deadline_met=met,
+                pad_waste_frac=bucket.waste(h, w)))
+
+    # ------------------------------------------------------------------
+    # async dispatch thread
+    # ------------------------------------------------------------------
+    def start(self) -> "Engine":
+        if self._thread is not None:
+            return self
+        self._running.set()
+
+        def loop():
+            while self._running.is_set():
+                try:
+                    self.step(timeout=0.02)
+                except Exception:          # the futures carry the error
+                    pass
+
+        self._thread = threading.Thread(target=loop, name="serve-dispatch",
+                                        daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        if self._thread is None:
+            return
+        self._running.clear()
+        self._thread.join()
+        self._thread = None
+
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        """Block until every admitted request resolved (True) or timeout."""
+        deadline = None if timeout is None else time.perf_counter() + timeout
+        with self._inflight_zero:
+            while self._inflight > 0:
+                rem = None if deadline is None \
+                    else deadline - time.perf_counter()
+                if rem is not None and rem <= 0:
+                    return False
+                self._inflight_zero.wait(rem if rem is not None else 0.5)
+        return True
+
+    # ------------------------------------------------------------------
+    # accounting
+    # ------------------------------------------------------------------
+    def snapshot(self) -> Dict:
+        """Metrics + serving-cache stats (with derived hit rate) in one
+        dict — the benchmark row source."""
+        snap = self.metrics.snapshot()
+        cstats = self.cache.stats()
+        lookups = cstats["hits"] + cstats["misses"]
+        snap["serving_cache"] = {
+            **cstats,
+            "hit_rate": cstats["hits"] / lookups if lookups else 0.0,
+        }
+        snap["buckets"] = [b.name for b in self.buckets.buckets]
+        return snap
+
+    def __enter__(self) -> "Engine":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+
+def _default_fused():
+    from repro.api import tuning
+    return tuning.DEFAULT_FUSED
+
+
+def results(futures: List[Future], timeout: Optional[float] = None
+            ) -> List[Result]:
+    """Gather resolved results (rejected futures raise RejectedError)."""
+    return [f.result(timeout=timeout) for f in futures]

@@ -1,0 +1,96 @@
+"""Request model for the serving subsystem.
+
+A :class:`Request` is one conv workload instance in flight: the input
+image, the SLO class it was admitted under, and the monotonic timestamps
+the engine stamps as it moves through the pipeline
+(arrival -> dispatch -> done).  All serving-path timing uses
+``time.perf_counter`` — a monotonic clock — never ``time.time``: latency
+is a *difference* of stamps, and the wall clock can step backwards under
+NTP adjustment, which would report negative (or wildly wrong) latencies
+exactly when a fleet-wide time sync happens under load.
+
+SLO classes are deadline buckets, not priorities: the engine serves FCFS
+per bucket and *accounts* attainment per class (``metrics.MetricsRegistry``),
+so a missed deadline is a measured fact rather than a scheduling hint.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+from concurrent.futures import Future
+from typing import Any, Dict, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOClass:
+    """One service-level objective: a name and an end-to-end deadline."""
+
+    name: str
+    deadline_ms: float
+
+    def met(self, e2e_ms: float) -> bool:
+        return e2e_ms <= self.deadline_ms
+
+
+# Default classes.  Deadlines are calibrated for the interpret-mode CPU
+# container (EXPERIMENTS.md §Serving) — a real TPU deployment would tighten
+# them by the interpret/compiled ratio; they are engine *defaults*, every
+# entry point takes explicit SLOClass objects.
+INTERACTIVE = SLOClass("interactive", deadline_ms=2_000.0)
+BATCH = SLOClass("batch", deadline_ms=20_000.0)
+
+SLO_CLASSES: Dict[str, SLOClass] = {c.name: c for c in (INTERACTIVE, BATCH)}
+
+_IDS = itertools.count()
+_IDS_LOCK = threading.Lock()
+
+
+def _next_id() -> int:
+    with _IDS_LOCK:
+        return next(_IDS)
+
+
+@dataclasses.dataclass
+class Request:
+    """One in-flight conv request.
+
+    ``x`` is a single unbatched image ``(h, w, C_in)``; the engine owns
+    batching (pad-to-bucket, stack, fold into the fused grid).  The
+    ``future`` resolves to a :class:`Result` — or to
+    :class:`RejectedError` when admission control turns the request away.
+    """
+
+    x: Any                                   # (h, w, C_in)
+    slo: SLOClass
+    arrival_t: float                         # perf_counter stamp at submit
+    id: int = dataclasses.field(default_factory=_next_id)
+    future: Future = dataclasses.field(default_factory=Future)
+    # engine-stamped:
+    bucket_name: Optional[str] = None
+    t_dispatch: Optional[float] = None
+    t_done: Optional[float] = None
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return int(self.x.shape[0]), int(self.x.shape[1])
+
+
+@dataclasses.dataclass(frozen=True)
+class Result:
+    """What a request's future resolves to."""
+
+    y: Any                                   # (h', w', C_out), bucket-cropped
+    request_id: int
+    bucket_name: str
+    batch_size: int                          # requests folded in the dispatch
+    imgs_per_step: int                       # images per fused grid step
+    queue_wait_ms: float
+    service_ms: float
+    e2e_ms: float
+    deadline_met: bool
+    pad_waste_frac: float                    # padded-to-bucket pixel waste
+
+
+class RejectedError(RuntimeError):
+    """Admission control declined the request (reason in ``args[0]``)."""

@@ -1,0 +1,114 @@
+"""Bucket table semantics + the output-exactness claim behind serving:
+zero-padding a request to its bucket and cropping the output recovers
+the unbucketed conv answer (stride-1 SAME and VALID)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import ConvSpec, plan
+from repro.quant.fake_quant import FP32
+from repro.serve import Bucket, BucketTable
+
+
+def _table(**kw):
+    return BucketTable.for_workload([(8, 8), (16, 12), (4, 4)],
+                                    kernel_size=3, in_channels=4,
+                                    out_channels=8, **kw)
+
+
+# ----------------------------------------------------------------------
+# table semantics
+# ----------------------------------------------------------------------
+def test_sorted_smallest_first_and_first_fit():
+    t = _table()
+    assert [b.name for b in t.buckets] == ["b4x4", "b8x8", "b16x12"]
+    assert t.bucket_for(3, 3).name == "b4x4"
+    assert t.bucket_for(5, 4).name == "b8x8"      # smallest that fits
+    assert t.bucket_for(9, 12).name == "b16x12"
+    assert t.bucket_for(17, 1) is None            # h exceeds every bucket
+    assert t.bucket_for(1, 13) is None
+
+
+def test_duplicate_shapes_dedup_and_names():
+    t = BucketTable.for_workload([(8, 8), (8, 8)], kernel_size=3,
+                                 in_channels=4, out_channels=8)
+    assert len(t.buckets) == 1
+    assert t.by_name("b8x8").spec.spatial == (8, 8)
+    with pytest.raises(KeyError):
+        t.by_name("b9x9")
+
+
+def test_empty_table_rejected():
+    with pytest.raises(ValueError):
+        BucketTable([])
+
+
+def test_duplicate_names_rejected():
+    spec = ConvSpec(rank=2, kernel_size=3, stride=1, padding="SAME",
+                    in_channels=4, out_channels=8, spatial=(8, 8))
+    with pytest.raises(ValueError, match="duplicate"):
+        BucketTable([Bucket("b", 8, 8, spec), Bucket("b", 8, 8, spec)])
+
+
+def test_waste_fraction():
+    b = _table().by_name("b8x8")
+    assert b.waste(8, 8) == 0.0
+    assert b.waste(4, 4) == pytest.approx(1 - 16 / 64)
+
+
+# ----------------------------------------------------------------------
+# pad / crop
+# ----------------------------------------------------------------------
+def test_pad_to_shapes_and_bounds():
+    b = _table().by_name("b8x8")
+    x = jnp.ones((5, 6, 4))
+    xp = BucketTable.pad_to(x, b)
+    assert xp.shape == (8, 8, 4)
+    assert float(jnp.sum(xp)) == float(jnp.sum(x))      # zero fill
+    exact = jnp.ones((8, 8, 4))
+    assert BucketTable.pad_to(exact, b) is exact        # no-op passthrough
+    with pytest.raises(ValueError, match="exceeds bucket"):
+        BucketTable.pad_to(jnp.ones((9, 3, 4)), b)
+
+
+def _y(x, spec):
+    p = plan(spec, backend="reference", algo="direct")
+    return p.apply(x[None], p.prepare_weights(_W))[0]
+
+
+_RNG = np.random.RandomState(0)
+_W = jnp.asarray(_RNG.randn(3, 3, 4, 8) * 0.3, jnp.float32)
+
+
+@pytest.mark.parametrize("padding", ["SAME", "VALID"])
+def test_pad_then_crop_is_output_exact(padding):
+    """The serving invariant: bucket-padded conv + crop == unbucketed
+    conv, because the pad region is exactly the zero border the conv
+    itself would synthesize (SAME) or never touches (VALID)."""
+    h, w = 5, 7
+    x = jnp.asarray(_RNG.randn(h, w, 4), jnp.float32)
+    t = BucketTable.for_workload([(8, 8)], kernel_size=3, in_channels=4,
+                                 out_channels=8, padding=padding,
+                                 quant=FP32)
+    b = t.buckets[0]
+    y_bucket = _y(BucketTable.pad_to(x, b), b.spec)
+    y_crop = BucketTable.crop_output(y_bucket, h, w, b)
+    small = ConvSpec(rank=2, kernel_size=3, stride=1, padding=padding,
+                     in_channels=4, out_channels=8, spatial=(h, w))
+    y_direct = _y(x, small)
+    assert y_crop.shape == y_direct.shape
+    np.testing.assert_allclose(np.asarray(y_crop), np.asarray(y_direct),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_crop_output_stride_aware():
+    spec2 = ConvSpec(rank=2, kernel_size=3, stride=2, padding="SAME",
+                     in_channels=4, out_channels=8, spatial=(8, 8))
+    b = Bucket("b8x8s2", 8, 8, spec2)
+    y = jnp.zeros((4, 4, 8))                   # bucket output at stride 2
+    assert BucketTable.crop_output(y, 5, 7, b).shape == (3, 4, 8)
+    specv = ConvSpec(rank=2, kernel_size=3, stride=1, padding="VALID",
+                     in_channels=4, out_channels=8, spatial=(8, 8))
+    bv = Bucket("b8x8v", 8, 8, specv)
+    yv = jnp.zeros((6, 6, 8))
+    assert BucketTable.crop_output(yv, 5, 7, bv).shape == (3, 5, 8)

@@ -1,0 +1,246 @@
+"""Deterministic engine tests: the serving subsystem's acceptance surface.
+
+  * continuous batching actually folds: >=2 concurrent requests ride ONE
+    fused grid step (batch occupancy and imgs_per_step both > 1);
+  * engine-batched answers are BIT-IDENTICAL to per-request dispatch
+    (and the bucket specs run under repro.testing.assert_conv_conformance);
+  * the request path never re-prepares: cache ``prepares`` stays at the
+    bucket count under load;
+  * admission control rejects (queue bound, no-bucket-fits) by resolving
+    the future with RejectedError;
+  * SLO accounting is exact under an injected clock;
+  * round_batches pads dispatches up to warm shapes without changing
+    real outputs; warm_compile leaves the metrics untouched.
+
+All tests drive ``Engine.step()`` synchronously — no dispatch thread, no
+timing dependence.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api.serving_cache import ServingCache
+from repro.quant import INT8_FREQ
+from repro.serve import (AdmissionPolicy, BucketTable, Engine, INTERACTIVE,
+                         BATCH, RejectedError, results)
+
+CIN, COUT = 4, 8
+
+
+def _weights(seed=0):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.randn(3, 3, CIN, COUT) * 0.2, jnp.float32)
+
+
+def _table(shapes=((8, 8), (12, 12)), quant=INT8_FREQ):
+    return BucketTable.for_workload(shapes, kernel_size=3, in_channels=CIN,
+                                    out_channels=COUT, quant=quant)
+
+
+def _imgs(shapes, seed=1):
+    rng = np.random.RandomState(seed)
+    return [jnp.asarray(rng.randn(h, w, CIN), jnp.float32)
+            for h, w in shapes]
+
+
+@pytest.fixture(scope="module")
+def shared_cache():
+    """One prepared-weights cache for the module: every engine warms the
+    same keyed ("serve", bucket) entries, so plan+transform+quantize cost
+    is paid once (and bit-identity tests share the exact prep objects)."""
+    return ServingCache()
+
+
+# ----------------------------------------------------------------------
+# the tentpole: continuous batching folds into the fused grid
+# ----------------------------------------------------------------------
+def test_batch_occupancy_folds_multiple_requests(shared_cache):
+    """Acceptance: >=2 concurrent requests fold into ONE fused grid step
+    — asserted deterministically by queueing 3 submits before a single
+    step()."""
+    eng = Engine(_weights(), _table(), max_batch=4, cache=shared_cache)
+    futs = [eng.submit(x) for x in _imgs([(12, 12)] * 3)]
+    served = eng.step()
+    assert served == 3
+    occ = eng.snapshot()["batch_occupancy"]
+    assert occ["dispatches"] == 1
+    assert occ["max"] == 3 and occ["max"] > 1
+    assert occ["imgs_per_step_max"] == 3      # whole batch in one grid step
+    for r in results(futs):
+        assert r.batch_size == 3 and r.imgs_per_step == 3
+        assert r.y.shape == (12, 12, COUT)
+
+
+def test_batched_bit_identical_to_per_request(shared_cache):
+    """Acceptance: the batched engine answer equals per-request dispatch
+    bit-for-bit — ragged shapes, pad-to-bucket, fold and crop included."""
+    shapes = [(11, 10), (8, 8), (12, 12), (7, 5)]
+    xs = _imgs(shapes, seed=3)
+    eng_b = Engine(_weights(), _table(), max_batch=4, cache=shared_cache)
+    eng_s = Engine(_weights(), _table(), max_batch=1, cache=shared_cache)
+
+    def serve_all(eng):
+        futs = [eng.submit(x) for x in xs]
+        while eng.step() > 0:
+            pass
+        return results(futs)
+
+    rb, rs = serve_all(eng_b), serve_all(eng_s)
+    for b, s, (h, w) in zip(rb, rs, shapes):
+        assert b.y.shape == s.y.shape
+        assert np.array_equal(np.asarray(b.y), np.asarray(s.y)), \
+            f"batched != per-request for shape ({h}, {w})"
+    # the batched engine really batched; the single one really did not
+    assert eng_b.snapshot()["batch_occupancy"]["max"] > 1
+    assert eng_s.snapshot()["batch_occupancy"]["max"] == 1
+
+
+def test_bucket_specs_conform():
+    """The specs the table plans are ordinary fused-kernel workloads:
+    every fused grouping must stay bit-identical to staged on them."""
+    from repro.testing import assert_conv_conformance
+    b = _table().by_name("b8x8")
+    rng = np.random.RandomState(5)
+    x = jnp.asarray(rng.randn(2, 8, 8, CIN), jnp.float32)
+    assert_conv_conformance(x, _weights(), b.spec)
+
+
+def test_heterogeneous_queue_batches_per_bucket(shared_cache):
+    """Mixed-shape traffic never mixes buckets inside one dispatch."""
+    eng = Engine(_weights(), _table(), max_batch=8, cache=shared_cache)
+    xs = _imgs([(8, 8), (12, 12), (8, 8), (12, 12)], seed=7)
+    futs = [eng.submit(x) for x in xs]
+    assert eng.step() == 2                    # both b8x8 (FCFS head bucket)
+    assert eng.step() == 2                    # then both b12x12
+    rs = results(futs)
+    assert [r.bucket_name for r in rs] == ["b8x8", "b12x12"] * 2
+    assert all(r.batch_size == 2 for r in rs)
+
+
+# ----------------------------------------------------------------------
+# cache accounting: the request path never prepares
+# ----------------------------------------------------------------------
+def test_request_path_never_reprepares():
+    cache = ServingCache()
+    eng = Engine(_weights(), _table(), max_batch=4, cache=cache)
+    warm = cache.stats()
+    assert warm["prepares"] == len(eng.buckets.buckets)
+    futs = [eng.submit(x) for x in _imgs([(8, 8), (12, 12)] * 4, seed=9)]
+    while eng.step() > 0:
+        pass
+    results(futs)
+    after = cache.stats()
+    assert after["prepares"] == warm["prepares"]      # warm-only
+    assert after["evictions"] == 0
+    assert after["hits"] > warm["hits"]
+    # 2 warm misses + 1 hit per dispatch: rate climbs toward 1 with load
+    assert eng.snapshot()["serving_cache"]["hit_rate"] >= 0.5
+
+
+# ----------------------------------------------------------------------
+# admission control
+# ----------------------------------------------------------------------
+def test_admission_rejects_on_queue_bound(shared_cache):
+    eng = Engine(_weights(), _table(), max_batch=4, cache=shared_cache,
+                 admission=AdmissionPolicy(max_queue_depth=2))
+    xs = _imgs([(8, 8)] * 3, seed=11)
+    f1, f2, f3 = (eng.submit(x) for x in xs)
+    with pytest.raises(RejectedError, match="queue depth"):
+        f3.result(timeout=0)
+    assert eng.step() == 2                    # the admitted two still serve
+    assert f1.result(timeout=0).deadline_met
+    c = eng.snapshot()["counters"]
+    assert c["submitted"] == 3 and c["admitted"] == 2 and c["rejected"] == 1
+
+
+def test_admission_rejects_shape_no_bucket_fits(shared_cache):
+    eng = Engine(_weights(), _table(), cache=shared_cache)
+    f = eng.submit(jnp.zeros((40, 40, CIN), jnp.float32))
+    with pytest.raises(RejectedError, match="no bucket fits"):
+        f.result(timeout=0)
+    assert eng.queue.depth() == 0             # nothing queued
+
+
+# ----------------------------------------------------------------------
+# SLO accounting under an injected clock
+# ----------------------------------------------------------------------
+class _FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_slo_accounting_is_exact_under_injected_clock(shared_cache):
+    clk = _FakeClock()
+    eng = Engine(_weights(), _table(), max_batch=4, cache=shared_cache,
+                 clock=clk)
+    x = _imgs([(8, 8)], seed=13)[0]
+    fi = eng.submit(x, INTERACTIVE)           # 2s deadline
+    fb = eng.submit(x, BATCH)                 # 20s deadline
+    clk.t = 10.0                              # 10s stuck in the queue
+    assert eng.step() == 2
+    ri, rb = fi.result(timeout=0), fb.result(timeout=0)
+    assert ri.e2e_ms == pytest.approx(10_000.0)
+    assert ri.queue_wait_ms == pytest.approx(10_000.0)
+    assert not ri.deadline_met and rb.deadline_met
+    snap = eng.snapshot()
+    assert eng.metrics.slo_attainment("interactive") == 0.0
+    assert eng.metrics.slo_attainment("batch") == 1.0
+    assert snap["slo_attainment"] == 0.5
+    assert snap["slo"]["interactive"]["missed"] == 1
+
+
+# ----------------------------------------------------------------------
+# batch-shape rounding + warm compile
+# ----------------------------------------------------------------------
+def test_round_batches_pads_without_changing_outputs(shared_cache):
+    eng = Engine(_weights(), _table(), max_batch=4, cache=shared_cache,
+                 round_batches=True)
+    ref = Engine(_weights(), _table(), max_batch=1, cache=shared_cache)
+    xs = _imgs([(12, 12)] * 3, seed=15)
+    futs = [eng.submit(x) for x in xs]
+    assert eng.step() == 3                    # dispatched as B=4 (1 zero img)
+    snap = eng.snapshot()
+    assert snap["counters"]["batch_pad_imgs"] == 1
+    assert snap["batch_occupancy"]["max"] == 3    # real requests only
+    for r, x in zip(results(futs), xs):
+        f = ref.submit(x)
+        ref.step()
+        assert np.array_equal(np.asarray(r.y),
+                              np.asarray(f.result(timeout=0).y))
+
+
+def test_batch_sizes_powers_of_two():
+    eng_cfg = Engine.__new__(Engine)          # _batch_sizes is pure config
+    eng_cfg.round_batches, eng_cfg.max_batch = True, 6
+    assert eng_cfg._batch_sizes() == [1, 2, 4, 6]
+    assert eng_cfg._round_batch(3) == 4 and eng_cfg._round_batch(5) == 6
+    eng_cfg.round_batches = False
+    assert eng_cfg._batch_sizes() == [1, 2, 3, 4, 5, 6]
+    assert eng_cfg._round_batch(3) == 3
+
+
+def test_warm_compile_leaves_metrics_untouched():
+    cache = ServingCache()
+    eng = Engine(_weights(), _table(shapes=((8, 8),)), max_batch=2,
+                 cache=cache, round_batches=True, warm_compile=True)
+    snap = eng.snapshot()
+    assert snap["counters"]["completed"] == 0
+    assert snap["batch_occupancy"]["dispatches"] == 0
+    assert cache.stats()["prepares"] == 1     # warm dispatches only hit
+
+
+# ----------------------------------------------------------------------
+# async surface
+# ----------------------------------------------------------------------
+def test_dispatch_thread_serves_and_drains(shared_cache):
+    with Engine(_weights(), _table(), max_batch=4,
+                cache=shared_cache) as eng:
+        futs = [eng.submit(x) for x in _imgs([(8, 8), (12, 12)] * 3,
+                                             seed=17)]
+        assert eng.drain(timeout=60)
+        rs = results(futs)
+    assert len(rs) == 6 and all(r.y.ndim == 3 for r in rs)
+    assert eng.snapshot()["counters"]["completed"] == 6

@@ -1,0 +1,113 @@
+"""Streaming metrics: histogram percentile accuracy (the <10% geometric
+-bucket error bound), SLO attainment accounting, and the snapshot the
+serving benchmark rows come from."""
+import numpy as np
+import pytest
+
+from repro.serve import LatencyHistogram, MetricsRegistry
+
+
+# ----------------------------------------------------------------------
+# histogram
+# ----------------------------------------------------------------------
+def test_percentiles_within_bucket_error_bound():
+    h = LatencyHistogram()
+    xs = np.linspace(1.0, 1000.0, 2000)       # known order statistics
+    for x in xs:
+        h.record(float(x))
+    assert h.count == 2000
+    assert h.max == pytest.approx(1000.0)
+    assert h.mean == pytest.approx(float(np.mean(xs)), rel=1e-6)
+    for p in (50, 95, 99):
+        exact = float(np.percentile(xs, p))
+        assert h.percentile(p) == pytest.approx(exact, rel=0.10), \
+            f"p{p} outside the 10% geometric-bucket bound"
+    assert h.percentile(50) < h.percentile(95) < h.percentile(99)
+
+
+def test_empty_and_single_sample():
+    h = LatencyHistogram()
+    assert h.percentile(99) == 0.0 and h.mean == 0.0
+    h.record(5.0)
+    assert h.percentile(50) <= h.max == 5.0
+    assert h.percentile(50) == pytest.approx(5.0, rel=0.10)
+
+
+def test_overflow_clamps_to_observed_max():
+    h = LatencyHistogram()
+    h.record(1e9)                             # far past the last bound
+    h.record(2.0)
+    assert h.percentile(100) == 1e9           # clamped to max, not a bound
+    assert h.summary()["max_ms"] == 1e9
+
+
+def test_negative_input_clamped():
+    h = LatencyHistogram()
+    h.record(-3.0)
+    assert h.count == 1 and h.max == 0.0
+
+
+def test_summary_keys():
+    h = LatencyHistogram()
+    h.record(1.0)
+    assert set(h.summary()) == {"count", "mean_ms", "p50_ms", "p95_ms",
+                                "p99_ms", "max_ms"}
+
+
+# ----------------------------------------------------------------------
+# registry
+# ----------------------------------------------------------------------
+def test_slo_attainment_per_class_and_overall():
+    m = MetricsRegistry()
+    assert m.slo_attainment() == 1.0          # nothing finished: no misses
+    for met in (True, True, False):
+        m.record_slo("interactive", met)
+    m.record_slo("batch", True)
+    assert m.slo_attainment("interactive") == pytest.approx(2 / 3)
+    assert m.slo_attainment("batch") == 1.0
+    assert m.slo_attainment() == pytest.approx(3 / 4)
+    assert m.slo_attainment("unknown") == 1.0
+
+
+def test_occupancy_and_queue_depth_tracking():
+    m = MetricsRegistry()
+    m.record_dispatch(occupancy=3, imgs_per_step=3, queue_depth=2,
+                      service_ms=4.0)
+    m.record_dispatch(occupancy=1, imgs_per_step=1, queue_depth=0,
+                      service_ms=2.0)
+    occ = m.batch_occupancy()
+    assert occ["dispatches"] == 2
+    assert occ["mean"] == 2.0 and occ["max"] == 3
+    assert occ["imgs_per_step_mean"] == 2.0 and occ["imgs_per_step_max"] == 3
+    snap = m.snapshot()
+    assert snap["queue_depth"] == {"mean": 1.0, "max": 2}
+    assert snap["service_ms"]["count"] == 2
+
+
+def test_request_recording_and_pad_waste():
+    m = MetricsRegistry()
+    m.record_request(queue_wait_ms=1.0, e2e_ms=5.0, slo_name="batch",
+                     met=True, real_px=64, padded_px=144)
+    m.record_request(queue_wait_ms=2.0, e2e_ms=6.0, slo_name="batch",
+                     met=True, real_px=144, padded_px=144)
+    snap = m.snapshot()
+    assert snap["counters"]["completed"] == 2
+    assert snap["pad_waste_frac"] == pytest.approx((288 - 208) / 288)
+    assert snap["e2e_ms"]["count"] == 2
+    assert snap["slo"]["batch"]["met"] == 2
+    assert snap["slo"]["batch"]["attainment"] == 1.0
+
+
+def test_custom_counters():
+    m = MetricsRegistry()
+    m.inc("batch_pad_imgs", 3)
+    m.inc("batch_pad_imgs")
+    assert m.snapshot()["counters"]["batch_pad_imgs"] == 4
+
+
+def test_empty_snapshot_is_complete():
+    snap = MetricsRegistry().snapshot()
+    assert snap["pad_waste_frac"] == 0.0
+    assert snap["slo_attainment"] == 1.0
+    assert snap["batch_occupancy"]["dispatches"] == 0
+    assert snap["queue_depth"] == {"mean": 0.0, "max": 0}

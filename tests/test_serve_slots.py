@@ -1,0 +1,119 @@
+"""Deterministic coverage of the decode slot loop's admission state
+machine (extracted from launch/serve.py into repro.serve.slots).
+
+No model, no jax: ``step_fn`` is a pure-numpy stub, prompt lengths are
+pinned through PromptStream's explicit-length mode, and the previously
+untested branches are pinned down:
+
+  * drain: once the admission budget is spent, finished slots deactivate
+    and the loop ends with exactly ``requests`` served;
+  * KV wrap: a sequence hitting ``max_len - 1`` is truncated, counted as
+    served AND wrapped, and its replacement honors the same budget.
+"""
+import numpy as np
+import pytest
+
+from repro.serve import PromptStream, SlotLoop
+
+
+def _stream(length, vocab=50, seed=0):
+    """Prompt source with every prompt exactly ``length`` tokens."""
+    return PromptStream(vocab, lengths=[length], seed=seed)
+
+
+def _echo_step(tok, pos):
+    return np.full(tok.shape[0], 7, np.int32)
+
+
+def test_serves_exact_budget_and_token_accounting():
+    # prompt L=5, gen G=3: each request costs exactly L+G slot-steps
+    loop = SlotLoop(batch=2, gen=3, max_len=64, requests=5,
+                    prompts=_stream(5))
+    stats = loop.run(_echo_step)
+    assert stats.served == 5
+    assert stats.wrapped == 0
+    assert stats.tokens == 5 * (5 + 3)
+    assert stats.latency_ms.count == 5
+    assert stats.tok_per_s > 0
+
+
+def test_drain_surplus_slots_idle_from_start():
+    """requests < batch: only ``requests`` slots ever activate, and the
+    loop still terminates with the budget served."""
+    loop = SlotLoop(batch=4, gen=2, max_len=64, requests=2,
+                    prompts=_stream(3))
+    stats = loop.run(_echo_step)
+    assert stats.served == 2
+    # two active slots, running in lockstep: tokens from them alone
+    assert stats.tokens == 2 * (3 + 2)
+    assert stats.steps == 3 + 2               # lockstep: one pass each
+
+
+def test_drain_after_budget_reached():
+    """batch=2, requests=3: one slot swaps in the third prompt, the other
+    drains; loop ends at exactly 3 served (never over-serves)."""
+    loop = SlotLoop(batch=2, gen=2, max_len=64, requests=3,
+                    prompts=_stream(4))
+    stats = loop.run(_echo_step)
+    assert stats.served == 3
+    assert stats.wrapped == 0
+    assert stats.tokens == 3 * (4 + 2)
+
+
+def test_kv_wrap_counts_and_readmits_within_budget():
+    """The pos >= max_len - 1 safety wrap: prompt 4 + gen 100 overruns a
+    6-token KV cache, so every request truncates at pos 5 — served AND
+    wrapped, replacements admitted under the same budget."""
+    loop = SlotLoop(batch=1, gen=100, max_len=6, requests=3,
+                    prompts=_stream(4))
+    stats = loop.run(_echo_step)
+    assert stats.served == 3
+    assert stats.wrapped == 3
+    # each request: pos walks 1..5 -> 5 steps, truncated at max_len-1
+    assert stats.tokens == 3 * 5
+    assert stats.latency_ms.count == 3        # wrap path records latency
+
+
+def test_kv_wrap_mixed_with_normal_completion():
+    """gen budget small enough to finish BEFORE the wrap: no truncation,
+    even with a tight max_len."""
+    loop = SlotLoop(batch=1, gen=2, max_len=8, requests=2,
+                    prompts=_stream(4))
+    stats = loop.run(_echo_step)
+    assert stats.served == 2 and stats.wrapped == 0
+
+
+def test_prompt_consumption_ignores_predictions():
+    """While consuming the prompt the loop must feed prompt tokens, not
+    step_fn predictions; predictions only enter during generation."""
+    seen = []
+
+    def recording_step(tok, pos):
+        seen.append(int(tok[0, 0]))
+        return np.full(tok.shape[0], 7, np.int32)
+
+    prompts = _stream(4, seed=3)
+    expect = PromptStream(50, lengths=[4], seed=3).next_prompt()
+    loop = SlotLoop(batch=1, gen=2, max_len=64, requests=1, prompts=prompts)
+    stats = loop.run(recording_step)
+    assert stats.served == 1
+    # steps feed prompt[0..3], then the model's own prediction (7) twice
+    assert seen == expect + [7, 7]
+
+
+def test_max_steps_safety_bound():
+    loop = SlotLoop(batch=1, gen=100, max_len=1024, requests=1,
+                    prompts=_stream(4))
+    stats = loop.run(_echo_step, max_steps=5)
+    assert stats.steps == 5 and stats.served == 0
+
+
+@pytest.mark.parametrize("kwargs", [
+    dict(batch=0, gen=1, max_len=4, requests=1),
+    dict(batch=1, gen=0, max_len=4, requests=1),
+    dict(batch=1, gen=1, max_len=1, requests=1),
+    dict(batch=1, gen=1, max_len=4, requests=0),
+])
+def test_invalid_args_raise(kwargs):
+    with pytest.raises(ValueError):
+        SlotLoop(prompts=_stream(4), **kwargs)

@@ -1,0 +1,134 @@
+"""Synthetic traffic determinism + distribution sanity.
+
+Every generator is seeded (np.random.RandomState), so the assertions on
+means/variability are exact reruns of one fixed draw — no statistical
+flakiness, the tolerances just document what the fixed draw looks like.
+"""
+import numpy as np
+import pytest
+
+from repro.serve import (PromptStream, ShapeMix, SLO_CLASSES, TrafficEvent,
+                         bursty_arrivals, default_shape_mix,
+                         poisson_arrivals, synthesize)
+
+
+# ----------------------------------------------------------------------
+# arrival processes
+# ----------------------------------------------------------------------
+def test_poisson_deterministic_and_monotone():
+    a = poisson_arrivals(50.0, 200, seed=4)
+    b = poisson_arrivals(50.0, 200, seed=4)
+    assert np.array_equal(a, b)
+    assert not np.array_equal(a, poisson_arrivals(50.0, 200, seed=5))
+    assert np.all(np.diff(a) > 0)
+    assert a.shape == (200,)
+
+
+def test_poisson_mean_rate():
+    a = poisson_arrivals(100.0, 4000, seed=0)
+    # 4000 arrivals at 100 Hz span ~40s; the fixed draw is within 10%
+    assert a[-1] == pytest.approx(40.0, rel=0.1)
+
+
+def test_poisson_rejects_bad_rate():
+    with pytest.raises(ValueError):
+        poisson_arrivals(0.0, 10)
+
+
+def test_bursty_deterministic_keeps_average_rate():
+    a = bursty_arrivals(100.0, 4000, seed=0)
+    assert np.array_equal(a, bursty_arrivals(100.0, 4000, seed=0))
+    assert np.all(np.diff(a) > 0)
+    # MMPP compensates the burst phase: long-run average stays ~rate_hz
+    assert a[-1] == pytest.approx(40.0, rel=0.25)
+
+
+def test_bursty_clumps_more_than_poisson():
+    """The point of the bursty process: gap variability well above the
+    exponential's CV of 1 (same seed, same average rate)."""
+    gp = np.diff(poisson_arrivals(100.0, 4000, seed=0))
+    gb = np.diff(bursty_arrivals(100.0, 4000, seed=0))
+    cv = lambda g: np.std(g) / np.mean(g)
+    assert cv(gb) > 1.3 * cv(gp)
+
+
+def test_bursty_rejects_bad_duty():
+    with pytest.raises(ValueError):
+        bursty_arrivals(10.0, 5, duty=1.0)
+
+
+# ----------------------------------------------------------------------
+# shape / SLO mixes
+# ----------------------------------------------------------------------
+def test_shape_mix_weights_validated_and_respected():
+    with pytest.raises(ValueError):
+        ShapeMix(shapes=((4, 4), (8, 8)), weights=(1.0,))
+    mix = ShapeMix(shapes=((4, 4), (8, 8)), weights=(0.0, 1.0))
+    rng = np.random.RandomState(0)
+    assert all(mix.sample(rng) == (8, 8) for _ in range(20))
+
+
+def test_default_shape_mix_respects_cap():
+    assert all(h <= 12 and w <= 12
+               for h, w in default_shape_mix(12).shapes)
+    assert (28, 28) in default_shape_mix(28).shapes
+
+
+def test_synthesize_deterministic_schedule():
+    ev1 = synthesize(50, process="poisson", rate_hz=20.0, seed=9)
+    ev2 = synthesize(50, process="poisson", rate_hz=20.0, seed=9)
+    assert ev1 == ev2
+    assert len(ev1) == 50
+    assert all(isinstance(e, TrafficEvent) for e in ev1)
+    assert [e.t for e in ev1] == sorted(e.t for e in ev1)
+    mix = set(default_shape_mix().shapes)
+    assert all(e.shape in mix for e in ev1)
+    names = {e.slo.name for e in ev1}
+    assert names <= set(SLO_CLASSES) and len(names) == 2
+
+
+def test_synthesize_shapes_independent_of_arrival_gaps():
+    """Same seed, different process: the shape/SLO stream must not shift
+    when only the arrival times change."""
+    a = synthesize(30, process="poisson", rate_hz=20.0, seed=2)
+    b = synthesize(30, process="bursty", rate_hz=20.0, seed=2)
+    assert [e.shape for e in a] == [e.shape for e in b]
+    assert [e.slo for e in a] == [e.slo for e in b]
+    assert [e.t for e in a] != [e.t for e in b]
+
+
+# ----------------------------------------------------------------------
+# prompt stream
+# ----------------------------------------------------------------------
+def test_prompt_stream_uniform_range():
+    ps = PromptStream(100, lengths=(4, 16), seed=1)
+    lens = [len(ps.next_prompt()) for _ in range(200)]
+    assert min(lens) >= 4 and max(lens) <= 15
+    assert len(set(lens)) > 5                 # actually a distribution
+    ids = [t for _ in range(20) for t in ps.next_prompt()]
+    assert all(0 <= t < 100 for t in ids)
+
+
+def test_prompt_stream_deterministic():
+    a = PromptStream(100, lengths=(4, 16), seed=7)
+    b = PromptStream(100, lengths=(4, 16), seed=7)
+    assert [a.next_prompt() for _ in range(10)] == \
+        [b.next_prompt() for _ in range(10)]
+
+
+def test_prompt_stream_explicit_lengths_and_weights():
+    ps = PromptStream(100, lengths=[3, 30], weights=[1.0, 0.0], seed=0)
+    assert all(len(ps.next_prompt()) == 3 for _ in range(20))
+    bimodal = PromptStream(100, lengths=[3, 30], seed=0)
+    assert {len(bimodal.next_prompt()) for _ in range(50)} == {3, 30}
+
+
+@pytest.mark.parametrize("kwargs", [
+    dict(vocab=0),
+    dict(vocab=10, lengths=(8, 4)),
+    dict(vocab=10, lengths=[4, 0]),
+    dict(vocab=10, lengths=[4, 8], weights=[1.0]),
+])
+def test_prompt_stream_validation(kwargs):
+    with pytest.raises(ValueError):
+        PromptStream(**kwargs)

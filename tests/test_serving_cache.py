@@ -81,6 +81,58 @@ def test_lru_eviction_bound():
     assert cache.stats()["prepares"] == 4
 
 
+def test_eviction_counter_counts_capacity_pops_only():
+    """Regression: ``evictions`` counts capacity-driven LRU pops — a
+    replaced (invalidated) same-key entry must NOT count, and the key
+    being replaced must never be the one popped."""
+    from repro.api import planner
+    cache = ServingCache(maxsize=2)
+    spec = ConvSpec.for_conv1d_depthwise((2, 20, 8), (4, 8))
+    ws = [jnp.asarray(np.random.RandomState(s).randn(4, 8), jnp.float32)
+          for s in range(3)]
+    cache.get(spec, ws[0], key="a")
+    cache.get(spec, ws[1], key="b")
+    assert cache.stats()["evictions"] == 0
+    cache.get(spec, ws[2], key="c")                   # capacity: pops "a"
+    assert cache.stats() == {"hits": 0, "misses": 3, "prepares": 3,
+                             "evictions": 1, "size": 2}
+    # plan invalidation forces a same-key REPLACEMENT at full capacity:
+    # size and evictions must not move, and "c" must survive as MRU
+    planner.invalidate_plan_cache()
+    cache.get(spec, ws[1], key="b")
+    s = cache.stats()
+    assert s["evictions"] == 1 and s["size"] == 2 and s["prepares"] == 4
+    cache.get(spec, ws[2], key="c")
+    assert cache.stats()["prepares"] == 5             # replaced, not popped
+    assert cache.stats()["evictions"] == 1
+    cache.clear()
+    assert cache.stats()["evictions"] == 0
+
+
+def test_maxsize_env_var(monkeypatch):
+    """REPRO_SERVING_CACHE_SIZE sizes default-constructed caches; invalid
+    values fall back to the built-in default; an explicit maxsize wins."""
+    from repro.api.serving_cache import default_maxsize
+    monkeypatch.setenv("REPRO_SERVING_CACHE_SIZE", "1")
+    assert default_maxsize() == 1
+    cache = ServingCache()
+    spec = ConvSpec.for_conv1d_depthwise((2, 20, 8), (4, 8))
+    ws = [jnp.asarray(np.random.RandomState(s).randn(4, 8), jnp.float32)
+          for s in range(2)]
+    cache.get(spec, ws[0], key="a")
+    cache.get(spec, ws[1], key="b")
+    assert cache.stats()["size"] == 1
+    assert cache.stats()["evictions"] == 1
+    assert ServingCache(maxsize=4)._maxsize == 4      # explicit arg wins
+    for bad in ("not-a-number", "0", "-3"):
+        monkeypatch.setenv("REPRO_SERVING_CACHE_SIZE", bad)
+        assert default_maxsize() == 256
+    monkeypatch.delenv("REPRO_SERVING_CACHE_SIZE")
+    assert default_maxsize() == 256
+    with pytest.raises(ValueError):
+        ServingCache(maxsize=0)
+
+
 def test_tracers_bypass_cache():
     x, w = _conv1d_data(seed=5)
     spec_of = ConvSpec.for_conv1d_depthwise
