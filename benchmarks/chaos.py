@@ -1,0 +1,323 @@
+"""Chaos benchmark: serving under injected faults, landing goodput /
+SLO-attainment / recovery rows in ``BENCH_conv.json["chaos"]``.
+
+  PYTHONPATH=src python -m benchmarks.run chaos
+  PYTHONPATH=src python -m benchmarks.chaos --smoke       # the CI job
+
+Methodology (EXPERIMENTS.md §Robustness): the PR 6 open-loop serving
+workload (Poisson arrivals into the continuous-batching engine) is
+re-driven with the fused kernel's injection site armed at 0%, 1%, and 5%
+per-call fault rates (``repro.faults``).  Three claims are measured, not
+asserted:
+
+  * **resilience is free when healthy** — the 0% row runs the identical
+    traffic through the full degradation chain (breaker lookup + try per
+    apply) and must sit within noise of the PR 6 ``serving`` rows;
+  * **transient faults are invisible** — at 1% / 5% every injected
+    ``InjectedFault`` is absorbed by the fused->staged fallback (bit
+    -identical by the PR 4 conformance invariant) or a dispatch retry:
+    the row records ``request_errors`` (futures that resolved to a
+    non-rejection error), which must stay 0;
+  * **breakers recover** — a 100% fault burst trips the fused breaker
+    (pinning the staged fallback), and once the burst ends the half-open
+    probe re-closes it; ``recovery_s`` is the gap from the last injected
+    fault to the recovered probe, measured against the configured
+    cool-down.
+
+Numbers are interpret-mode Pallas on CPU; they compare resilience
+configurations and track the trajectory, they are not TPU latencies.
+The artifact merge discipline matches every other suite: accumulate,
+never overwrite.
+"""
+from __future__ import annotations
+
+import argparse
+import datetime
+import json
+import os
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from benchmarks.serving import BENCH_PATH, _build_engine, _git_sha
+
+FAULT_RATES = (0.0, 0.01, 0.05)
+
+
+def _drive_counted(eng, events, log) -> Dict:
+    """Open-loop drive (benchmarks.serving discipline) that additionally
+    classifies every future's resolution: deadline-met, rejected, or a
+    request-visible error (the number that must stay zero)."""
+    import jax.numpy as jnp
+
+    from repro.serve import RejectedError
+
+    rng = np.random.RandomState(42)
+    xs = [jnp.asarray(rng.randn(h, w, 8), jnp.float32)
+          for (h, w) in (e.shape for e in events)]
+    eng.start()
+    t0 = time.perf_counter()
+    futures = []
+    for ev, x in zip(events, xs):
+        now = time.perf_counter() - t0
+        if ev.t > now:
+            time.sleep(ev.t - now)
+        futures.append(eng.submit(x, ev.slo))
+    eng.drain(timeout=600)
+    wall_s = time.perf_counter() - t0
+    eng.stop()
+
+    good = rejected = errors = 0
+    error_types: Dict[str, int] = {}
+    for f in futures:
+        try:
+            r = f.result(timeout=0)
+            good += int(r.deadline_met)
+        except RejectedError:
+            rejected += 1
+        except Exception as e:               # the chaos headline number
+            errors += 1
+            name = type(e).__name__
+            error_types[name] = error_types.get(name, 0) + 1
+    snap = eng.snapshot()
+    snap["wall_s"] = wall_s
+    snap["goodput_rps"] = good / wall_s if wall_s > 0 else 0.0
+    snap["rejected"] = rejected
+    snap["request_errors"] = errors
+    snap["request_error_types"] = error_types
+    return snap
+
+
+def _fault_row(rate: float, n: int, rate_hz: float, cap: int,
+               max_batch: int, log) -> Dict:
+    """One (fault-rate) cell: fresh engine, fresh breaker board, armed
+    fused-apply faults at ``rate``, PR 6 Poisson traffic."""
+    from repro import faults
+    from repro.api import resilience
+    from repro.serve import default_shape_mix, synthesize
+
+    resilience.reset()
+    eng, workload = _build_engine(cap, max_batch)   # warm-up runs clean
+    events = synthesize(n, process="poisson", rate_hz=rate_hz,
+                        mix=default_shape_mix(cap), seed=7)
+    if rate > 0.0:
+        with faults.inject({faults.APPLY_FUSED: faults.FaultSpec(p=rate)},
+                           seed=11) as fp:
+            snap = _drive_counted(eng, events, log)
+        injected, site_hits = fp.injected(), fp.hits(faults.APPLY_FUSED)
+    else:
+        snap = _drive_counted(eng, events, log)
+        injected = site_hits = 0
+    c = snap["counters"]
+    row = {
+        "fault_rate": rate, "requests": n, "rate_hz": rate_hz,
+        "injected": injected, "site_hits": site_hits,
+        "wall_s": snap["wall_s"],
+        "goodput_rps": snap["goodput_rps"],
+        "slo_attainment": snap["slo_attainment"],
+        "p50_ms": snap["e2e_ms"]["p50_ms"],
+        "p95_ms": snap["e2e_ms"]["p95_ms"],
+        "p99_ms": snap["e2e_ms"]["p99_ms"],
+        "request_errors": snap["request_errors"],
+        "request_error_types": snap["request_error_types"],
+        "rejected": snap["rejected"],
+        "fallback_staged": c.get("resilience_fallback_staged", 0),
+        "fallback_reference": c.get("resilience_fallback_reference", 0),
+        "breaker_trips": c.get("resilience_breaker_trip", 0),
+        "breaker_skips": c.get("resilience_breaker_skip", 0),
+        "dispatch_retries": c.get("dispatch_retries", 0),
+        "quarantined": c.get("quarantined", 0),
+        "shed": c.get("shed", 0),
+        "workload": workload,
+    }
+    log(f"chaos fault={rate:.0%}: injected={injected}/{site_hits} "
+        f"goodput={row['goodput_rps']:.1f}rps "
+        f"slo={row['slo_attainment']:.2f} p50={row['p50_ms']:.0f}ms "
+        f"p99={row['p99_ms']:.0f}ms errors={row['request_errors']} "
+        f"fallbacks={row['fallback_staged']}+{row['fallback_reference']} "
+        f"trips={row['breaker_trips']}")
+    return row
+
+
+def _recovery_cell(cooldown_s: float, log) -> Dict:
+    """Trip the fused breaker with a 100% fault burst, end the burst, and
+    time how long until the half-open probe re-closes it.  Driven at the
+    plan tier (no engine) so the measured gap is breaker mechanics plus
+    apply latency, not queueing."""
+    import jax.numpy as jnp
+
+    from repro import faults
+    from repro.api import planner, resilience
+    from repro.api.spec import ConvSpec
+    from repro.quant import INT8_FREQ
+
+    from repro.api.tuning import calibrate_act_scale
+
+    rng = np.random.RandomState(3)
+    spec = ConvSpec(rank=2, kernel_size=3, in_channels=8, out_channels=16,
+                    spatial=(14, 14), quant=INT8_FREQ)
+    w = jnp.asarray(rng.randn(3, 3, 8, 16) * 0.1, jnp.float32)
+    x = jnp.asarray(rng.randn(1, 14, 14, 8), jnp.float32)
+
+    with resilience.configured(cooldown_s=cooldown_s):
+        p = planner.plan(spec, backend="pallas")
+        prep = p.prepare_weights(w, act_scale=calibrate_act_scale(
+            x, p.algorithm, spec.quant, spec.padding))
+        baseline = p.apply(x, prep)          # healthy reference answer
+        with faults.inject(
+                {faults.APPLY_FUSED: faults.FaultSpec(p=1.0)}) as fp:
+            # burst: every fused attempt fails until the breaker opens
+            # and pins the staged fallback (then the site stops being hit)
+            trips = 0
+            for _ in range(resilience.policy().failure_threshold + 2):
+                y = p.apply(x, prep)
+                assert bool(jnp.array_equal(y, baseline))   # bit-identical
+                trips = resilience.stats().get(
+                    "resilience_breaker_trip", 0)
+            burst_end = fp.last_fire_t[faults.APPLY_FUSED]
+        # burst over (faults disarmed): serve until the probe recovers
+        recovered_t = None
+        deadline = time.perf_counter() + 60.0
+        while recovered_t is None and time.perf_counter() < deadline:
+            p.apply(x, prep)
+            if resilience.stats().get("resilience_breaker_recovered", 0):
+                recovered_t = time.perf_counter()
+            else:
+                time.sleep(0.01)
+        st = resilience.stats()
+    recovery_s = (recovered_t - burst_end) if recovered_t else None
+    cell = {
+        "cooldown_s": cooldown_s,
+        "burst_injected": fp.injected(faults.APPLY_FUSED),
+        "breaker_trips": trips,
+        "breaker_skips": st.get("resilience_breaker_skip", 0),
+        "recovered": recovered_t is not None,
+        "recovery_s": recovery_s,
+    }
+    log(f"chaos recovery: burst={cell['burst_injected']} faults, "
+        f"trips={trips}, skips={cell['breaker_skips']}, "
+        f"recovered in {recovery_s:.2f}s (cooldown {cooldown_s}s)"
+        if recovered_t else
+        f"chaos recovery: breaker did NOT recover within 60s")
+    return cell
+
+
+def _corrupt_cell(log) -> Dict:
+    """Guardrail cell (full mode): NaN-poison the fused output and check
+    the guardrail converts garbage into a staged fallback instead of a
+    served answer."""
+    import jax.numpy as jnp
+
+    from repro import faults
+    from repro.api import planner, resilience
+    from repro.api.spec import ConvSpec
+    from repro.quant import INT8_FREQ
+
+    from repro.api.tuning import calibrate_act_scale
+
+    rng = np.random.RandomState(5)
+    spec = ConvSpec(rank=2, kernel_size=3, in_channels=8, out_channels=16,
+                    spatial=(14, 14), quant=INT8_FREQ)
+    w = jnp.asarray(rng.randn(3, 3, 8, 16) * 0.1, jnp.float32)
+    x = jnp.asarray(rng.randn(1, 14, 14, 8), jnp.float32)
+
+    with resilience.configured(guardrail=resilience.Guardrail()):
+        p = planner.plan(spec, backend="pallas")
+        prep = p.prepare_weights(w, act_scale=calibrate_act_scale(
+            x, p.algorithm, spec.quant, spec.padding))
+        baseline = p.apply(x, prep)
+        with faults.inject({faults.APPLY_FUSED: faults.FaultSpec(
+                mode="corrupt", times=3)}) as fp:
+            served_garbage = 0
+            for _ in range(5):
+                y = p.apply(x, prep)
+                if not bool(jnp.all(jnp.isfinite(y))):
+                    served_garbage += 1
+        st = resilience.stats()
+    cell = {
+        "poisoned": fp.injected(faults.APPLY_FUSED),
+        "served_garbage": served_garbage,
+        "guardrail_trips": st.get("resilience_guardrail_trip", 0),
+        "fallback_staged": st.get("resilience_fallback_staged", 0),
+    }
+    log(f"chaos guardrail: poisoned={cell['poisoned']} "
+        f"garbage_served={served_garbage} "
+        f"guardrail_trips={cell['guardrail_trips']} "
+        f"fallbacks={cell['fallback_staged']}")
+    return cell
+
+
+def run(log=print, bench_path: Optional[str] = None, *,
+        smoke: bool = False) -> Dict:
+    import jax
+
+    from repro.api import resilience
+
+    bench_path = bench_path or BENCH_PATH
+    cap = int(os.environ.get("REPRO_BENCH_SPATIAL_CAP", "28"))
+    n = 32 if smoke else 96
+    rate_hz = 200.0
+    max_batch = 4 if smoke else 8
+
+    # unrecorded warm-up cell at 100% fault rate: compiles BOTH the fused
+    # path (engine warm-up) and the staged fallback (every dispatch falls
+    # back), so neither the 0% row (compared against the PR 6 serving
+    # baseline) nor a faulted row's first fallback is billed an XLA
+    # compile that belongs to the process, not the fault
+    _fault_row(1.0, n, rate_hz, cap, max_batch, lambda *a, **k: None)
+    rows = [_fault_row(r, n, rate_hz, cap, max_batch, log)
+            for r in FAULT_RATES]
+    resilience.reset()
+    recovery = _recovery_cell(cooldown_s=0.5, log=log)
+    resilience.reset()
+    guardrail = None if smoke else _corrupt_cell(log)
+    resilience.reset()
+
+    bench = {}
+    if os.path.exists(bench_path):
+        try:
+            with open(bench_path) as f:
+                bench = json.load(f)
+        except ValueError:
+            bench = {}
+    if not isinstance(bench, dict):
+        bench = {}
+    bench["chaos"] = {
+        "host": {"platform": jax.default_backend(), "jax": jax.__version__,
+                 "interpret": True},
+        "spatial_cap": cap, "smoke": smoke,
+        "rows": rows, "recovery": recovery, "guardrail": guardrail,
+    }
+    entry = {
+        "ts": datetime.datetime.now(datetime.timezone.utc)
+        .isoformat(timespec="seconds"),
+        "git_sha": _git_sha(),
+        "platform": jax.default_backend(), "jax": jax.__version__,
+        "chaos": [{k: r[k] for k in
+                   ("fault_rate", "injected", "goodput_rps",
+                    "slo_attainment", "p50_ms", "p99_ms",
+                    "request_errors", "fallback_staged",
+                    "breaker_trips")}
+                  for r in rows],
+        "recovery_s": recovery.get("recovery_s"),
+    }
+    bench.setdefault("trajectory", []).append(entry)
+    with open(bench_path, "w") as f:
+        json.dump(bench, f, indent=1)
+    log(f"bench_artifact,{bench_path} "
+        f"(trajectory: {len(bench['trajectory'])} entries)")
+    return {"bench_path": bench_path, "rows": rows, "recovery": recovery}
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small open-loop run (the CI chaos job)")
+    ap.add_argument("--out", default=None, help="BENCH_conv.json path")
+    args = ap.parse_args(argv)
+    run(bench_path=args.out, smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -14,15 +14,18 @@ history rides the committed file across PRs.  ``scaleout`` appends the
 SPMD per-shard-count rows to the same artifact (forced host-device mesh
 on single-device hosts); ``serving`` appends the open-loop
 continuous-batching SLO rows (``repro.serve`` engine, p50/p95/p99 +
-goodput + occupancy + cache hit rate) under the ``"serving"`` key.
+goodput + occupancy + cache hit rate) under the ``"serving"`` key;
+``chaos`` appends goodput/SLO under injected fault rates plus breaker
+recovery time under the ``"chaos"`` key.
 """
 import sys
 import time
 
 
 def main() -> None:
-    from benchmarks import (appendixB_iterative, fig4_accuracy_vs_bops,
-                            fig5_layer_mse, roofline, scaleout, serving,
+    from benchmarks import (appendixB_iterative, chaos,
+                            fig4_accuracy_vs_bops, fig5_layer_mse,
+                            roofline, scaleout, serving,
                             table1_algorithms, table3_throughput,
                             table45_granularity)
     suites = {
@@ -35,6 +38,7 @@ def main() -> None:
         "roofline": roofline.run,
         "scaleout": scaleout.run,
         "serving": serving.run,
+        "chaos": chaos.run,
     }
     selected = sys.argv[1:] or list(suites)
     t0 = time.time()

@@ -28,6 +28,7 @@ from typing import Callable, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import faults
 from repro.core import conv2d as c2d
 import repro.quant.fake_quant as fq
 
@@ -70,6 +71,7 @@ class ReferenceBackend:
     name = "reference"
 
     def apply(self, plan, x, prep, *, bias=None, elementwise_hook=None):
+        faults.maybe_fault(faults.APPLY_REFERENCE, detail=plan)
         _check_hook_supported(plan, elementwise_hook, prep)
         if plan.algorithm is None:
             return _direct(plan, x, prep, bias)
@@ -137,6 +139,7 @@ class PallasBackend:
             cfg = plan.config or tuning.DEFAULT_FUSED
             bits = plan.spec.quant.bits_act
             if cfg.datapath == "staged":
+                faults.maybe_fault(faults.APPLY_STAGED, detail=plan)
                 if depthwise:
                     y = ops.quantized_fastconv2d_depthwise(
                         x, prep.wq, prep.act_scale, prep.w_scale, algo,
@@ -150,8 +153,11 @@ class PallasBackend:
                         padding=plan.spec.padding, bits=bits,
                         interpret=plan.interpret, k_block=cfg.k_block,
                         tile_block=cfg.tile_block, chan_block=cfg.chan_block)
+                y = faults.maybe_corrupt(faults.APPLY_STAGED, y,
+                                         detail=plan)
             else:
                 from repro.kernels.sfc_fused import sfc_fused_conv2d
+                faults.maybe_fault(faults.APPLY_FUSED, detail=plan)
                 y = sfc_fused_conv2d(
                     x, prep.wq, prep.act_scale, prep.w_scale, algo,
                     padding=plan.spec.padding, bits=bits,
@@ -159,6 +165,8 @@ class PallasBackend:
                     k_block=cfg.k_block, cout_block=cfg.cout_block,
                     rows_per_step=cfg.rows_per_step,
                     double_buffer=cfg.double_buffer)
+                y = faults.maybe_corrupt(faults.APPLY_FUSED, y,
+                                         detail=plan)
             return _add_bias(y, bias)
         from repro.kernels.sfc_inverse import sfc_inverse
         from repro.kernels.sfc_transform import sfc_transform

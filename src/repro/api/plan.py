@@ -155,6 +155,8 @@ class ConvPlan:
         half also covers device layout — skipped under tracing, where
         there are no concrete buffers to place.
         """
+        from repro import faults
+        faults.maybe_fault(faults.PREPARE, detail=self)
         operands = (w, act_scale, w_scale)
         key = PrepCache.key_for(operands)
         if key is not None:
@@ -212,10 +214,23 @@ class ConvPlan:
         processing (fake quantization, calibration observers) on the
         reference backend's fast path; static-int8 plans and the Pallas
         backend do not take hooks — quantization is baked into the plan.
+
+        Pallas-backend applies run through the resilience layer
+        (``repro.api.resilience``): on kernel failure the datapath
+        degrades fused -> staged (bit-identical) -> reference (fp-close),
+        guarded by per-level circuit breakers so a persistently broken
+        config stops being retried.  The chain disengages under tracing
+        (exceptions at trace time are the caller's compile errors, and
+        the guardrail cannot inspect tracer values) and when an
+        elementwise hook is passed (the hook's backend errors are
+        contract errors, not kernel faults).
         """
-        from repro.api import backends  # late: avoids import cycle
+        from repro.api import backends, resilience  # late: avoids cycle
         prep = w if isinstance(w, PreparedWeights) else \
             self.prepare_weights(w)
+        if elementwise_hook is None and resilience.engaged(self) \
+                and not isinstance(x, jax.core.Tracer):
+            return resilience.apply_resilient(self, x, prep, bias=bias)
         return backends.get_backend(self.backend).apply(
             self, x, prep, bias=bias, elementwise_hook=elementwise_hook)
 

@@ -156,6 +156,8 @@ def plan(spec: ConvSpec, *, backend: str = "reference", algo: str = "auto",
     ``plan.path`` ('fast' | 'lowered' | 'direct') rather than
     ``plan.algorithm`` to see where execution lands.
     """
+    from repro import faults
+    faults.maybe_fault(faults.PLAN, detail=spec)
     return _plan_cached(spec, backend, algo, interpret)
 
 

@@ -88,7 +88,9 @@ class ServingCache:
         trusted until :meth:`clear` — serving weights are frozen for a
         deployment, so a weight swap must clear the cache.
         """
+        from repro import faults
         from repro.api import planner
+        faults.maybe_fault(faults.CACHE, detail=spec)
         p = planner.plan(spec, backend=backend, algo=algo,
                          interpret=interpret)
         operands = (w, act_scale, w_scale)

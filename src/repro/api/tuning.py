@@ -27,6 +27,7 @@ import json
 import os
 import threading
 import time
+import warnings
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -138,7 +139,11 @@ def _snapshot_locked() -> Dict[str, Dict]:
     return json.loads(json.dumps(_STORE or {}))
 
 
+_WRITE_WARNED = False
+
+
 def _write(path: str, snapshot: Dict[str, Dict]) -> None:
+    global _WRITE_WARNED
     try:
         if os.path.dirname(path):
             os.makedirs(os.path.dirname(path), exist_ok=True)
@@ -146,8 +151,18 @@ def _write(path: str, snapshot: Dict[str, Dict]) -> None:
         with open(tmp, "w") as f:
             json.dump(snapshot, f, indent=1, sort_keys=True)
         os.replace(tmp, path)
-    except OSError:
-        pass                          # read-only host: in-memory only
+        _WRITE_WARNED = False         # a later success re-arms the warning
+    except OSError as e:
+        # read-only host: measurements keep serving from memory, but say
+        # so ONCE — silently dropping every record hides a fleet that
+        # re-tunes from scratch each process, while warning per record
+        # would flood a serving log
+        if not _WRITE_WARNED:
+            _WRITE_WARNED = True
+            warnings.warn(
+                f"tuning cache not persisted to {path!r} ({e}); "
+                f"measurements remain in-memory for this process only",
+                RuntimeWarning, stacklevel=3)
 
 
 def _save() -> None:

@@ -19,8 +19,9 @@ from repro.serve.slots import SlotLoop, SlotLoopStats
 from repro.serve.traffic import (PromptStream, ShapeMix, TrafficEvent,
                                  bursty_arrivals, default_shape_mix,
                                  poisson_arrivals, synthesize)
-from repro.serve.types import (BATCH, INTERACTIVE, SLO_CLASSES, Request,
-                               RejectedError, Result, SLOClass)
+from repro.serve.types import (BATCH, INTERACTIVE, SLO_CLASSES,
+                               QuarantinedError, Request, RejectedError,
+                               Result, ShedError, SLOClass)
 
 __all__ = [
     "Engine", "results",
@@ -30,6 +31,6 @@ __all__ = [
     "SlotLoop", "SlotLoopStats",
     "PromptStream", "ShapeMix", "TrafficEvent", "poisson_arrivals",
     "bursty_arrivals", "default_shape_mix", "synthesize",
-    "Request", "Result", "RejectedError", "SLOClass", "SLO_CLASSES",
-    "INTERACTIVE", "BATCH",
+    "Request", "Result", "RejectedError", "ShedError", "QuarantinedError",
+    "SLOClass", "SLO_CLASSES", "INTERACTIVE", "BATCH",
 ]

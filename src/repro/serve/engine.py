@@ -21,6 +21,30 @@ workload's weights.  The lifecycle:
   * every result is cropped back to the request's own output extent and
     resolved into its future with full timing/SLO accounting.
 
+Self-healing (the resilience tier above ``repro.api.resilience``'s
+plan-level degradation chain):
+
+  * **deadline shedding** (``shed_expired=True``): requests whose SLO
+    deadline already passed are resolved with ``ShedError`` *before*
+    dispatch — goodput over throughput: compute goes to requests that can
+    still make their deadlines;
+  * **bounded retry** (``max_dispatch_retries``): a failed batch dispatch
+    retries with exponential backoff — transient faults (a flaky kernel
+    the degradation chain could not absorb, an injected dispatch fault)
+    never surface to callers;
+  * **quarantine bisection**: a batch that keeps failing is split in
+    half and each half served independently, recursively — one poison
+    request ends up alone, its future resolved with ``QuarantinedError``,
+    and every co-batched peer is served instead of re-killed;
+  * the dispatch loop retains (and counts) its own errors instead of
+    swallowing them — ``stop(raise_on_error=True)`` re-raises the last
+    one, and ``loop_errors`` rides the metrics snapshot.
+
+Every decision is counted in ``MetricsRegistry`` (``shed``,
+``dispatch_retries``, ``batch_bisections``, ``quarantined``,
+``loop_errors``) and plan-level resilience events from this engine's
+dispatches land in the same registry via ``resilience.metrics_sink``.
+
 Bit-identity: folding is the fused kernel's grouping dimension, which is
 bit-identical across group sizes (PR 4 invariant), and bucket padding is
 output-exact (``bucketing``) — so a batched engine answer equals the
@@ -39,13 +63,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import faults
+from repro.api import resilience
 from repro.api import serving_cache as sc
 from repro.serve.batcher import (AdmissionPolicy, Batch, BatchQueue,
                                  fold_rows_per_step)
 from repro.serve.bucketing import Bucket, BucketTable
 from repro.serve.metrics import MetricsRegistry
-from repro.serve.types import (BATCH, Request, RejectedError, Result,
-                               SLOClass)
+from repro.serve.types import (BATCH, QuarantinedError, Request,
+                               RejectedError, Result, ShedError, SLOClass)
 
 
 class Engine:
@@ -59,7 +85,9 @@ class Engine:
                  metrics: Optional[MetricsRegistry] = None,
                  clock: Callable[[], float] = time.perf_counter,
                  calib_seed: int = 0, round_batches: bool = False,
-                 warm_compile: bool = False):
+                 warm_compile: bool = False, shed_expired: bool = False,
+                 max_dispatch_retries: int = 2,
+                 retry_backoff_s: float = 0.02):
         self.w = w
         self.buckets = buckets
         self.backend = backend
@@ -73,10 +101,15 @@ class Engine:
         self.queue = BatchQueue()
         self._act_scales: Dict[str, Optional[jnp.ndarray]] = {}
         self.round_batches = round_batches
+        self.shed_expired = shed_expired
+        self.max_dispatch_retries = int(max_dispatch_retries)
+        self.retry_backoff_s = float(retry_backoff_s)
         self._thread: Optional[threading.Thread] = None
         self._running = threading.Event()
         self._inflight = 0
         self._inflight_zero = threading.Condition()
+        self._loop_errors = 0
+        self._last_loop_error: Optional[BaseException] = None
         self._warm(calib_seed)
         if warm_compile:
             self._warm_compile()
@@ -173,14 +206,21 @@ class Engine:
     # dispatch
     # ------------------------------------------------------------------
     def step(self, timeout: Optional[float] = 0) -> int:
-        """Drain ONE batch synchronously; returns requests served (0 when
-        the queue stayed empty).  The deterministic entry point tests and
-        the dispatch thread share."""
+        """Drain ONE batch synchronously; returns requests resolved
+        (served, shed, or quarantined — 0 when the queue stayed empty).
+        The deterministic entry point tests and the dispatch thread
+        share.  Dispatch failures are absorbed by retry, bisection, and
+        quarantine — ``step`` itself only raises on failures *outside*
+        the serve path (e.g. batch formation), and even then every taken
+        request's future is resolved first."""
         batch = self.queue.take_batch(self.max_batch, timeout=timeout)
         if batch is None:
             return 0
+        n = len(batch)
         try:
-            self._dispatch(batch)
+            batch = self._shed_past_deadline(batch)
+            if batch.requests:
+                self._serve_batch(batch)
         except Exception as e:             # resolve, don't wedge callers
             for r in batch.requests:
                 if not r.future.done():
@@ -188,12 +228,70 @@ class Engine:
             raise
         finally:
             with self._inflight_zero:
-                self._inflight -= len(batch)
+                self._inflight -= n
                 if self._inflight == 0:
                     self._inflight_zero.notify_all()
-        return len(batch)
+        return n
+
+    # ---- self-healing serve path -------------------------------------
+    def _shed_past_deadline(self, batch: Batch) -> Batch:
+        """Resolve already-expired requests with ``ShedError`` (counted,
+        SLO-missed) and return the still-viable remainder."""
+        if not self.shed_expired:
+            return batch
+        now = self.clock()
+        kept = []
+        for r in batch.requests:
+            if (now - r.arrival_t) * 1e3 > r.slo.deadline_ms:
+                self.metrics.inc("shed")
+                self.metrics.record_slo(r.slo.name, met=False)
+                r.future.set_exception(ShedError(
+                    f"deadline {r.slo.deadline_ms:.0f}ms passed before "
+                    f"dispatch (queued {(now - r.arrival_t) * 1e3:.0f}ms)"))
+            else:
+                kept.append(r)
+        return Batch(bucket=batch.bucket, requests=kept)
+
+    def _serve_batch(self, batch: Batch) -> None:
+        """Dispatch with bounded retry; on persistent failure, bisect the
+        batch so one poison request cannot re-kill its co-batched peers.
+        Never raises: a single request that still fails alone is resolved
+        with ``QuarantinedError`` carrying the underlying failure."""
+        err: Optional[BaseException] = None
+        for attempt in range(self.max_dispatch_retries + 1):
+            # a partial failure may have resolved some futures already
+            pending = [r for r in batch.requests if not r.future.done()]
+            if not pending:
+                return
+            batch = Batch(bucket=batch.bucket, requests=pending)
+            if attempt and self.retry_backoff_s > 0:
+                time.sleep(self.retry_backoff_s * (2 ** (attempt - 1)))
+            try:
+                self._dispatch(batch)
+                return
+            except Exception as e:
+                err = e
+                if attempt < self.max_dispatch_retries:
+                    self.metrics.inc("dispatch_retries")
+        pending = [r for r in batch.requests if not r.future.done()]
+        if len(pending) <= 1:
+            for r in pending:
+                self.metrics.inc("quarantined")
+                q = QuarantinedError(
+                    f"request {r.id} failed "
+                    f"{self.max_dispatch_retries + 1} dispatch attempts")
+                q.__cause__ = err
+                r.future.set_exception(q)
+            return
+        self.metrics.inc("batch_bisections")
+        mid = len(pending) // 2
+        self._serve_batch(Batch(bucket=batch.bucket,
+                                requests=pending[:mid]))
+        self._serve_batch(Batch(bucket=batch.bucket,
+                                requests=pending[mid:]))
 
     def _dispatch(self, batch: Batch, record: bool = True) -> None:
+        faults.maybe_fault(faults.DISPATCH, detail=batch)
         bucket = batch.bucket
         t_dispatch = self.clock()
         depth_after = self.queue.depth()
@@ -222,7 +320,10 @@ class Engine:
         else:
             imgs = 1
             run = plan
-        y = jax.block_until_ready(run.apply(xb, prep))
+        # plan-level resilience events (fallbacks, breaker trips) raised
+        # by THIS dispatch land in THIS engine's registry
+        with resilience.metrics_sink(self.metrics.inc):
+            y = jax.block_until_ready(run.apply(xb, prep))
         t_done = self.clock()
         if not record:
             return
@@ -233,6 +334,8 @@ class Engine:
         if B > B_real:
             self.metrics.inc("batch_pad_imgs", B - B_real)
         for i, r in enumerate(batch.requests):
+            if r.future.done():            # resolved on an earlier attempt
+                continue
             r.t_dispatch, r.t_done = t_dispatch, t_done
             h, w = r.shape
             yi = BucketTable.crop_output(y[i], h, w, bucket)
@@ -262,20 +365,33 @@ class Engine:
             while self._running.is_set():
                 try:
                     self.step(timeout=0.02)
-                except Exception:          # the futures carry the error
-                    pass
+                except Exception as e:
+                    # the futures of the failed batch already carry the
+                    # error (``step`` resolves before re-raising); the
+                    # loop keeps serving — but the failure is COUNTED and
+                    # RETAINED, never silently dropped: ``loop_errors``
+                    # rides every snapshot and ``stop(raise_on_error=
+                    # True)`` re-raises the last one
+                    self._loop_errors += 1
+                    self._last_loop_error = e
+                    self.metrics.inc("loop_errors")
 
         self._thread = threading.Thread(target=loop, name="serve-dispatch",
                                         daemon=True)
         self._thread.start()
         return self
 
-    def stop(self) -> None:
-        if self._thread is None:
-            return
-        self._running.clear()
-        self._thread.join()
-        self._thread = None
+    def stop(self, raise_on_error: bool = False) -> None:
+        """Stop the dispatch thread.  ``raise_on_error=True`` re-raises
+        the last error the loop absorbed (if any) once the thread has
+        joined — the shutdown-time check that the loop's error counter is
+        not hiding a persistent failure."""
+        if self._thread is not None:
+            self._running.clear()
+            self._thread.join()
+            self._thread = None
+        if raise_on_error and self._last_loop_error is not None:
+            raise self._last_loop_error
 
     def drain(self, timeout: Optional[float] = None) -> bool:
         """Block until every admitted request resolved (True) or timeout."""
@@ -303,7 +419,15 @@ class Engine:
             "hit_rate": cstats["hits"] / lookups if lookups else 0.0,
         }
         snap["buckets"] = [b.name for b in self.buckets.buckets]
+        snap["loop_errors"] = self._loop_errors
+        snap["last_loop_error"] = (repr(self._last_loop_error)
+                                   if self._last_loop_error else None)
+        snap["breakers"] = resilience.board_snapshot()
         return snap
+
+    @property
+    def last_loop_error(self) -> Optional[BaseException]:
+        return self._last_loop_error
 
     def __enter__(self) -> "Engine":
         return self.start()

@@ -92,8 +92,13 @@ class MetricsRegistry:
         self.queue_wait_ms = LatencyHistogram()
         self.service_ms = LatencyHistogram()
         self.e2e_ms = LatencyHistogram()
+        # self-healing counters are pre-seeded so every snapshot carries
+        # them (a zero is a measurement — "no sheds under this traffic" —
+        # not a missing key the benchmark has to .get() around)
         self.counters: Dict[str, int] = {
-            "submitted": 0, "admitted": 0, "rejected": 0, "completed": 0}
+            "submitted": 0, "admitted": 0, "rejected": 0, "completed": 0,
+            "shed": 0, "quarantined": 0, "dispatch_retries": 0,
+            "batch_bisections": 0, "loop_errors": 0}
         self._slo: Dict[str, Dict[str, int]] = {}
         self._occupancy: List[int] = []        # requests per dispatch
         self._imgs_per_step: List[int] = []    # fused-grid images per step

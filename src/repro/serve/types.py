@@ -94,3 +94,16 @@ class Result:
 
 class RejectedError(RuntimeError):
     """Admission control declined the request (reason in ``args[0]``)."""
+
+
+class ShedError(RuntimeError):
+    """The engine shed the request: its SLO deadline had already passed
+    before dispatch (``shed_expired`` engines prefer goodput over
+    throughput — serving a guaranteed-late request only delays the ones
+    that can still make their deadlines)."""
+
+
+class QuarantinedError(RuntimeError):
+    """The request was quarantined: its batch failed dispatch repeatedly,
+    bisection isolated this request as the poison, and retries were
+    exhausted.  The underlying failure rides ``__cause__``."""

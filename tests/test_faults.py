@@ -1,0 +1,170 @@
+"""Fault-injection framework tests: determinism, schedules, modes,
+nesting, and zero-footprint disarm."""
+import numpy as np
+import pytest
+
+from repro import faults
+
+
+def _drive(spec_kwargs, hits, seed=0, site=faults.APPLY_FUSED):
+    """Hit one raise-mode site ``hits`` times; return the 0/1 firing
+    pattern."""
+    pattern = []
+    with faults.inject({site: faults.FaultSpec(**spec_kwargs)},
+                       seed=seed) as fp:
+        for _ in range(hits):
+            try:
+                faults.maybe_fault(site)
+                pattern.append(0)
+            except faults.InjectedFault:
+                pattern.append(1)
+    return pattern, fp
+
+
+def test_disarmed_hooks_are_noops():
+    assert faults.active() is None
+    faults.maybe_fault(faults.APPLY_FUSED)          # must not raise
+    assert faults.maybe_corrupt(faults.APPLY_FUSED, 42) == 42
+
+
+def test_p1_fires_every_hit():
+    pattern, fp = _drive({"p": 1.0}, 5)
+    assert pattern == [1] * 5
+    assert fp.hits(faults.APPLY_FUSED) == 5
+    assert fp.injected(faults.APPLY_FUSED) == 5
+    assert fp.injected() == 5
+
+
+def test_probability_schedule_is_deterministic_per_seed():
+    a, _ = _drive({"p": 0.3}, 200, seed=123)
+    b, _ = _drive({"p": 0.3}, 200, seed=123)
+    c, _ = _drive({"p": 0.3}, 200, seed=124)
+    assert a == b                          # same seed -> same pattern
+    assert a != c                          # different seed -> different
+    assert 0 < sum(a) < 200                # actually probabilistic
+    # rate roughly honored (binomial, 200 draws)
+    assert abs(sum(a) / 200 - 0.3) < 0.12
+
+
+def test_per_site_streams_are_interleaving_independent():
+    """The firing sequence at one site must not depend on traffic at
+    another site."""
+    s1, s2 = faults.APPLY_FUSED, faults.APPLY_STAGED
+    spec = faults.FaultSpec(p=0.5)
+
+    def fire_seq(interleave):
+        seq = []
+        with faults.inject({s1: spec, s2: spec}, seed=7):
+            for i in range(100):
+                if interleave:
+                    try:
+                        faults.maybe_fault(s2)
+                    except faults.InjectedFault:
+                        pass
+                try:
+                    faults.maybe_fault(s1)
+                    seq.append(0)
+                except faults.InjectedFault:
+                    seq.append(1)
+        return seq
+
+    assert fire_seq(False) == fire_seq(True)
+
+
+def test_times_bounds_the_burst():
+    pattern, fp = _drive({"p": 1.0, "times": 3}, 10)
+    assert pattern == [1, 1, 1] + [0] * 7
+    assert fp.injected(faults.APPLY_FUSED) == 3
+    assert fp.hits(faults.APPLY_FUSED) == 10
+
+
+def test_after_skips_leading_hits():
+    pattern, _ = _drive({"p": 1.0, "after": 4}, 7)
+    assert pattern == [0] * 4 + [1] * 3
+
+
+def test_when_predicate_gates_on_detail():
+    site = faults.DISPATCH
+    with faults.inject({site: faults.FaultSpec(
+            when=lambda d: d == "poison")}) as fp:
+        faults.maybe_fault(site, detail="clean")        # not eligible
+        with pytest.raises(faults.InjectedFault):
+            faults.maybe_fault(site, detail="poison")
+    assert fp.injected(site) == 1
+    assert fp.hits(site) == 1              # non-matching hits not counted
+
+
+def test_corrupt_mode_rewrites_value_and_raise_hook_ignores_it():
+    import jax.numpy as jnp
+    site = faults.APPLY_FUSED
+    with faults.inject({site: faults.FaultSpec(mode="corrupt")}) as fp:
+        faults.maybe_fault(site)                        # wrong-mode: no-op
+        y = faults.maybe_corrupt(site, jnp.ones((2, 2)))
+        assert bool(jnp.all(jnp.isnan(y)))
+    assert fp.injected(site) == 1
+
+
+def test_custom_corrupt_and_exc():
+    site = faults.APPLY_STAGED
+    with faults.inject({site: faults.FaultSpec(
+            mode="corrupt", corrupt=lambda v: -v)}):
+        assert faults.maybe_corrupt(site, 5) == -5
+    with faults.inject({site: faults.FaultSpec(exc=ValueError)}):
+        with pytest.raises(ValueError):
+            faults.maybe_fault(site)
+
+
+def test_nesting_shadows_and_restores():
+    outer = faults.FaultSpec(p=1.0)
+    with faults.inject({faults.PLAN: outer}) as fp_outer:
+        with faults.inject({faults.CACHE: faults.FaultSpec()}) as fp_inner:
+            assert faults.active() is fp_inner
+            faults.maybe_fault(faults.PLAN)             # outer shadowed
+        assert faults.active() is fp_outer
+        with pytest.raises(faults.InjectedFault):
+            faults.maybe_fault(faults.PLAN)
+    assert faults.active() is None
+
+
+def test_unknown_site_rejected_unless_allowed():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        faults.FaultPlan({"not-a-site": faults.FaultSpec()})
+    fp = faults.FaultPlan({"not-a-site": faults.FaultSpec()},
+                          allow_unknown_sites=True)
+    assert fp.specs["not-a-site"].p == 1.0
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="p must be"):
+        faults.FaultSpec(p=1.5)
+    with pytest.raises(ValueError, match="mode must be"):
+        faults.FaultSpec(mode="explode")
+
+
+def test_sites_fire_inside_production_code():
+    """The planted hooks in planner/plan/serving_cache actually raise."""
+    import jax.numpy as jnp
+
+    from repro.api import planner, serving_cache
+    from repro.api.spec import ConvSpec
+
+    spec = ConvSpec(rank=2, kernel_size=3, in_channels=4, out_channels=4,
+                    spatial=(8, 8))
+    w = jnp.zeros((3, 3, 4, 4), jnp.float32)
+    with faults.inject({faults.PLAN: faults.FaultSpec()}):
+        with pytest.raises(faults.InjectedFault):
+            planner.plan(spec)
+    with faults.inject({faults.PREPARE: faults.FaultSpec()}):
+        with pytest.raises(faults.InjectedFault):
+            planner.plan(spec).prepare_weights(w)
+    with faults.inject({faults.CACHE: faults.FaultSpec()}):
+        with pytest.raises(faults.InjectedFault):
+            serving_cache.ServingCache().get(spec, w)
+
+
+def test_last_fire_t_stamps_fires():
+    import time
+    t0 = time.perf_counter()
+    _, fp = _drive({"p": 1.0, "times": 2}, 5)
+    assert faults.APPLY_FUSED in fp.last_fire_t
+    assert fp.last_fire_t[faults.APPLY_FUSED] >= t0

@@ -1,0 +1,274 @@
+"""Plan-tier resilience tests: degradation chain, circuit breakers, and
+the numerical guardrail (``repro.api.resilience``).
+
+The acceptance invariant: under injected fused-kernel faults the served
+answer stays BIT-IDENTICAL (fused and staged share one integer grid),
+and a persistently-broken level is pinned out by its breaker instead of
+re-crashing every request.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import faults
+from repro.api import planner, resilience
+from repro.api.spec import ConvSpec
+from repro.quant import INT8_FREQ
+
+CIN, COUT = 4, 8
+
+
+@pytest.fixture(autouse=True)
+def _fresh_board():
+    """Breaker board + counters are process-global: isolate every test."""
+    resilience.reset()
+    yield
+    resilience.reset()
+
+
+@pytest.fixture(scope="module")
+def quantized():
+    """One pallas int8 fast-path plan + prep + input + healthy baseline."""
+    from repro.api.tuning import calibrate_act_scale
+    rng = np.random.RandomState(0)
+    spec = ConvSpec(rank=2, kernel_size=3, in_channels=CIN,
+                    out_channels=COUT, spatial=(8, 8), quant=INT8_FREQ)
+    w = jnp.asarray(rng.randn(3, 3, CIN, COUT) * 0.2, jnp.float32)
+    x = jnp.asarray(rng.randn(2, 8, 8, CIN), jnp.float32)
+    p = planner.plan(spec, backend="pallas")
+    scale = calibrate_act_scale(x, p.algorithm, spec.quant, spec.padding)
+    prep = p.prepare_weights(w, act_scale=scale)
+    assert prep.quantized                      # fused int8 datapath armed
+    baseline = p.apply(x, prep)
+    return p, prep, x, baseline
+
+
+# ----------------------------------------------------------------------
+# circuit breaker state machine (fake clock, no kernels)
+# ----------------------------------------------------------------------
+def test_breaker_state_machine():
+    t = [0.0]
+    br = resilience.CircuitBreaker(failure_threshold=3, cooldown_s=5.0,
+                                   clock=lambda: t[0])
+    assert br.state == resilience.CLOSED and br.allow()
+    assert br.record_failure() is False
+    assert br.record_failure() is False
+    assert br.record_failure() is True         # threshold -> OPEN (tripped)
+    assert br.state == resilience.OPEN
+    assert not br.allow()                      # cooling down
+    t[0] = 4.9
+    assert not br.allow()
+    t[0] = 5.0
+    assert br.allow()                          # half-open: one probe
+    assert br.state == resilience.HALF_OPEN
+    assert not br.allow()                      # second probe refused
+    assert br.record_failure() is True         # failed probe re-opens
+    assert br.state == resilience.OPEN
+    t[0] = 10.0
+    assert br.allow()
+    assert br.record_success() is True         # recovered
+    assert br.state == resilience.CLOSED
+    assert br.record_success() is False        # ordinary success
+    assert br.snapshot() == {"state": "closed", "failures": 0}
+
+
+def test_breaker_consecutive_not_cumulative_failures():
+    br = resilience.CircuitBreaker(failure_threshold=3)
+    br.record_failure()
+    br.record_failure()
+    br.record_success()                        # resets the streak
+    br.record_failure()
+    br.record_failure()
+    assert br.state == resilience.CLOSED
+
+
+def test_breaker_validation():
+    with pytest.raises(ValueError, match="failure_threshold"):
+        resilience.CircuitBreaker(failure_threshold=0)
+
+
+# ----------------------------------------------------------------------
+# the degradation chain
+# ----------------------------------------------------------------------
+def test_fused_fault_falls_back_bit_identical(quantized):
+    """Acceptance: a fused-kernel crash is invisible — the staged
+    fallback answer equals the healthy answer bit-for-bit."""
+    p, prep, x, baseline = quantized
+    with faults.inject({faults.APPLY_FUSED: faults.FaultSpec()}) as fp:
+        y = p.apply(x, prep)
+    assert fp.injected(faults.APPLY_FUSED) == 1
+    assert np.array_equal(np.asarray(y), np.asarray(baseline))
+    st = resilience.stats()
+    assert st["resilience_fallback_staged"] == 1
+    assert st["resilience_apply_failure"] == 1
+
+
+def test_double_fault_falls_back_to_reference(quantized):
+    p, prep, x, baseline = quantized
+    with faults.inject({faults.APPLY_FUSED: faults.FaultSpec(),
+                        faults.APPLY_STAGED: faults.FaultSpec()}):
+        y = p.apply(x, prep)
+    st = resilience.stats()
+    assert st["resilience_fallback_reference"] == 1
+    assert st["resilience_apply_failure"] == 2
+    # reference is the int8 *simulation*: fp-epsilon close, not bit-equal
+    np.testing.assert_allclose(np.asarray(y), np.asarray(baseline),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_total_failure_raises_last_error(quantized):
+    p, prep, x, _ = quantized
+    with faults.inject({faults.APPLY_FUSED: faults.FaultSpec(),
+                        faults.APPLY_STAGED: faults.FaultSpec(),
+                        faults.APPLY_REFERENCE: faults.FaultSpec()}):
+        with pytest.raises(faults.InjectedFault):
+            p.apply(x, prep)
+
+
+def test_breaker_pins_fallback_under_persistent_faults(quantized):
+    """After ``failure_threshold`` consecutive fused failures the fused
+    level stops being ATTEMPTED: the injection site's hit count freezes
+    while requests keep being served."""
+    p, prep, x, baseline = quantized
+    thr = resilience.policy().failure_threshold
+    with faults.inject({faults.APPLY_FUSED: faults.FaultSpec()}) as fp:
+        for _ in range(thr + 3):
+            y = p.apply(x, prep)
+            assert np.array_equal(np.asarray(y), np.asarray(baseline))
+        assert fp.hits(faults.APPLY_FUSED) == thr      # pinned out
+    st = resilience.stats()
+    assert st["resilience_breaker_trip"] == 1
+    assert st["resilience_breaker_skip"] == 3
+    key = (p.spec, p.backend, "fused")
+    assert resilience.breaker_for(key).state == resilience.OPEN
+
+
+def test_breaker_recovers_after_cooldown(quantized):
+    p, prep, x, baseline = quantized
+    t = [0.0]
+    with resilience.configured(cooldown_s=10.0, clock=lambda: t[0]):
+        with faults.inject({faults.APPLY_FUSED: faults.FaultSpec()}):
+            for _ in range(resilience.policy().failure_threshold):
+                p.apply(x, prep)
+        key = (p.spec, p.backend, "fused")
+        assert resilience.breaker_for(key).state == resilience.OPEN
+        # faults gone, but the cool-down has not elapsed: still skipped
+        p.apply(x, prep)
+        assert resilience.stats().get("resilience_breaker_recovered",
+                                      0) == 0
+        t[0] = 11.0                                    # cool-down elapsed
+        y = p.apply(x, prep)                           # half-open probe
+        assert np.array_equal(np.asarray(y), np.asarray(baseline))
+        st = resilience.stats()
+        assert st["resilience_breaker_probe"] == 1
+        assert st["resilience_breaker_recovered"] == 1
+        assert resilience.breaker_for(key).state == resilience.CLOSED
+
+
+def test_disabled_policy_propagates_faults(quantized):
+    p, prep, x, _ = quantized
+    with resilience.configured(enabled=False):
+        with faults.inject({faults.APPLY_FUSED: faults.FaultSpec()}):
+            with pytest.raises(faults.InjectedFault):
+                p.apply(x, prep)
+
+
+def test_reference_backend_not_engaged():
+    spec = ConvSpec(rank=2, kernel_size=3, in_channels=CIN,
+                    out_channels=COUT, spatial=(8, 8), quant=INT8_FREQ)
+    assert not resilience.engaged(planner.plan(spec, backend="reference"))
+    assert resilience.engaged(planner.plan(spec, backend="pallas"))
+
+
+# ----------------------------------------------------------------------
+# numerical guardrail
+# ----------------------------------------------------------------------
+def test_guardrail_converts_nan_output_into_fallback(quantized):
+    """A silently-corrupted fused output (NaN poison) must never be
+    served: the guardrail trips, the breaker counts it, staged serves."""
+    p, prep, x, baseline = quantized
+    with resilience.configured(guardrail=resilience.Guardrail()):
+        with faults.inject({faults.APPLY_FUSED: faults.FaultSpec(
+                mode="corrupt")}) as fp:
+            y = p.apply(x, prep)
+        assert fp.injected(faults.APPLY_FUSED) == 1
+        assert np.array_equal(np.asarray(y), np.asarray(baseline))
+        st = resilience.stats()
+        assert st["resilience_guardrail_trip"] == 1
+        assert st["resilience_fallback_staged"] == 1
+
+
+def test_guardrail_saturation_probe_trips_on_miscalibrated_scales():
+    """Scales calibrated on small activations + 100x larger live input:
+    the transform-domain saturation rate blows past the bound on EVERY
+    quantized level — served garbage becomes a loud failure."""
+    from repro.api.tuning import calibrate_act_scale
+    rng = np.random.RandomState(1)
+    spec = ConvSpec(rank=2, kernel_size=3, in_channels=CIN,
+                    out_channels=COUT, spatial=(8, 8), quant=INT8_FREQ)
+    w = jnp.asarray(rng.randn(3, 3, CIN, COUT) * 0.2, jnp.float32)
+    xc = jnp.asarray(rng.randn(2, 8, 8, CIN) * 0.01, jnp.float32)
+    p = planner.plan(spec, backend="pallas")
+    scale = calibrate_act_scale(xc, p.algorithm, spec.quant, spec.padding)
+    prep = p.prepare_weights(w, act_scale=scale)
+    x = jnp.asarray(rng.randn(2, 8, 8, CIN), jnp.float32)  # 100x calib
+    with resilience.configured(
+            guardrail=resilience.Guardrail(max_sat_frac=0.05)):
+        with pytest.raises(resilience.GuardrailViolation,
+                           match="saturation"):
+            p.apply(x, prep)
+        assert resilience.stats()["resilience_guardrail_trip"] >= 2
+
+    # and a healthy input under the same guardrail passes untouched
+    resilience.reset()
+    prep2 = p.prepare_weights(w, act_scale=calibrate_act_scale(
+        x, p.algorithm, spec.quant, spec.padding))
+    with resilience.configured(
+            guardrail=resilience.Guardrail(max_sat_frac=0.05)):
+        p.apply(x, prep2)
+    assert "resilience_guardrail_trip" not in resilience.stats()
+
+
+# ----------------------------------------------------------------------
+# observability plumbing
+# ----------------------------------------------------------------------
+def test_metrics_sink_routes_events_to_caller(quantized):
+    p, prep, x, _ = quantized
+    seen = {}
+
+    def inc(name, by=1):
+        seen[name] = seen.get(name, 0) + by
+
+    with resilience.metrics_sink(inc):
+        with faults.inject({faults.APPLY_FUSED: faults.FaultSpec()}):
+            p.apply(x, prep)
+    assert seen["resilience_fallback_staged"] == 1
+    assert seen["resilience_apply_failure"] == 1
+    # global counters got the same events
+    assert resilience.stats()["resilience_fallback_staged"] == 1
+    # outside the sink, events no longer route to `seen`
+    with faults.inject({faults.APPLY_FUSED: faults.FaultSpec()}):
+        p.apply(x, prep)
+    assert seen["resilience_fallback_staged"] == 1
+    assert resilience.stats()["resilience_fallback_staged"] == 2
+
+
+def test_board_snapshot_keys_are_readable(quantized):
+    p, prep, x, _ = quantized
+    with faults.inject({faults.APPLY_FUSED: faults.FaultSpec()}):
+        p.apply(x, prep)
+    snap = resilience.board_snapshot()
+    assert any(k.endswith("|pallas|fused") for k in snap)
+    assert all(v["state"] in (resilience.CLOSED, resilience.OPEN,
+                              resilience.HALF_OPEN)
+               for v in snap.values())
+
+
+def test_configured_restores_previous_policy():
+    before = resilience.policy()
+    with resilience.configured(failure_threshold=99) as pol:
+        assert pol.failure_threshold == 99
+        assert resilience.policy() is pol
+    assert resilience.policy() == before

@@ -38,6 +38,19 @@ def test_duplicate_shapes_dedup_and_names():
         t.by_name("b9x9")
 
 
+def test_request_larger_than_every_bucket_is_rejected():
+    """A shape exceeding every bucket (either dimension) maps to None —
+    the admission path turns that into a RejectedError rather than
+    truncating, and pad_to refuses it outright as the backstop."""
+    t = _table()
+    assert t.bucket_for(17, 13) is None            # both dims exceed
+    assert t.bucket_for(17, 12) is None            # h alone exceeds
+    assert t.bucket_for(16, 13) is None            # w alone exceeds
+    assert t.bucket_for(16, 12) is not None        # exact largest fits
+    with pytest.raises(ValueError, match="exceeds bucket"):
+        BucketTable.pad_to(jnp.ones((17, 13, 4)), t.buckets[-1])
+
+
 def test_empty_table_rejected():
     with pytest.raises(ValueError):
         BucketTable([])

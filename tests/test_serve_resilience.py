@@ -1,0 +1,234 @@
+"""Engine self-healing tests: transparent fault absorption, bounded
+retry, poison-request quarantine, deadline shedding, and loop-error
+surfacing.
+
+The serve-tier acceptance claim (ISSUE 7): under transient injected
+faults ZERO request-visible errors occur and the degraded answers stay
+bit-identical to a healthy engine's.  All tests drive ``Engine.step()``
+synchronously unless the dispatch *thread* itself is under test.
+"""
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import faults
+from repro.api import resilience
+from repro.api.serving_cache import ServingCache
+from repro.quant import INT8_FREQ
+from repro.serve import (BucketTable, Engine, INTERACTIVE, BATCH,
+                         QuarantinedError, ShedError, results)
+
+CIN, COUT = 4, 8
+
+
+@pytest.fixture(autouse=True)
+def _fresh_board():
+    resilience.reset()
+    yield
+    resilience.reset()
+
+
+@pytest.fixture(scope="module")
+def shared_cache():
+    return ServingCache()
+
+
+def _weights(seed=0):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.randn(3, 3, CIN, COUT) * 0.2, jnp.float32)
+
+
+def _table(shapes=((8, 8), (12, 12))):
+    return BucketTable.for_workload(shapes, kernel_size=3, in_channels=CIN,
+                                    out_channels=COUT, quant=INT8_FREQ)
+
+
+def _imgs(shapes, seed=1):
+    rng = np.random.RandomState(seed)
+    return [jnp.asarray(rng.randn(h, w, CIN), jnp.float32)
+            for h, w in shapes]
+
+
+def _serve_all(eng, xs, slo=BATCH):
+    futs = [eng.submit(x, slo) for x in xs]
+    while eng.step() > 0:
+        pass
+    return futs
+
+
+class _FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+# ----------------------------------------------------------------------
+# transparent absorption: the acceptance test
+# ----------------------------------------------------------------------
+def test_transient_faults_invisible_and_bit_identical(shared_cache):
+    """Under a 30% fused-apply fault rate every future resolves with a
+    RESULT (zero request-visible errors) and each answer equals the
+    healthy engine's bit-for-bit."""
+    shapes = [(8, 8), (11, 10), (12, 12), (8, 8), (7, 7), (12, 12)] * 2
+    xs = _imgs(shapes, seed=3)
+    clean = Engine(_weights(), _table(), max_batch=4, cache=shared_cache)
+    expect = [r.y for r in results(_serve_all(clean, xs))]
+
+    faulty = Engine(_weights(), _table(), max_batch=4, cache=shared_cache)
+    with faults.inject({faults.APPLY_FUSED: faults.FaultSpec(p=0.3)},
+                       seed=9) as fp:
+        futs = _serve_all(faulty, xs)
+    assert fp.injected() > 0                   # faults actually happened
+    got = results(futs)                        # raises if ANY errored
+    for g, e in zip(got, expect):
+        assert np.array_equal(np.asarray(g.y), np.asarray(e))
+    c = faulty.snapshot()["counters"]
+    # plan-level events landed in THIS engine's registry via the sink
+    assert c.get("resilience_fallback_staged", 0) \
+        + c.get("resilience_breaker_skip", 0) >= fp.injected()
+
+
+def test_dispatch_fault_retried_and_counted(shared_cache):
+    eng = Engine(_weights(), _table(), max_batch=4, cache=shared_cache,
+                 retry_backoff_s=0.0)
+    xs = _imgs([(8, 8)] * 3)
+    with faults.inject({faults.DISPATCH: faults.FaultSpec(times=1)}) as fp:
+        futs = _serve_all(eng, xs)
+    assert fp.injected(faults.DISPATCH) == 1
+    rs = results(futs)
+    assert len(rs) == 3
+    c = eng.snapshot()["counters"]
+    assert c["dispatch_retries"] == 1
+    assert c["quarantined"] == 0 and c["batch_bisections"] == 0
+
+
+def test_poison_request_quarantined_peers_served(shared_cache):
+    """A request whose presence persistently kills its batch is isolated
+    by bisection and quarantined; every co-batched peer is served."""
+    eng = Engine(_weights(), _table(), max_batch=4, cache=shared_cache,
+                 max_dispatch_retries=1, retry_backoff_s=0.0)
+    xs = _imgs([(8, 8)] * 4, seed=5)
+    poison_x = xs[1]                           # identified by input identity
+    futs = [eng.submit(x) for x in xs]
+    with faults.inject({faults.DISPATCH: faults.FaultSpec(
+            when=lambda b: any(r.x is poison_x
+                               for r in b.requests))}) as fp:
+        while eng.step() > 0:
+            pass
+    assert fp.injected(faults.DISPATCH) >= 2   # batch + bisected halves
+    for i, f in enumerate(futs):
+        if i != 1:
+            f.result(timeout=0)                # peers all served
+    with pytest.raises(QuarantinedError) as ei:
+        futs[1].result(timeout=0)
+    assert isinstance(ei.value.__cause__, faults.InjectedFault)
+    c = eng.snapshot()["counters"]
+    assert c["quarantined"] == 1
+    assert c["batch_bisections"] >= 1
+
+
+# ----------------------------------------------------------------------
+# deadline shedding
+# ----------------------------------------------------------------------
+def test_expired_requests_shed_before_dispatch(shared_cache):
+    clock = _FakeClock()
+    eng = Engine(_weights(), _table(), max_batch=4, cache=shared_cache,
+                 clock=clock, shed_expired=True)
+    x8, x12 = _imgs([(8, 8), (12, 12)], seed=6)
+    f_late = eng.submit(x8, INTERACTIVE)       # 2s deadline
+    f_ok = eng.submit(x8, BATCH)               # 20s deadline
+    clock.t = 3.0                              # interactive now expired
+    assert eng.step() == 2                     # both resolved: 1 shed, 1 served
+    with pytest.raises(ShedError):
+        f_late.result(timeout=0)
+    assert f_ok.result(timeout=0).y.shape == (8, 8, COUT)
+    snap = eng.snapshot()
+    assert snap["counters"]["shed"] == 1
+    assert snap["slo"]["interactive"]["missed"] == 1
+    # shedding off (the default): the same late request is served
+    eng2 = Engine(_weights(), _table(), max_batch=4, cache=shared_cache,
+                  clock=clock)
+    f = eng2.submit(x12, INTERACTIVE)
+    clock.t = 9.0
+    eng2.step()
+    assert f.result(timeout=0).deadline_met is False
+
+
+def test_all_shed_batch_completes_inflight_accounting(shared_cache):
+    clock = _FakeClock()
+    eng = Engine(_weights(), _table(), max_batch=4, cache=shared_cache,
+                 clock=clock, shed_expired=True)
+    futs = [eng.submit(x, INTERACTIVE) for x in _imgs([(8, 8)] * 3)]
+    clock.t = 100.0
+    assert eng.step() == 3
+    for f in futs:
+        with pytest.raises(ShedError):
+            f.result(timeout=0)
+    assert eng.drain(timeout=1.0) is True      # inflight went back to 0
+
+
+# ----------------------------------------------------------------------
+# dispatch-loop error surfacing (the silent `except: pass` satellite)
+# ----------------------------------------------------------------------
+def test_loop_errors_counted_retained_and_reraised(shared_cache,
+                                                   monkeypatch):
+    eng = Engine(_weights(), _table(), max_batch=2, cache=shared_cache)
+
+    def boom(*a, **k):
+        raise RuntimeError("batch formation exploded")
+
+    monkeypatch.setattr(eng.queue, "take_batch", boom)
+    eng.start()
+    deadline = time.perf_counter() + 5.0
+    while eng.snapshot()["loop_errors"] == 0 \
+            and time.perf_counter() < deadline:
+        time.sleep(0.01)
+    with pytest.raises(RuntimeError, match="batch formation exploded"):
+        eng.stop(raise_on_error=True)
+    snap = eng.snapshot()
+    assert snap["loop_errors"] >= 1
+    assert snap["counters"]["loop_errors"] >= 1
+    assert "batch formation exploded" in snap["last_loop_error"]
+    # plain stop() after the fact does not raise
+    eng.stop()
+
+
+# ----------------------------------------------------------------------
+# drain vs concurrent submit (satellite)
+# ----------------------------------------------------------------------
+def test_drain_not_true_while_admitted_request_unresolved(shared_cache):
+    eng = Engine(_weights(), _table(), max_batch=2, cache=shared_cache)
+    f = eng.submit(_imgs([(8, 8)])[0])
+    assert eng.drain(timeout=0.05) is False    # admitted, not yet served
+    assert not f.done()
+    eng.step()
+    assert eng.drain(timeout=1.0) is True
+    assert f.done()
+
+
+def test_drain_races_concurrent_submits(shared_cache):
+    """drain() returning True must imply every previously-submitted
+    request resolved, even with submits racing the dispatch thread."""
+    eng = Engine(_weights(), _table(), max_batch=4,
+                 cache=shared_cache).start()
+    xs = _imgs([(8, 8)] * 12, seed=8)
+    futs = []
+
+    def submitter():
+        for x in xs:
+            futs.append(eng.submit(x))
+            time.sleep(0.002)
+
+    th = threading.Thread(target=submitter)
+    th.start()
+    th.join()
+    assert eng.drain(timeout=60) is True
+    assert all(f.done() for f in futs)
+    eng.stop(raise_on_error=True)
+    for r in results(futs):
+        assert r.y.shape == (8, 8, COUT)

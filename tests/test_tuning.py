@@ -172,3 +172,48 @@ def test_fused_kernel_full_k_matches_blocked():
     y_blocked = sfc_fused_conv2d(x, prep.wq, prep.act_scale, prep.w_scale,
                                  algo, k_block=8)
     assert bool(jnp.all(y_full == y_blocked))
+
+
+def test_write_failure_warns_once_and_store_still_serves(monkeypatch):
+    """Regression: ``_write`` used to swallow OSError silently — a
+    read-only host re-tuned from scratch every process with no trace.
+    Now the first failed persist warns (exactly once, not per record),
+    the in-memory store keeps serving, and a later successful write
+    re-arms the warning."""
+    import os
+    import warnings
+
+    spec = ConvSpec(rank=2, kernel_size=3, in_channels=8, out_channels=8,
+                    spatial=(12, 12))
+    monkeypatch.setattr(tuning, "_WRITE_WARNED", False)
+    real_replace = os.replace
+    fail = [True]
+
+    def maybe_deny(src, dst):
+        if fail[0]:
+            raise OSError(30, "Read-only file system")
+        return real_replace(src, dst)
+
+    monkeypatch.setattr(tuning.os, "replace", maybe_deny)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        tuning.record(spec, "pallas", "a1", 1.0)
+        tuning.record(spec, "pallas", "a2", 2.0)   # second failure: silent
+    hits = [w for w in caught if issubclass(w.category, RuntimeWarning)
+            and "not persisted" in str(w.message)]
+    assert len(hits) == 1
+    # the in-memory store still serves every recorded measurement
+    assert tuning.lookup(spec, "pallas")["a1"]["time_s"] == 1.0
+    assert tuning.lookup(spec, "pallas")["a2"]["time_s"] == 2.0
+    assert not os.path.exists(tuning.cache_path())  # nothing reached disk
+    # a successful write re-arms the warning for the NEXT failure
+    fail[0] = False
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        tuning.record(spec, "pallas", "a3", 3.0)
+        fail[0] = True
+        tuning.record(spec, "pallas", "a4", 4.0)
+    hits = [w for w in caught if issubclass(w.category, RuntimeWarning)
+            and "not persisted" in str(w.message)]
+    assert len(hits) == 1
+    assert os.path.exists(tuning.cache_path())      # the a3 write landed
