@@ -1,0 +1,58 @@
+"""repro.analysis — static verification of the SFC stack.
+
+Three analyses, all pure (no kernel launches, no RNG, no clock):
+
+* :mod:`repro.analysis.ranges` — interval/bit-width analysis of the
+  int8 datapath; per-algorithm overflow certificates and the maximal
+  safe ``C_in`` bound enforced at plan time.
+* :mod:`repro.analysis.kernel_checks` — Pallas fused-kernel resource
+  checker (VMEM budget, strip bounds, scratch-race freedom) used as
+  autotune pre-flight and by the serving batcher.
+* :mod:`repro.analysis.lint` — AST architecture-invariant linter.
+
+Submodules load lazily (PEP 562) so that importing light consumers
+(e.g. ``repro.quant.bops`` → ``ranges``) does not pull in the kernel
+package.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Any
+
+_SUBMODULES = ("ranges", "kernel_checks", "lint")
+_ATTR_HOME = {
+    # ranges
+    "AccumulatorOverflowError": "ranges",
+    "Certificate": "ranges",
+    "all_certificates": "ranges",
+    "certificate": "ranges",
+    "check_contraction": "ranges",
+    "check_spec_accumulator": "ranges",
+    "dequant_exact_cin": "ranges",
+    "safe_cin_bound": "ranges",
+    "transform_bits_1d": "ranges",
+    # kernel_checks
+    "Finding": "kernel_checks",
+    "check_candidates": "kernel_checks",
+    "check_config": "kernel_checks",
+    "check_geometry": "kernel_checks",
+    "fold_fits": "kernel_checks",
+    # lint
+    "run_lint": "lint",
+}
+
+__all__ = list(_SUBMODULES) + sorted(_ATTR_HOME)
+
+
+def __getattr__(name: str) -> Any:
+    if name in _SUBMODULES:
+        return importlib.import_module(f"{__name__}.{name}")
+    home = _ATTR_HOME.get(name)
+    if home is not None:
+        mod = importlib.import_module(f"{__name__}.{home}")
+        return getattr(mod, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

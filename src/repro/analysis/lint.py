@@ -1,0 +1,190 @@
+"""Architecture-invariant linter for the ``repro`` source tree.
+
+Pure-stdlib (``ast``) checks for invariants that unit tests cannot see —
+they are properties of the *source layout*, not of any runtime value:
+
+  ``ARCH001``  ``repro.api`` is the single entry point.  Importing
+               ``repro.kernels`` or ``repro.distributed.conv_spmd``
+               anywhere else couples callers to kernel internals and
+               bypasses planning/tuning; only the API layer, the kernel
+               and distributed packages themselves, the test harness
+               (``repro.testing``) and this analysis package (which
+               consumes kernel *metadata*, never launches) may.
+  ``TIME001``  Serving code (``repro/serve``) must not read
+               ``time.time()``: wall-clock is not monotonic, and SLO /
+               latency accounting built on it breaks under NTP steps.
+               Use ``time.perf_counter`` or the injected ``time_fn``.
+  ``EXC001``   No bare ``except:`` — it swallows ``KeyboardInterrupt``
+               and ``SystemExit``.
+  ``EXC002``   No silent broad handler: ``except Exception`` whose body
+               is only ``pass``/``continue`` hides real failures (the
+               degradation chain must *log* what it absorbs).
+  ``REG001``   ``register_algorithm``/``register_backend`` may only be
+               called from the registry seams (``repro/api/registry.py``,
+               ``repro/api/backends.py``).  Registration elsewhere makes
+               the available-algorithm set import-order dependent.
+
+Run via ``python -m repro.analysis --check`` (the CI ``analysis`` job)
+or programmatically through :func:`run_lint`.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+from typing import Iterable, List, Sequence, Tuple, Union
+
+from repro.analysis.kernel_checks import ERROR, Finding
+
+# Path prefixes (relative to the ``repro`` package root) allowed to
+# import kernel/distributed internals.
+_ARCH_ALLOWED_PREFIXES: Tuple[str, ...] = (
+    "api", "kernels", "distributed", "analysis")
+_ARCH_ALLOWED_FILES: Tuple[str, ...] = ("testing.py",)
+_KERNEL_MODULES: Tuple[str, ...] = (
+    "repro.kernels", "repro.distributed.conv_spmd")
+
+# Files allowed to *call* the registration seams.
+_REG_ALLOWED: Tuple[str, ...] = ("api/registry.py", "api/backends.py")
+_REG_NAMES: Tuple[str, ...] = ("register_algorithm", "register_backend")
+
+
+def _package_relpath(path: pathlib.Path, root: pathlib.Path) -> str:
+    """Path relative to the ``repro`` package root (or the scan root when
+    the tree is not a ``repro`` checkout — lets tests lint tmp trees)."""
+    rel = path.relative_to(root)
+    parts = rel.parts
+    if "repro" in parts:
+        parts = parts[max(i for i, p in enumerate(parts)
+                          if p == "repro") + 1:]
+    return "/".join(parts)
+
+
+def _is_kernel_module(module: str) -> bool:
+    return any(module == m or module.startswith(m + ".")
+               for m in _KERNEL_MODULES)
+
+
+def _arch_allowed(relpath: str) -> bool:
+    return (relpath in _ARCH_ALLOWED_FILES
+            or any(relpath.startswith(p + "/")
+                   for p in _ARCH_ALLOWED_PREFIXES))
+
+
+def _silent_body(body: Sequence[ast.stmt]) -> bool:
+    for stmt in body:
+        if isinstance(stmt, (ast.Pass, ast.Continue)):
+            continue
+        if (isinstance(stmt, ast.Expr)
+                and isinstance(stmt.value, ast.Constant)):
+            continue                       # docstring / Ellipsis
+        return False
+    return True
+
+
+def _call_name(func: ast.expr) -> str:
+    if isinstance(func, ast.Name):
+        return func.id
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    return ""
+
+
+def lint_source(source: str, relpath: str) -> List[Finding]:
+    """Lint one module given its package-relative path."""
+    findings: List[Finding] = []
+    try:
+        tree = ast.parse(source, filename=relpath)
+    except SyntaxError as exc:
+        return [Finding("LNT000", ERROR, f"syntax error: {exc.msg}",
+                        f"{relpath}:{exc.lineno or 0}")]
+    in_serve = relpath.startswith("serve/")
+    arch_ok = _arch_allowed(relpath)
+    reg_ok = relpath in _REG_ALLOWED
+
+    for node in ast.walk(tree):
+        where = f"{relpath}:{getattr(node, 'lineno', 0)}"
+
+        if isinstance(node, ast.Import) and not arch_ok:
+            for alias in node.names:
+                if _is_kernel_module(alias.name):
+                    findings.append(Finding(
+                        "ARCH001", ERROR,
+                        f"import of kernel-internal module "
+                        f"{alias.name!r} outside the API/kernel layers; "
+                        f"route through repro.api (or repro.analysis for "
+                        f"static metadata)", where))
+        elif isinstance(node, ast.ImportFrom) and not arch_ok:
+            mod = node.module or ""
+            if node.level == 0:
+                targets = [mod] + [f"{mod}.{a.name}" if mod else a.name
+                                   for a in node.names]
+                if any(_is_kernel_module(t) for t in targets):
+                    findings.append(Finding(
+                        "ARCH001", ERROR,
+                        f"import from kernel-internal module {mod!r} "
+                        f"outside the API/kernel layers; route through "
+                        f"repro.api (or repro.analysis for static "
+                        f"metadata)", where))
+
+        elif isinstance(node, ast.Attribute):
+            if (in_serve and node.attr == "time"
+                    and isinstance(node.value, ast.Name)
+                    and node.value.id == "time"):
+                findings.append(Finding(
+                    "TIME001", ERROR,
+                    "time.time() on a serving path: wall-clock is not "
+                    "monotonic; use time.perf_counter or the injected "
+                    "time_fn", where))
+
+        elif isinstance(node, ast.ExceptHandler):
+            if node.type is None:
+                findings.append(Finding(
+                    "EXC001", ERROR,
+                    "bare 'except:' swallows KeyboardInterrupt/"
+                    "SystemExit; catch a concrete exception type", where))
+            else:
+                names = []
+                for t in ([node.type] if not isinstance(node.type, ast.Tuple)
+                          else node.type.elts):
+                    if isinstance(t, ast.Name):
+                        names.append(t.id)
+                if (set(names) & {"Exception", "BaseException"}
+                        and _silent_body(node.body)):
+                    findings.append(Finding(
+                        "EXC002", ERROR,
+                        "broad 'except Exception' with a silent body "
+                        "hides real failures; log or narrow it", where))
+
+        elif isinstance(node, ast.Call) and not reg_ok:
+            name = _call_name(node.func)
+            if name in _REG_NAMES:
+                findings.append(Finding(
+                    "REG001", ERROR,
+                    f"{name}() called outside the registry seams "
+                    f"({', '.join(_REG_ALLOWED)}); registration "
+                    f"elsewhere makes the algorithm/backend set "
+                    f"import-order dependent", where))
+    return findings
+
+
+def iter_py_files(root: pathlib.Path) -> Iterable[pathlib.Path]:
+    return sorted(p for p in root.rglob("*.py")
+                  if "__pycache__" not in p.parts)
+
+
+def run_lint(root: Union[str, pathlib.Path]) -> List[Finding]:
+    """Lint every ``*.py`` under ``root`` (normally ``src/``)."""
+    root = pathlib.Path(root)
+    findings: List[Finding] = []
+    for path in iter_py_files(root):
+        rel = _package_relpath(path, root)
+        findings.extend(
+            lint_source(path.read_text(encoding="utf-8"), rel))
+    return findings
+
+
+def source_root() -> pathlib.Path:
+    """The installed ``repro`` package directory (what ``--check`` scans)."""
+    import repro
+    # ``repro`` is a namespace package: no __init__.py, so no __file__.
+    return pathlib.Path(next(iter(repro.__path__))).resolve()

@@ -23,7 +23,7 @@ call sites.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Optional
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -120,6 +120,10 @@ class PallasBackend:
     """
 
     name = "pallas"
+    # real int8 x int8 -> int32 accumulation: the planner runs the
+    # repro.analysis.ranges overflow pre-flight against this backend
+    # (the reference backend fake-quantizes in f32 and cannot wrap).
+    integer_datapath = True
 
     def apply(self, plan, x, prep, *, bias=None, elementwise_hook=None):
         if elementwise_hook is not None:
@@ -170,8 +174,7 @@ class PallasBackend:
             return _add_bias(y, bias)
         from repro.kernels.sfc_inverse import sfc_inverse
         from repro.kernels.sfc_transform import sfc_transform
-        bt = jnp.asarray(algo.bt(), x.dtype)
-        at = jnp.asarray(algo.at(), x.dtype)
+        bt, _, at = c2d.transform_matrices(algo, x.dtype.name)
         tiles, geom = ops.extract_tiles(x, algo, plan.spec.padding)
         tx = sfc_transform(tiles, bt, interpret=plan.interpret)
         if depthwise:

@@ -139,9 +139,21 @@ def _plan_cached(spec: ConvSpec, backend: str, algo: str,
         name = registry.DIRECT
     else:
         name = algo if resolved.R == spec.kernel_size else registry.DIRECT
+    algorithm = registry.get_algorithm(name)
+    if algorithm is not None \
+            and getattr(backends.get_backend(backend),
+                        "integer_datapath", False):
+        # plan-time overflow pre-flight: on backends whose fast path
+        # accumulates real int8 x int8 products in int32 (the reference
+        # backend fake-quantizes in f32 and cannot wrap), reject specs
+        # whose channel contraction could exceed the accumulator before
+        # any kernel runs.  Raises AccumulatorOverflowError naming the
+        # safe C_in bound.
+        from repro.analysis import ranges
+        ranges.check_spec_accumulator(spec, algorithm, algo_name=name)
     from repro.api import tuning
     return ConvPlan(spec=spec, backend=backend, algo_name=name,
-                    algorithm=registry.get_algorithm(name),
+                    algorithm=algorithm,
                     interpret=interpret, cost=estimate_cost(spec, name),
                     config=tuning.get_config(spec, backend, name, interpret))
 

@@ -348,9 +348,17 @@ def autotune(spec: ConvSpec, backend: str = "pallas", *,
     # measurement invalidates the plan cache, so object identities do not
     # survive from one name to the next.
     seen_composites: Dict[tuple, str] = {}
+    from repro.analysis import kernel_checks, ranges
     for name in algos:
-        p_name = planner.plan(spec, backend=backend, algo=name,
-                              interpret=interpret)
+        try:
+            p_name = planner.plan(spec, backend=backend, algo=name,
+                                  interpret=interpret)
+        except ranges.AccumulatorOverflowError as exc:
+            # plan-time overflow pre-flight rejected the algorithm for
+            # this spec/backend: never time it
+            if log:
+                log(f"autotune {name}: skipped, {exc}")
+            continue
         if p_name.path == "lowered":
             sig = tuple((sp.spec, sp.algo_name) for sp in p_name.sub_plans)
             first = seen_composites.setdefault(sig, name)
@@ -359,9 +367,24 @@ def autotune(spec: ConvSpec, backend: str = "pallas", *,
                     log(f"autotune {name}: same lowered composite as "
                         f"{first}; skipped")
                 continue
+        launchable = list(candidates)
+        if p_name.path == "fast" and p_name.algorithm is not None:
+            # static resource pre-flight: drop fused configs whose launch
+            # geometry breaks the VMEM budget / strip bounds / scratch
+            # invariants instead of timing a kernel that would fail (or
+            # silently spill) on hardware
+            launchable, rejected = kernel_checks.check_candidates(
+                spec, p_name.algorithm, candidates, batch=x.shape[0])
+            if log:
+                for cfg, errs in rejected:
+                    log(f"autotune {name} {cfg.datapath}"
+                        f"(k={cfg.k_block},co={cfg.cout_block},"
+                        f"r={cfg.rows_per_step},"
+                        f"db={int(cfg.double_buffer)}): rejected by "
+                        f"pre-flight [{errs[0].code}]")
         best: Optional[float] = None
         best_cfg: Optional[KernelConfig] = None
-        for cfg in candidates:
+        for cfg in launchable:
             p0 = planner.plan(spec, backend=backend, algo=name,
                               interpret=interpret)
             if p0.path == "direct":        # spec degraded to direct

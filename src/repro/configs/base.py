@@ -7,7 +7,7 @@ be static jit arguments.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 
 def pad_vocab(v: int, multiple: int = 256) -> int:

@@ -23,6 +23,30 @@ from repro.core.generator import BilinearAlgorithm
 
 
 # --------------------------------------------------------------------------
+# Transform-matrix cache
+# --------------------------------------------------------------------------
+@functools.lru_cache(maxsize=None)
+def transform_matrices(algo: BilinearAlgorithm, dtype: str = "float32"
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Device-resident ``(bt, g, at)`` for ``algo`` at ``dtype``, cached.
+
+    The dtype cast of the exact transform matrices is prepare-time work:
+    every kernel wrapper and backend used to rebuild ``jnp.asarray(
+    algo.bt(), dtype)`` (and ``sfc_transform`` re-cast per call) on each
+    invocation of the hot path.  Algorithms are frozen, hashable
+    dataclasses and the registry memoizes instances, so one cache entry
+    serves every plan/apply for a given (algorithm, dtype).
+    """
+    dt = jnp.dtype(dtype)
+    # the first call for a given (algo, dtype) can land inside a jit /
+    # scan / checkpoint trace; force eager construction so the cache
+    # holds concrete arrays, never tracers
+    with jax.ensure_compile_time_eval():
+        return (jnp.asarray(algo.bt(), dt), jnp.asarray(algo.g(), dt),
+                jnp.asarray(algo.at(), dt))
+
+
+# --------------------------------------------------------------------------
 # Tiling helpers
 # --------------------------------------------------------------------------
 def _overlap_tiles_1d(n_tiles: int, M: int, L: int) -> np.ndarray:
@@ -64,14 +88,14 @@ def transform_input_2d(x: jnp.ndarray, algo: BilinearAlgorithm,
     tiles = xp[:, idx_h, :, :]            # (B, nH, L, Wp, C)
     tiles = tiles[:, :, :, idx_w, :]      # (B, nH, L, nW, L, C)
     tiles = jnp.transpose(tiles, (0, 1, 3, 2, 4, 5))  # (B,nH,nW,L,L,C)
-    bt = jnp.asarray(algo.bt(), dtype=x.dtype)
+    bt = transform_matrices(algo, x.dtype.name)[0]
     tx = jnp.einsum("ti,bnwijc,uj->bnwtuc", bt, tiles, bt)
     return tx, (out_h, out_w, nH, nW)
 
 
 def transform_weights_2d(w: jnp.ndarray, algo: BilinearAlgorithm) -> jnp.ndarray:
     """(R,R,Cin,Cout) -> (t,t,Cin,Cout)."""
-    g = jnp.asarray(algo.g(), dtype=w.dtype)
+    g = transform_matrices(algo, w.dtype.name)[1]
     return jnp.einsum("ti,ijco,uj->tuco", g, w, g)
 
 
@@ -89,7 +113,7 @@ def inverse_transform_2d(ty: jnp.ndarray, algo: BilinearAlgorithm,
                          geom: Tuple) -> jnp.ndarray:
     """(B,nH,nW,t,t,Cout) -> (B,H_out,W_out,Cout)."""
     out_h, out_w, nH, nW = geom
-    at = jnp.asarray(algo.at(), dtype=ty.dtype)
+    at = transform_matrices(algo, ty.dtype.name)[2]
     y = jnp.einsum("mt,bnwtuo,pu->bnwmpo", at, ty, at)  # (B,nH,nW,M,M,O)
     B = y.shape[0]
     O = y.shape[-1]
@@ -145,7 +169,7 @@ def fastconv1d_depthwise_causal(x: jnp.ndarray, w: jnp.ndarray,
     multiplication counting addresses (t/M mults per output vs R direct).
     """
     assert w.shape == (algo.R, x.shape[-1]), (w.shape, algo.R, x.shape)
-    g = jnp.asarray(algo.g(), dtype=w.dtype)
+    g = transform_matrices(algo, w.dtype.name)[1]
     tw = jnp.einsum("tr,rc->tc", g, w)
     return fastconv1d_depthwise_causal_pretransformed(x, tw, algo)
 
@@ -162,8 +186,7 @@ def fastconv1d_depthwise_causal_pretransformed(
     xp = jnp.pad(x, ((0, 0), (R - 1, n_tiles * M - T), (0, 0)))
     idx = _overlap_tiles_1d(n_tiles, M, L)
     tiles = xp[:, idx, :]                                   # (B, nT, L, C)
-    bt = jnp.asarray(algo.bt(), dtype=x.dtype)
-    at = jnp.asarray(algo.at(), dtype=x.dtype)
+    bt, _, at = transform_matrices(algo, x.dtype.name)
     tx = jnp.einsum("ti,bnic->bntc", bt, tiles)
     ty = tx * tw[None, None, :, :]
     y = jnp.einsum("mt,bntc->bnmc", at, ty)                 # (B,nT,M,C)

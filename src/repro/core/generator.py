@@ -22,7 +22,6 @@ validated for exactness; float64 copies are exported for numeric use.
 from __future__ import annotations
 
 import dataclasses
-import itertools
 from fractions import Fraction
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -67,14 +66,28 @@ class BilinearAlgorithm:
         return self.mults_2d / float(self.M * self.M * self.R * self.R)
 
     # ---- numeric matrices ----
+    # Memoized per instance: the exact->float conversion is pure, and the
+    # kernel wrappers fetch these on every trace/apply (the frozen
+    # dataclass blocks normal attribute writes, hence object.__setattr__).
     def bt(self) -> np.ndarray:
-        return _to_f64(self.BT)
+        return self._f64("BT")
 
     def g(self) -> np.ndarray:
-        return _to_f64(self.G)
+        return self._f64("G")
 
     def at(self) -> np.ndarray:
-        return _to_f64(self.AT)
+        return self._f64("AT")
+
+    def _f64(self, field: str) -> np.ndarray:
+        cache = self.__dict__.get("_f64_cache")
+        if cache is None:
+            cache = {}
+            object.__setattr__(self, "_f64_cache", cache)
+        if field not in cache:
+            arr = _to_f64(getattr(self, field))
+            arr.setflags(write=False)     # shared instance: keep it frozen
+            cache[field] = arr
+        return cache[field]
 
     # ---- exact reference (Fractions, python lists) ----
     def conv1d_exact(self, x: Sequence[Fraction],

@@ -31,7 +31,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import symbolic
-from repro.core.generator import BilinearAlgorithm, generate_sfc
+from repro.core.generator import generate_sfc
 
 
 @dataclasses.dataclass(frozen=True)

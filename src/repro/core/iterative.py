@@ -20,7 +20,6 @@ so the standard SFC flow applies along each axis.
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -76,6 +76,11 @@ class SpmdPallasBackend:
     """
 
     name = "pallas_spmd"
+    # same int8 x int8 -> int32 datapath as PallasBackend: the planner's
+    # overflow pre-flight applies (sharding C_in does not relax the
+    # bound — each shard still accumulates its full local contraction,
+    # and the psum joins in int32).
+    integer_datapath = True
 
     def __init__(self, mesh: Optional[Mesh] = None):
         self._mesh = mesh

@@ -19,7 +19,7 @@ stack in tests/test_pipeline.py.
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -86,8 +86,7 @@ def quantized_fastconv2d(x: jnp.ndarray, wq: jnp.ndarray,
     transform/inverse stages.
     """
     t = algo.t
-    bt = jnp.asarray(algo.bt(), jnp.float32)
-    at = jnp.asarray(algo.at(), jnp.float32)
+    bt, _, at = c2d.transform_matrices(algo, "float32")
     tiles, geom = extract_tiles(x, algo, padding)
     xq = sfc_transform_quantize(tiles, bt, act_scale, bits=bits,
                                 interpret=interpret, tile_block=tile_block,
@@ -125,8 +124,7 @@ def quantized_fastconv2d_depthwise(x: jnp.ndarray, wq: jnp.ndarray,
     there is no channel contraction, so no k-blocking either.
     """
     t = algo.t
-    bt = jnp.asarray(algo.bt(), jnp.float32)
-    at = jnp.asarray(algo.at(), jnp.float32)
+    bt, _, at = c2d.transform_matrices(algo, "float32")
     tiles, geom = extract_tiles(x, algo, padding)
     xq = sfc_transform_quantize(tiles, bt, act_scale, bits=bits,
                                 interpret=interpret, tile_block=tile_block,
@@ -148,8 +146,7 @@ def fastconv2d_fp(x: jnp.ndarray, w: jnp.ndarray, algo: BilinearAlgorithm, *,
                   padding: str = "SAME", interpret: bool = True
                   ) -> jnp.ndarray:
     """Unquantized kernel path (transform -> f32 tdmm -> inverse)."""
-    bt = jnp.asarray(algo.bt(), x.dtype)
-    at = jnp.asarray(algo.at(), x.dtype)
+    bt, _, at = c2d.transform_matrices(algo, x.dtype.name)
     t = algo.t
     tiles, geom = extract_tiles(x, algo, padding)
     tx = sfc_transform(tiles, bt, interpret=interpret)

@@ -60,6 +60,7 @@ grouping) and is regression-tested against them.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Optional, Tuple
 
@@ -115,19 +116,9 @@ def grouping(B: int, nH: int, rows_per_step: int) -> Tuple[int, int]:
     return imgs, rows
 
 
-def fused_vmem_bytes(algo: BilinearAlgorithm, n_w: int, w_padded: int,
-                     kb: int, cb: int, *, n_k: int = 1, rows: int = 1,
-                     imgs: int = 1, cache_xq: bool = False,
-                     double_buffer: bool = False) -> int:
-    """Per-grid-step VMEM footprint of the fused kernel, in bytes.
-
-    Reproduces the module docstring's budget table term by term, scaled
-    by the (imgs, rows) grouping: input strip group (doubled when
-    double-buffered), the per-strip row-transform intermediate, the int8
-    quantized-strip matmul LHS, the optional full-K xq cache, the weight
-    k-block, the int32 accumulator, and the output strip group.
-    """
-    t, M, L = algo.t, algo.M, algo.L
+def _vmem_bytes(t: int, M: int, L: int, n_w: int, w_padded: int,
+                kb: int, cb: int, *, n_k: int, rows: int, imgs: int,
+                cache_xq: bool, double_buffer: bool) -> int:
     P = t * t
     span = (rows - 1) * M + L
     cols = imgs * rows * n_w               # tile columns folded per step
@@ -141,6 +132,23 @@ def fused_vmem_bytes(algo: BilinearAlgorithm, n_w: int, w_padded: int,
     acc = P * cols * cb * 4                # int32
     out = imgs * rows * M * n_w * M * cb * 4
     return strip + row_xform + xq + xq_cache + weights + acc + out
+
+
+def fused_vmem_bytes(algo: BilinearAlgorithm, n_w: int, w_padded: int,
+                     kb: int, cb: int, *, n_k: int = 1, rows: int = 1,
+                     imgs: int = 1, cache_xq: bool = False,
+                     double_buffer: bool = False) -> int:
+    """Per-grid-step VMEM footprint of the fused kernel, in bytes.
+
+    Reproduces the module docstring's budget table term by term, scaled
+    by the (imgs, rows) grouping: input strip group (doubled when
+    double-buffered), the per-strip row-transform intermediate, the int8
+    quantized-strip matmul LHS, the optional full-K xq cache, the weight
+    k-block, the int32 accumulator, and the output strip group.
+    """
+    return _vmem_bytes(algo.t, algo.M, algo.L, n_w, w_padded, kb, cb,
+                       n_k=n_k, rows=rows, imgs=imgs, cache_xq=cache_xq,
+                       double_buffer=double_buffer)
 
 
 def auto_rows_per_step(algo: BilinearAlgorithm, B: int, nH: int, n_w: int,
@@ -161,6 +169,197 @@ def auto_rows_per_step(algo: BilinearAlgorithm, B: int, nH: int, n_w: int,
                 <= VMEM_LIMIT_BYTES:
             return g
     return 1
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedGeometry:
+    """The complete static launch geometry of one fused-kernel call.
+
+    This is THE description of the grid, blocking, strip reads, and
+    scratch allocations — derived once by :func:`fused_geometry` and
+    consumed both by :func:`sfc_fused_conv2d` (to build the launch) and
+    by the static resource checker (``repro.analysis.kernel_checks``) and
+    the serving batcher, so out-of-kernel consumers never re-derive (and
+    silently diverge from) the kernel's own arithmetic.
+
+    Shapes are post-padding: ``x_rows``/``w_padded`` are the padded input
+    extents the strip index maps read against, ``Cp``/``Op`` the padded
+    channel extents.  ``rows_per_step`` is the *resolved* grouping (never
+    None).  For depthwise launches ``n_k == 1``, ``kb == cb`` (the shared
+    channel block), and ``cache_xq``/``double_buffer`` are forced off —
+    there is no reduction to block and no cross-block strip reuse.
+    """
+
+    # algorithm tile geometry
+    t: int
+    M: int
+    L: int
+    # problem extents (padding already applied where noted)
+    B: int
+    C: int
+    Cout: int
+    nH: int                  # tile rows per image
+    nW: int                  # tile cols per image
+    out_h: int               # unpadded output extents
+    out_w: int
+    x_rows: int              # padded input rows incl. grouped-grid pad
+    w_padded: int            # padded input cols (Wp)
+    depthwise: bool
+    # channel blocking
+    kb: int                  # C_in k-block (== cb for depthwise)
+    Cp: int                  # C padded to a multiple of kb
+    n_k: int
+    cb: int                  # C_out block
+    Op: int                  # Cout padded to a multiple of cb
+    n_o: int
+    # grid batching
+    rows_per_step: int       # resolved grouping request
+    imgs: int                # whole images folded per step
+    rows: int                # tile-rows folded per step
+    g_h: int                 # strip groups per image column
+    g_b: int                 # image groups (B // imgs)
+    nH_p: int                # g_h * rows
+    span: int                # input rows read per strip group
+    grid0: int               # g_b * g_h
+    # features
+    cache_xq: bool
+    double_buffer: bool
+    # double-buffer pipeline constants (the kernel's two-slot DMA scheme)
+    db_slots: int = 2
+    db_prefetch_distance: int = 1
+
+    # ---- derived ----
+    @property
+    def P(self) -> int:
+        return self.t * self.t
+
+    @property
+    def cols(self) -> int:
+        """Tile columns stacked into the matmul LHS per grid step."""
+        return self.imgs * self.rows * self.nW
+
+    @property
+    def grid(self) -> Tuple[int, ...]:
+        return (self.grid0, self.n_o) if self.depthwise \
+            else (self.grid0, self.n_o, self.n_k)
+
+    @property
+    def rmw_axis(self) -> Optional[int]:
+        """Grid axis allowed to read-modify-write the int32 accumulator
+        scratch (the innermost C_in reduction axis); None when the launch
+        carries no accumulator (depthwise)."""
+        return None if self.depthwise else len(self.grid) - 1
+
+    def vmem_bytes(self) -> int:
+        """Per-grid-step VMEM footprint of THIS geometry (same terms as
+        :func:`fused_vmem_bytes`, evaluated on the resolved fields)."""
+        return _vmem_bytes(self.t, self.M, self.L, self.nW, self.w_padded,
+                           self.kb, self.cb, n_k=self.n_k, rows=self.rows,
+                           imgs=self.imgs, cache_xq=self.cache_xq,
+                           double_buffer=self.double_buffer)
+
+    # ---- strip reads (the Unblocked index map / manual DMA source) ----
+    @property
+    def strip_shape(self) -> Tuple[int, int, int, int]:
+        return (self.imgs, self.span, self.w_padded, self.kb)
+
+    def strip_offset(self, i: int, k: int = 0
+                     ) -> Tuple[int, int, int, int]:
+        """Element offsets of grid step (i, ·, k)'s input strip group —
+        the same arithmetic as the kernel's Unblocked index map and its
+        manual-DMA ``_coords`` helper."""
+        return ((i // self.g_h) * self.imgs,
+                (i % self.g_h) * self.rows * self.M, 0, k * self.kb)
+
+    @property
+    def x_extents(self) -> Tuple[int, int, int, int]:
+        """HBM extents of the padded input the strip reads index into."""
+        return (self.B, self.x_rows, self.w_padded, self.Cp)
+
+    def out_index(self, i: int, j: int, k: int = 0
+                  ) -> Tuple[int, int, int, int]:
+        """Output BlockSpec block index for grid step (i, j, k).  Must be
+        independent of ``k``: the int32 accumulator spans all k-blocks and
+        only the last one writes the block."""
+        del k
+        return (i // self.g_h, i % self.g_h, 0, j)
+
+    def db_slot(self, s_idx: int) -> int:
+        """DMA landing slot of strip-sequence entry ``s_idx``."""
+        return s_idx % self.db_slots
+
+    def scratch_shapes(self) -> Tuple[Tuple[str, Tuple[int, ...], str], ...]:
+        """(name, shape, dtype) of every VMEM scratch the launch allocates,
+        in ``pallas_call`` order."""
+        out = []
+        if not self.depthwise:
+            out.append(("acc", (self.P, self.cols, self.cb), "int32"))
+        if self.cache_xq:
+            out.append(("xq_cache", (self.n_k, self.P, self.cols, self.kb),
+                        "int8"))
+        if self.double_buffer:
+            out.append(("db_buf", (self.db_slots, self.imgs, self.span,
+                                   self.w_padded, self.kb), "float32"))
+        return tuple(out)
+
+
+def fused_geometry(algo: BilinearAlgorithm, B: int, H: int, W: int,
+                   C: int, Cout: int, *, padding: str = "SAME",
+                   k_block: Optional[int] = K_BLOCK,
+                   cout_block: int = COUT_BLOCK,
+                   rows_per_step: Optional[int] = 1,
+                   double_buffer: bool = False,
+                   depthwise: bool = False) -> FusedGeometry:
+    """Resolve the launch geometry :func:`sfc_fused_conv2d` will use.
+
+    Pure integer arithmetic on static shapes — safe to call from the
+    planner, the autotuner's pre-flight checker, and the serving batcher
+    without touching jax.  ``rows_per_step=None`` resolves through
+    :func:`auto_rows_per_step` exactly as the kernel wrapper does.
+    """
+    t, M, R, L = algo.t, algo.M, algo.R, algo.L
+    lo_h, hi_h, out_h = c2d.pad_amounts(H, M, R, padding)
+    lo_w, hi_w, out_w = c2d.pad_amounts(W, M, R, padding)
+    xp_h = H + lo_h + hi_h
+    Wp = W + lo_w + hi_w
+    nH = (xp_h - (R - 1)) // M
+    nW = (Wp - (R - 1)) // M
+    if depthwise:
+        cb = min(cout_block, _round_up(C, 8))
+        Cp = _round_up(C, cb)
+        kb, n_k = cb, 1
+        Op, n_o = Cp, Cp // cb
+        cache_xq = double_buffer = False
+        if rows_per_step is None:
+            rows_per_step = auto_rows_per_step(algo, B, nH, nW, Wp, cb, cb,
+                                               n_k=1, n_o=n_o)
+    else:
+        kb = _round_up(C, 8) if k_block is None \
+            else min(k_block, _round_up(C, 8))
+        Cp = _round_up(C, kb)
+        cb = min(cout_block, _round_up(Cout, 8))
+        Op = _round_up(Cout, cb)
+        n_k = Cp // kb
+        n_o = Op // cb
+        if rows_per_step is None:
+            rows_per_step = auto_rows_per_step(
+                algo, B, nH, nW, Wp, kb, cb, n_k=n_k, n_o=n_o,
+                double_buffer=double_buffer)
+    imgs, rows = grouping(B, nH, rows_per_step)
+    g_h = -(-nH // rows)
+    nH_p = g_h * rows
+    g_b = B // imgs                        # imgs divides B by construction
+    span = (rows - 1) * M + L
+    cache_xq = False if depthwise \
+        else cache_fits(n_o, n_k, t * t, imgs * rows * nW, kb)
+    return FusedGeometry(
+        t=t, M=M, L=L, B=B, C=C, Cout=Cout, nH=nH, nW=nW,
+        out_h=out_h, out_w=out_w,
+        x_rows=max(xp_h, (nH_p - 1) * M + L), w_padded=Wp,
+        depthwise=depthwise, kb=kb, Cp=Cp, n_k=n_k, cb=cb, Op=Op, n_o=n_o,
+        rows_per_step=rows_per_step, imgs=imgs, rows=rows, g_h=g_h,
+        g_b=g_b, nH_p=nH_p, span=span, grid0=g_b * g_h,
+        cache_xq=cache_xq, double_buffer=double_buffer)
 
 
 def _quantize_strip_group(xg, bt, s, qmax, *, imgs: int, rows: int,
@@ -395,43 +594,36 @@ def sfc_fused_conv2d(x: jnp.ndarray, wq: jnp.ndarray,
     nH = (xp.shape[1] - (R - 1)) // M
     nW = (xp.shape[2] - (R - 1)) // M
     Wp = xp.shape[2]
+    # the ONE geometry derivation (grid, channel blocking, grouping, strip
+    # spans, scratch set) — shared verbatim with the static resource
+    # checker (repro.analysis.kernel_checks) and the serving batcher
+    geom = fused_geometry(algo, B, H, W, C, Cout, padding=padding,
+                          k_block=k_block, cout_block=cout_block,
+                          rows_per_step=rows_per_step,
+                          double_buffer=double_buffer, depthwise=depthwise)
     if depthwise:
-        return _fused_depthwise(xp, wq, act_scale, w_scale, algo,
+        return _fused_depthwise(xp, wq, act_scale, w_scale, algo, geom,
                                 out_h=out_h, out_w=out_w, bits=bits,
-                                interpret=interpret, cout_block=cout_block,
-                                rows_per_step=rows_per_step, nH=nH, nW=nW)
+                                interpret=interpret)
 
-    # channel blocking (both dims padded with zeros; zero channels quantize
-    # to zero / carry zero scales, so they contribute nothing)
-    kb = _round_up(C, 8) if k_block is None else min(k_block, _round_up(C, 8))
-    Cp = _round_up(C, kb)
-    cb = min(cout_block, _round_up(Cout, 8))
-    Op = _round_up(Cout, cb)
-    n_k = Cp // kb
-    n_o = Op // cb
-
-    if rows_per_step is None:
-        rows_per_step = auto_rows_per_step(
-            algo, B, nH, nW, Wp, kb, cb, n_k=n_k, n_o=n_o,
-            double_buffer=double_buffer)
-    imgs, rows = grouping(B, nH, rows_per_step)
-    g_h = -(-nH // rows)                   # strip groups per image column
-    nH_p = g_h * rows
-    g_b = B // imgs                        # imgs divides B by construction
-    span = (rows - 1) * M + L
-    grid0 = g_b * g_h
+    kb, Cp, cb, Op = geom.kb, geom.Cp, geom.cb, geom.Op
+    n_k, n_o = geom.n_k, geom.n_o
+    imgs, rows, g_h, nH_p = geom.imgs, geom.rows, geom.g_h, geom.nH_p
+    span, grid0 = geom.span, geom.grid0
 
     # grouped-grid padding: strips of the last group read rows up to
     # (nH_p - 1) * M + L; the extra zero rows produce output rows that are
-    # sliced off below
-    pad_h = (nH_p - 1) * M + L - xp.shape[1]
-    xp = jnp.pad(xp, ((0, 0), (0, max(0, pad_h)), (0, 0), (0, Cp - C)))
+    # sliced off below.  Channel dims pad with zeros; zero channels
+    # quantize to zero / carry zero scales, so they contribute nothing.
+    xp = jnp.pad(xp, ((0, 0), (0, geom.x_rows - xp.shape[1]), (0, 0),
+                      (0, Cp - C)))
     wqp = jnp.pad(wq, ((0, 0), (0, Cp - C), (0, Op - Cout)))
     sw = jnp.pad(w_scale.reshape(P, Cout).astype(jnp.float32),
                  ((0, 0), (0, Op - Cout)))
 
-    cols = imgs * rows * nW
-    cache_xq = cache_fits(n_o, n_k, P, cols, kb)
+    cols = geom.cols
+    cache_xq = geom.cache_xq
+    bt_f32, _, at_f32 = c2d.transform_matrices(algo, "float32")
     kern = functools.partial(
         _fused_kernel, n_w=nW, M=M, L=L, bits=bits, n_k=n_k, n_o=n_o,
         grid0=grid0, g_h=g_h, imgs=imgs, rows=rows, span=span, kb=kb,
@@ -472,46 +664,38 @@ def sfc_fused_conv2d(x: jnp.ndarray, wq: jnp.ndarray,
                                        jnp.float32),
         scratch_shapes=scratch_shapes,
         interpret=interpret,
-    )(jnp.asarray(algo.bt(), jnp.float32), jnp.asarray(algo.at(), jnp.float32),
-      act_scale.astype(jnp.float32), sw, xp, wqp)
+    )(bt_f32, at_f32, act_scale.astype(jnp.float32), sw, xp, wqp)
     return out[:, :out_h, :out_w, :Cout]
 
 
-def _fused_depthwise(xp, wq, act_scale, w_scale, algo, *, out_h, out_w,
-                     bits, interpret, cout_block, rows_per_step, nH, nW):
+def _fused_depthwise(xp, wq, act_scale, w_scale, algo, geom, *, out_h,
+                     out_w, bits, interpret):
     """Depthwise half of :func:`sfc_fused_conv2d` (input already padded).
 
     Grid = (strip groups, channel blocks): the channel axis is both the
     input and the output blocking (zero-padded channels quantize to zero
-    and carry zero scales, contributing nothing).
+    and carry zero scales, contributing nothing).  ``geom`` carries the
+    resolved :class:`FusedGeometry` (``rows_per_step`` auto-resolution
+    over-counts depthwise slightly — the dense budget includes a weight
+    k-block and an int32 accumulator the dw kernel does not allocate — a
+    safe bound, never an overflow).
     """
     B = xp.shape[0]
     C = wq.shape[2]
     t, M, L = algo.t, algo.M, algo.L
     P = t * t
     Wp = xp.shape[2]
-    cb = min(cout_block, _round_up(C, 8))
-    Cp = _round_up(C, cb)
-    n_c = Cp // cb
+    nH, nW = geom.nH, geom.nW
+    cb, Cp, n_c = geom.cb, geom.Cp, geom.n_o
+    imgs, rows, g_h = geom.imgs, geom.rows, geom.g_h
+    span, grid0 = geom.span, geom.grid0
 
-    if rows_per_step is None:
-        # the dense budget helper over-counts depthwise slightly (it
-        # budgets a weight k-block and an int32 accumulator the dw kernel
-        # does not allocate) — a safe bound, never an overflow
-        rows_per_step = auto_rows_per_step(algo, B, nH, nW, Wp, cb, cb,
-                                           n_k=1, n_o=n_c)
-    imgs, rows = grouping(B, nH, rows_per_step)
-    g_h = -(-nH // rows)
-    nH_p = g_h * rows
-    g_b = B // imgs
-    span = (rows - 1) * M + L
-    grid0 = g_b * g_h
-
-    pad_h = (nH_p - 1) * M + L - xp.shape[1]
-    xp = jnp.pad(xp, ((0, 0), (0, max(0, pad_h)), (0, 0), (0, Cp - C)))
+    xp = jnp.pad(xp, ((0, 0), (0, geom.x_rows - xp.shape[1]), (0, 0),
+                      (0, Cp - C)))
     wqp = jnp.pad(wq.reshape(P, C), ((0, 0), (0, Cp - C)))
     sw = jnp.pad(w_scale.reshape(P, C).astype(jnp.float32),
                  ((0, 0), (0, Cp - C)))
+    bt_f32, _, at_f32 = c2d.transform_matrices(algo, "float32")
 
     kern = functools.partial(_fused_dw_kernel, n_w=nW, M=M, L=L, bits=bits,
                              imgs=imgs, rows=rows)
@@ -535,9 +719,8 @@ def _fused_depthwise(xp, wq, act_scale, w_scale, algo, *, out_h, out_w,
         out_specs=pl.BlockSpec((imgs, rows * M, nW * M, cb),
                                lambda i, j, _gh=g_h: (i // _gh, i % _gh,
                                                       0, j)),
-        out_shape=jax.ShapeDtypeStruct((B, nH_p * M, nW * M, Cp),
+        out_shape=jax.ShapeDtypeStruct((B, geom.nH_p * M, nW * M, Cp),
                                        jnp.float32),
         interpret=interpret,
-    )(jnp.asarray(algo.bt(), jnp.float32), jnp.asarray(algo.at(), jnp.float32),
-      act_scale.astype(jnp.float32), sw, xp, wqp)
+    )(bt_f32, at_f32, act_scale.astype(jnp.float32), sw, xp, wqp)
     return out[:, :out_h, :out_w, :C]

@@ -46,6 +46,18 @@ def _transform_quant_kernel(bt_ref, scale_ref, x_ref, o_ref, *, bits: int):
     o_ref[...] = q.astype(o_ref.dtype)
 
 
+def _as_operand_dtype(mat: jnp.ndarray, dtype) -> jnp.ndarray:
+    """No-op when ``mat`` already matches the operand dtype.
+
+    Callers on the hot path (``repro.kernels.ops``, ``repro.api.backends``)
+    pass prepare-time matrices from ``repro.core.conv2d.transform_matrices``
+    so this never casts there; the fallback cast only covers direct callers
+    handing a mismatched matrix, preserving the old call-time behaviour
+    bit for bit.
+    """
+    return mat if mat.dtype == jnp.dtype(dtype) else mat.astype(dtype)
+
+
 def _pad_to(x, axis, mult):
     pad = (-x.shape[axis]) % mult
     if pad == 0:
@@ -79,7 +91,7 @@ def sfc_transform(tiles: jnp.ndarray, bt: jnp.ndarray, *,
                                lambda i, j: (i, 0, 0, j)),
         out_shape=jax.ShapeDtypeStruct((nTp, t, t, Cp), tiles.dtype),
         interpret=interpret,
-    )(bt.astype(tiles.dtype), tiles)
+    )(_as_operand_dtype(bt, tiles.dtype), tiles)
     return out[:nT, :, :, :C]
 
 
@@ -110,5 +122,6 @@ def sfc_transform_quantize(tiles: jnp.ndarray, bt: jnp.ndarray,
                                lambda i, j: (i, 0, 0, j)),
         out_shape=jax.ShapeDtypeStruct((nTp, t, t, Cp), jnp.int8),
         interpret=interpret,
-    )(bt.astype(tiles.dtype), scale.astype(tiles.dtype), tiles)
+    )(_as_operand_dtype(bt, tiles.dtype), _as_operand_dtype(scale, tiles.dtype),
+      tiles)
     return out[:nT, :, :, :C]

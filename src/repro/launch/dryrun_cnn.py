@@ -17,7 +17,6 @@ LM cells.
 import argparse
 import dataclasses
 import json
-import pathlib
 import time
 
 import jax

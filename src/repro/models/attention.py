@@ -10,7 +10,7 @@ sliding-window archs, giving O(window) memory at 500k contexts).
 from __future__ import annotations
 
 import functools
-from typing import Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,6 @@ use the direct path.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -10,7 +10,7 @@ Cache layouts (stacked over layers, scan-compatible):
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

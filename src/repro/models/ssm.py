@@ -12,7 +12,6 @@ ring buffer — this is what makes the ``long_500k`` cell sub-quadratic.
 """
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import jax

@@ -17,9 +17,7 @@ init_cache / decode_step — the launch layer jits these per (arch x shape).
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

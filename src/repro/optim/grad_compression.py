@@ -11,7 +11,7 @@ the int8 tensor).  Convergence is covered by tests/test_optim.py.
 """
 from __future__ import annotations
 
-from typing import Any, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

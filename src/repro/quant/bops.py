@@ -111,8 +111,11 @@ def fastconv_bops(wl: ConvWorkload, algo: BilinearAlgorithm,
     adds = algo.transform_addition_counts()
 
     if transform_bits is None:
-        row_l1 = max(int(sum(abs(v) for v in row)) for row in algo.BT)
-        transform_bits = wl.bits_act + max(1, math.ceil(math.log2(max(row_l1, 2))))
+        # single source of truth for transform-domain data width — the
+        # same bound repro.analysis.ranges certifies (bit-identical to
+        # the historical inline formula)
+        from repro.analysis import ranges
+        transform_bits = ranges.transform_bits_1d(algo, wl.bits_act)
     # 2-D separable input transform: rows then cols.
     input_adds = (adds["input"] * L + adds["input"] * t)  # per channel per tile
     input_cost = n_tiles * wl.C_in * input_adds * add_bops(transform_bits)

@@ -8,12 +8,13 @@ shapes never mix inside one dispatch, so each dispatch is one warm
 ``ConvSpec`` and one fused-kernel launch.
 
 :func:`fold_rows_per_step` is the serving-side view of the fused kernel's
-image-folding grid (``repro.kernels.sfc_fused.grouping``): given the
-batch the batcher formed, pick the ``rows_per_step`` that folds *whole
-images* — ideally the entire batch — into one grid step, walking down
-through the same VMEM-budget arithmetic (``fused_vmem_bytes``) the
-kernel's own auto-grouping uses, so the batcher never requests a grid
-step the kernel would spill on.
+image-folding grid: given the batch the batcher formed, pick the
+``rows_per_step`` that folds *whole images* — ideally the entire batch —
+into one grid step.  The VMEM fit decision goes through the static
+resource checker (``repro.analysis.kernel_checks.fold_fits``), which
+resolves the exact launch geometry the kernel's own auto-grouping uses,
+so the batcher never requests a grid step the kernel would spill on and
+never imports kernel internals (the ARCH001 lint invariant).
 """
 from __future__ import annotations
 
@@ -115,10 +116,16 @@ def fold_rows_per_step(plan, batch_size: int) -> Optional[Tuple[int, int, int]]:
     unquantized, or a measured config that picked the staged datapath) —
     the dispatch then runs the plan as-is and batching still amortizes
     launch overhead, just not grid-step occupancy.
+
+    The VMEM fit decision delegates to the static resource checker
+    (``repro.analysis.kernel_checks.fold_fits``), which resolves the
+    exact launch geometry the kernel itself would use — the serving
+    layer never re-derives (and cannot diverge from) kernel blocking
+    arithmetic.
     """
+    from repro.analysis import kernel_checks
     from repro.api import tuning
     from repro.core import conv2d as c2d
-    from repro.kernels import sfc_fused as sf
     spec = plan.spec
     if plan.path != "fast" or plan.algorithm is None \
             or not spec.quant.enabled or spec.depthwise \
@@ -130,29 +137,19 @@ def fold_rows_per_step(plan, batch_size: int) -> Optional[Tuple[int, int, int]]:
     algo = plan.algorithm
     H, W = spec.spatial
     lo_h, hi_h, _ = c2d.pad_amounts(H, algo.M, algo.R, spec.padding)
-    lo_w, hi_w, _ = c2d.pad_amounts(W, algo.M, algo.R, spec.padding)
     nH = (H + lo_h + hi_h - (algo.R - 1)) // algo.M
-    nW = (W + lo_w + hi_w - (algo.R - 1)) // algo.M
-    Wp = W + lo_w + hi_w
     C, Cout = spec.in_channels, spec.out_channels
-    kb = sf._round_up(C, 8) if cfg.k_block is None \
-        else min(cfg.k_block, sf._round_up(C, 8))
-    n_k = sf._round_up(C, kb) // kb
-    cb = min(cfg.cout_block, sf._round_up(Cout, 8))
-    n_o = sf._round_up(Cout, cb) // cb
-    P = algo.t * algo.t
+    b = max(1, batch_size)
 
-    def fits(imgs: int, rows: int) -> bool:
-        cols = imgs * rows * nW
-        return sf.fused_vmem_bytes(
-            algo, nW, Wp, kb, cb, n_k=n_k, rows=rows, imgs=imgs,
-            cache_xq=sf.cache_fits(n_o, n_k, P, cols, kb),
-            double_buffer=cfg.double_buffer) <= sf.VMEM_LIMIT_BYTES
+    def fits(rows_per_step: int) -> bool:
+        return kernel_checks.fold_fits(
+            algo, cfg, b, H, W, C, Cout, padding=spec.padding,
+            rows_per_step=rows_per_step)
 
-    for imgs in _divisors_desc(max(1, batch_size)):
-        if fits(imgs, nH):
+    for imgs in _divisors_desc(b):
+        if fits(imgs * nH):
             return imgs * nH, imgs, nH
     for rows in (r for r in (8, 4, 2, 1) if r < nH):
-        if fits(1, rows):
+        if fits(rows):
             return rows, 1, rows
     return 1, 1, 1

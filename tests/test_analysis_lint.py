@@ -1,0 +1,118 @@
+"""repro.analysis.lint: architecture-invariant linter."""
+import pathlib
+import textwrap
+
+import pytest
+
+from repro.analysis import lint
+
+
+def _codes(findings):
+    return [f.code for f in findings]
+
+
+def test_installed_tree_is_clean():
+    findings = lint.run_lint(lint.source_root())
+    assert findings == [], [str(f) for f in findings]
+
+
+def test_arch001_kernel_import_outside_allowlist():
+    src = "from repro.kernels import sfc_fused as sf\n"
+    assert _codes(lint.lint_source(src, "serve/batcher.py")) == ["ARCH001"]
+    assert _codes(lint.lint_source(src, "train/trainer.py")) == ["ARCH001"]
+    assert _codes(lint.lint_source(
+        "import repro.kernels.ops\n", "models/cnn.py")) == ["ARCH001"]
+    assert _codes(lint.lint_source(
+        "from repro.distributed.conv_spmd import SpmdPallasBackend\n",
+        "serve/engine.py")) == ["ARCH001"]
+    # allowlisted layers may
+    for ok in ("api/backends.py", "kernels/ops.py",
+               "analysis/kernel_checks.py", "distributed/conv_spmd.py",
+               "testing.py"):
+        assert lint.lint_source(src, ok) == [], ok
+    # importing the sanctioned seams is fine anywhere
+    assert lint.lint_source("from repro.api import plan\n",
+                            "serve/engine.py") == []
+    assert lint.lint_source("from repro.distributed import sharding\n",
+                            "train/trainer.py") == []
+
+
+def test_time001_wall_clock_on_serving_paths():
+    src = "import time\nt0 = time.time()\n"
+    assert _codes(lint.lint_source(src, "serve/engine.py")) == ["TIME001"]
+    # perf_counter is the sanctioned clock; non-serve paths may wall-clock
+    assert lint.lint_source("import time\nt = time.perf_counter()\n",
+                            "serve/engine.py") == []
+    assert lint.lint_source(src, "train/trainer.py") == []
+
+
+def test_exc001_bare_except():
+    src = textwrap.dedent("""
+        try:
+            x = 1
+        except:
+            pass
+    """)
+    assert _codes(lint.lint_source(src, "quant/ptq.py")) \
+        == ["EXC001"]
+
+
+def test_exc002_silent_broad_except():
+    silent = textwrap.dedent("""
+        try:
+            x = 1
+        except Exception:
+            pass
+    """)
+    assert _codes(lint.lint_source(silent, "serve/engine.py")) == ["EXC002"]
+    # logging the failure is allowed
+    loud = textwrap.dedent("""
+        try:
+            x = 1
+        except Exception:
+            log("absorbed")
+    """)
+    assert lint.lint_source(loud, "serve/engine.py") == []
+    # narrow handlers are allowed even when silent
+    narrow = textwrap.dedent("""
+        try:
+            x = 1
+        except KeyError:
+            pass
+    """)
+    assert lint.lint_source(narrow, "serve/engine.py") == []
+
+
+def test_reg001_registration_outside_seams():
+    src = "register_algorithm('x', make)\n"
+    assert _codes(lint.lint_source(src, "models/cnn.py")) == ["REG001"]
+    assert _codes(lint.lint_source(
+        "registry.register_backend('gpu', b)\n",
+        "launch/serve.py")) == ["REG001"]
+    assert lint.lint_source(src, "api/registry.py") == []
+    assert lint.lint_source("register_backend('pallas', b)\n",
+                            "api/backends.py") == []
+
+
+def test_syntax_error_is_reported_not_raised():
+    findings = lint.lint_source("def broken(:\n", "core/x.py")
+    assert _codes(findings) == ["LNT000"]
+
+
+def test_run_lint_over_tmp_tree(tmp_path):
+    pkg = tmp_path / "repro"
+    (pkg / "serve").mkdir(parents=True)
+    (pkg / "api").mkdir()
+    (pkg / "serve" / "bad.py").write_text(
+        "import time\nfrom repro.kernels import ops\nt = time.time()\n")
+    (pkg / "api" / "good.py").write_text(
+        "from repro.kernels import ops\n")
+    findings = lint.run_lint(tmp_path)
+    assert sorted(_codes(findings)) == ["ARCH001", "TIME001"]
+    assert all(f.where.startswith("serve/bad.py") for f in findings)
+
+
+def test_finding_str_has_code_and_location():
+    f = lint.lint_source("x = time.time()\n", "serve/a.py")[0]
+    s = str(f)
+    assert "TIME001" in s and "serve/a.py:1" in s and "ERROR" in s
