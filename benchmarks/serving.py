@@ -14,12 +14,23 @@ service, and end-to-end latency, per-class SLO attainment, goodput
 (requests per dispatch AND images folded per fused grid step), serving
 cache hit rate, and the pad-to-bucket waste fraction.
 
+Two policy-comparison cell families ride along (ISSUE 9):
+
+  * **scheduler** — the same bursty mixed INTERACTIVE/BATCH schedule
+    (tight interactive deadline, calibrated so FCFS actually misses it
+    under backlog) served once FCFS and once EDF + a short aging hold:
+    the deadline-aware former must improve interactive SLO attainment
+    and p99 at the same arrival rate without shedding more;
+  * **aging** — a low-rate trickle served with aging off and on: the
+    hold window folds near-coincident arrivals into one fused grid
+    step, raising mean imgs-per-grid-step.
+
 Numbers on this host are interpret-mode Pallas on CPU — they rank
-serving policies (batching on/off, bucket tables, admission bounds)
-against each other and track the trajectory across PRs; they are not
-TPU latencies.  The artifact is merged, never overwritten, and a
-timestamped git-SHA entry rides ``trajectory`` like the table3/scaleout
-suites.
+serving policies (batching on/off, bucket tables, admission bounds,
+schedulers) against each other and track the trajectory across PRs;
+they are not TPU latencies.  The artifact is merged, never overwritten,
+and a timestamped git-SHA entry rides ``trajectory`` like the
+table3/scaleout suites.
 """
 from __future__ import annotations
 
@@ -46,7 +57,8 @@ def _git_sha() -> str:
         return "unknown"
 
 
-def _build_engine(cap: int, max_batch: int):
+def _build_engine(cap: int, max_batch: int, *, scheduler=None,
+                  shed: bool = False):
     import jax.numpy as jnp
 
     from repro.quant import INT8_FREQ
@@ -63,7 +75,7 @@ def _build_engine(cap: int, max_batch: int):
     # warm_compile can pre-trace ALL of them: live traffic never pays a
     # first-shape compile, and the measured tail is queueing, not XLA
     eng = Engine(w, table, max_batch=max_batch, round_batches=True,
-                 warm_compile=True)
+                 warm_compile=True, scheduler=scheduler, shed_expired=shed)
     workload = {"kernel": 3, "cin": cin, "cout": cout, "quant": "int8",
                 "buckets": [b.name for b in table.buckets],
                 "max_batch": max_batch}
@@ -75,7 +87,7 @@ def _drive(eng, events, log) -> Dict:
     plus wall-clock goodput."""
     import jax.numpy as jnp
 
-    from repro.serve import RejectedError
+    from repro.serve import RejectedError, ShedError
 
     rng = np.random.RandomState(42)
     # inputs pre-generated so submit-time work is only the submit
@@ -93,13 +105,15 @@ def _drive(eng, events, log) -> Dict:
     wall_s = time.perf_counter() - t0
     eng.stop()
 
-    good = rejected = 0
+    good = rejected = shed = 0
     for f, ev in futures:
         try:
             r = f.result(timeout=0)
             good += int(r.deadline_met)
         except RejectedError:
             rejected += 1
+        except ShedError:
+            shed += 1                  # goodput-preserving deadline shed
     snap = eng.snapshot()
     snap["wall_s"] = wall_s
     snap["goodput_rps"] = good / wall_s if wall_s > 0 else 0.0
@@ -109,6 +123,7 @@ def _drive(eng, events, log) -> Dict:
 
 def _row(process: str, rate_hz: float, n: int, snap: Dict) -> Dict:
     occ = snap["batch_occupancy"]
+    int_e2e = snap["e2e_by_class"].get("interactive", {})
     return {
         "process": process, "rate_hz": rate_hz, "requests": n,
         "wall_s": snap["wall_s"],
@@ -120,6 +135,11 @@ def _row(process: str, rate_hz: float, n: int, snap: Dict) -> Dict:
         "goodput_rps": snap["goodput_rps"],
         "slo_attainment": snap["slo_attainment"],
         "slo": snap["slo"],
+        "scheduler": snap["scheduler"],
+        "interactive_p99_ms": int_e2e.get("p99_ms"),
+        "shed": snap["counters"]["shed"],
+        "aged_dispatches": snap["counters"]["aged_dispatches"],
+        "hold_ms_mean": snap["hold_ms"]["mean_ms"],
         "occupancy_mean": occ["mean"], "occupancy_max": occ["max"],
         "imgs_per_step_mean": occ["imgs_per_step_mean"],
         "cache_hit_rate": snap["serving_cache"]["hit_rate"],
@@ -134,7 +154,8 @@ def run(log=print, bench_path: Optional[str] = None, *,
         smoke: bool = False) -> Dict:
     import jax
 
-    from repro.serve import default_shape_mix, synthesize
+    from repro.serve import (SchedulerPolicy, SLOClass, default_shape_mix,
+                             synthesize)
 
     bench_path = bench_path or BENCH_PATH
     cap = int(os.environ.get("REPRO_BENCH_SPATIAL_CAP", "28"))
@@ -144,28 +165,72 @@ def run(log=print, bench_path: Optional[str] = None, *,
     # pushes utilization past 1 so queueing, continuous-batch folding,
     # and SLO misses actually appear in the tail
     rates = [200.0] if smoke else [20.0, 200.0]
+    low_rate = 20.0
     max_batch = 4 if smoke else 8
     mix = default_shape_mix(cap)
 
-    cells = [("poisson", r) for r in rates] + [("bursty", rates[-1])]
-    rows: List[Dict] = []
-    for process, rate in cells:
+    def _cell(process, rate, row_n, *, cell, scheduler=None, shed=False,
+              slo_mix=None, seed=7):
         # a fresh engine per cell: rows are independent measurements, and
         # warm (plan + calibrate + prepare) stays off the request path
-        eng, workload = _build_engine(cap, max_batch)
-        events = synthesize(n, process=process, rate_hz=rate, mix=mix,
-                            seed=7)
+        eng, workload = _build_engine(cap, max_batch, scheduler=scheduler,
+                                      shed=shed)
+        kw = {} if slo_mix is None else {"slo_mix": slo_mix}
+        events = synthesize(row_n, process=process, rate_hz=rate, mix=mix,
+                            seed=seed, **kw)
         snap = _drive(eng, events, log)
-        row = _row(process, rate, n, snap)
-        rows.append(row)
-        log(f"serving {process}@{rate:.0f}rps: "
+        row = _row(process, rate, row_n, snap)
+        row["cell"] = cell
+        sched = row["scheduler"]
+        int_p99 = row["interactive_p99_ms"]
+        log(f"serving[{cell}] {process}@{rate:.0f}rps "
+            f"{sched['kind']}/hold={sched['max_hold_ms']:.0f}ms: "
             f"p50={row['p50_ms']:.0f}ms p95={row['p95_ms']:.0f}ms "
             f"p99={row['p99_ms']:.0f}ms goodput={row['goodput_rps']:.1f}rps "
             f"slo={row['slo_attainment']:.2f} "
+            f"int_p99={int_p99 if int_p99 is None else round(int_p99)}ms "
+            f"shed={row['shed']} "
             f"occ={row['occupancy_mean']:.2f} "
             f"imgs/step={row['imgs_per_step_mean']:.2f} "
             f"hit={row['cache_hit_rate']:.2f} "
             f"waste={row['pad_waste_frac']:.2f}")
+        return row, workload
+
+    rows: List[Dict] = []
+    for process, rate in [("poisson", r) for r in rates] \
+            + [("bursty", rates[-1])]:
+        row, workload = _cell(process, rate, n, cell="baseline")
+        rows.append(row)
+
+    # ---- scheduler comparison: FCFS vs EDF(+aging) on mixed traffic ----
+    # A 600rps burst of 8n requests queues several dispatches' worth of
+    # backlog; the interactive deadline is calibrated to sit between
+    # the EDF interactive tail (~40-50ms warm: urgent requests jump the
+    # queue) and the FCFS makespan (~2-4x that: interactive requests
+    # drain in arrival order behind batch-class peers), so it is met
+    # only by serving out of arrival order.  Both cells see the
+    # identical arrival schedule, and shedding is on: the backstop EDF
+    # is supposed to make rare.
+    tight_mix = ((SLOClass("interactive",
+                           deadline_ms=45.0 if smoke else 150.0), 0.5),
+                 (SLOClass("batch", deadline_ms=20_000.0), 0.5))
+    for sched in (SchedulerPolicy(kind="fcfs"),
+                  SchedulerPolicy(kind="edf", max_hold_ms=20.0)):
+        row, workload = _cell("bursty", 600.0, 8 * n, cell="scheduler",
+                              scheduler=sched, shed=True,
+                              slo_mix=tight_mix, seed=7)
+        rows.append(row)
+
+    # ---- batch aging: fold a low-rate trickle into fused grid steps ----
+    # At low rates the queue is usually length-0/1, so the pre-aging former
+    # dispatched 1-image slivers; a hold window bounded by head slack
+    # trades a little latency for fused-grid occupancy.
+    for hold in (0.0, 75.0):
+        row, workload = _cell(
+            "poisson", low_rate, n, cell="aging",
+            scheduler=SchedulerPolicy(kind="edf", max_hold_ms=hold),
+            seed=11)
+        rows.append(row)
 
     # accumulate, never overwrite: other suites' keys and the cross-PR
     # trajectory survive this run (same merge discipline as table3)
@@ -189,10 +254,13 @@ def run(log=print, bench_path: Optional[str] = None, *,
         .isoformat(timespec="seconds"),
         "git_sha": _git_sha(),
         "platform": jax.default_backend(), "jax": jax.__version__,
-        "serving": [{k: r[k] for k in
-                     ("process", "rate_hz", "p50_ms", "p95_ms", "p99_ms",
-                      "goodput_rps", "slo_attainment", "occupancy_mean",
-                      "imgs_per_step_mean", "cache_hit_rate")}
+        "serving": [{**{k: r[k] for k in
+                        ("cell", "process", "rate_hz", "p50_ms", "p95_ms",
+                         "p99_ms", "goodput_rps", "slo_attainment",
+                         "interactive_p99_ms", "shed", "occupancy_mean",
+                         "imgs_per_step_mean", "cache_hit_rate")},
+                     "scheduler": f"{r['scheduler']['kind']}"
+                                  f"+{r['scheduler']['max_hold_ms']:.0f}ms"}
                     for r in rows],
     }
     bench.setdefault("trajectory", []).append(entry)

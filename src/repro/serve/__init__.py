@@ -10,7 +10,8 @@ latency lands in streaming histograms with per-class SLO attainment
 (``traffic``).  The LM decode launcher's slot loop lives here too
 (``slots``) so ``repro.launch.serve`` stays a thin CLI.
 """
-from repro.serve.batcher import (AdmissionPolicy, Batch, BatchQueue,
+from repro.serve.batcher import (EDF, FCFS, AdmissionPolicy, Batch,
+                                 BatchQueue, SchedulerPolicy,
                                  fold_rows_per_step)
 from repro.serve.bucketing import Bucket, BucketTable
 from repro.serve.engine import Engine, results
@@ -25,7 +26,8 @@ from repro.serve.types import (BATCH, INTERACTIVE, SLO_CLASSES,
 
 __all__ = [
     "Engine", "results",
-    "AdmissionPolicy", "Batch", "BatchQueue", "fold_rows_per_step",
+    "AdmissionPolicy", "Batch", "BatchQueue", "SchedulerPolicy",
+    "FCFS", "EDF", "fold_rows_per_step",
     "Bucket", "BucketTable",
     "LatencyHistogram", "MetricsRegistry",
     "SlotLoop", "SlotLoopStats",

@@ -108,11 +108,24 @@ class BucketTable:
     @staticmethod
     def crop_output(y, h: int, w: int, bucket: Bucket):
         """Crop one bucket-shaped output back to the request's own output
-        extent (stride-aware: the bucketed grid is a superset)."""
+        extent (stride-aware: the bucketed grid is a superset).
+
+        Raises instead of returning an empty tensor: a sub-kernel VALID
+        request has *no* output rows (``(h - r)//s + 1 <= 0``), and
+        silently serving a 0-row crop is data loss the caller cannot
+        distinguish from success — admission (``AdmissionPolicy``)
+        rejects such shapes up front, so reaching this is a bug.
+        """
         s = bucket.spec.stride
         if bucket.spec.padding == "SAME":
             oh, ow = -(-h // s), -(-w // s)
         else:                                 # VALID
             r = bucket.spec.kernel_size
             oh, ow = (h - r) // s + 1, (w - r) // s + 1
+        if oh <= 0 or ow <= 0:
+            raise ValueError(
+                f"empty output crop for request ({h}, {w}) under bucket "
+                f"{bucket.name}: {bucket.spec.padding} {bucket.spec.kernel_size}"
+                f"x{bucket.spec.kernel_size} stride {s} yields ({oh}, {ow}) "
+                f"— admission should have rejected this shape")
         return y[:oh, :ow, :]

@@ -13,11 +13,14 @@ workload's weights.  The lifecycle:
     (bucket fit + queue bound) and returns a ``concurrent.futures.Future``
     immediately — the caller never blocks on the batch;
   * a dispatch thread (:meth:`start`; or deterministic :meth:`step` calls
-    in tests) drains the queue one same-bucket batch at a time, pads each
-    request to the bucket, stacks them, and folds the whole batch into
-    the fused kernel's ``rows_per_step`` image-folding grid
-    (``batcher.fold_rows_per_step``) — ≥2 concurrent requests ride ONE
-    grid step, which is where continuous batching actually meets the MXU;
+    in tests) drains the queue one same-bucket batch at a time — *which*
+    batch is the engine's ``SchedulerPolicy`` (FCFS head-of-line, or
+    earliest-deadline-first with optional batch aging: see
+    ``batcher.SchedulerPolicy``) — pads each request to the bucket,
+    stacks them, and folds the whole batch into the fused kernel's
+    ``rows_per_step`` image-folding grid (``batcher.fold_rows_per_step``)
+    — ≥2 concurrent requests ride ONE grid step, which is where
+    continuous batching actually meets the MXU;
   * every result is cropped back to the request's own output extent and
     resolved into its future with full timing/SLO accounting.
 
@@ -67,7 +70,7 @@ from repro import faults
 from repro.api import resilience
 from repro.api import serving_cache as sc
 from repro.serve.batcher import (AdmissionPolicy, Batch, BatchQueue,
-                                 fold_rows_per_step)
+                                 SchedulerPolicy, fold_rows_per_step)
 from repro.serve.bucketing import Bucket, BucketTable
 from repro.serve.metrics import MetricsRegistry
 from repro.serve.types import (BATCH, QuarantinedError, Request,
@@ -86,6 +89,7 @@ class Engine:
                  clock: Callable[[], float] = time.perf_counter,
                  calib_seed: int = 0, round_batches: bool = False,
                  warm_compile: bool = False, shed_expired: bool = False,
+                 scheduler: Optional[SchedulerPolicy] = None,
                  max_dispatch_retries: int = 2,
                  retry_backoff_s: float = 0.02):
         self.w = w
@@ -98,7 +102,8 @@ class Engine:
         self.cache = cache if cache is not None else sc.ServingCache()
         self.metrics = metrics or MetricsRegistry()
         self.clock = clock
-        self.queue = BatchQueue()
+        self.scheduler = scheduler or SchedulerPolicy()
+        self.queue = BatchQueue(clock=clock)
         self._act_scales: Dict[str, Optional[jnp.ndarray]] = {}
         self.round_batches = round_batches
         self.shed_expired = shed_expired
@@ -190,16 +195,28 @@ class Engine:
         self.metrics.inc("submitted")
         h, w = req.shape
         bucket = self.buckets.bucket_for(h, w)
-        ok, reason = self.admission.admit(req, bucket, self.queue.depth())
+        ok, reason = self.admission.admit_shape(req, bucket)
         if not ok:
             self.metrics.inc("rejected")
             req.future.set_exception(RejectedError(reason))
             return req.future
         req.bucket_name = bucket.name
-        self.metrics.inc("admitted")
         with self._inflight_zero:
             self._inflight += 1
-        self.queue.put(req, bucket)
+        # the depth bound is enforced atomically INSIDE the queue lock —
+        # a sampled depth() followed by put() lets concurrent submitters
+        # overshoot the admission bound (TOCTOU)
+        if not self.queue.put_if_below(req, bucket,
+                                       self.admission.max_queue_depth):
+            with self._inflight_zero:
+                self._inflight -= 1
+                if self._inflight == 0:
+                    self._inflight_zero.notify_all()
+            self.metrics.inc("rejected")
+            req.future.set_exception(RejectedError(
+                self.admission.depth_reason(self.admission.max_queue_depth)))
+            return req.future
+        self.metrics.inc("admitted")
         return req.future
 
     # ------------------------------------------------------------------
@@ -207,15 +224,20 @@ class Engine:
     # ------------------------------------------------------------------
     def step(self, timeout: Optional[float] = 0) -> int:
         """Drain ONE batch synchronously; returns requests resolved
-        (served, shed, or quarantined — 0 when the queue stayed empty).
+        (served, shed, or quarantined — 0 when the queue stayed empty
+        *or* batch aging is holding an underfull batch whose window is
+        still open: with ``timeout=0`` the hold never blocks, so
+        deterministic tests advance the injected clock instead).
         The deterministic entry point tests and the dispatch thread
         share.  Dispatch failures are absorbed by retry, bisection, and
         quarantine — ``step`` itself only raises on failures *outside*
         the serve path (e.g. batch formation), and even then every taken
         request's future is resolved first."""
-        batch = self.queue.take_batch(self.max_batch, timeout=timeout)
+        batch = self.queue.take_batch(self.max_batch, timeout=timeout,
+                                      policy=self.scheduler)
         if batch is None:
             return 0
+        self.metrics.record_hold(batch.hold_ms)
         n = len(batch)
         try:
             batch = self._shed_past_deadline(batch)
@@ -291,7 +313,11 @@ class Engine:
                                 requests=pending[mid:]))
 
     def _dispatch(self, batch: Batch, record: bool = True) -> None:
-        faults.maybe_fault(faults.DISPATCH, detail=batch)
+        if record:
+            # warm-compile dispatches (record=False) are construction-time
+            # plumbing, not traffic: an armed fault burst (times=...) must
+            # fire under load, not be consumed warming the engine
+            faults.maybe_fault(faults.DISPATCH, detail=batch)
         bucket = batch.bucket
         t_dispatch = self.clock()
         depth_after = self.queue.depth()
@@ -359,6 +385,9 @@ class Engine:
     def start(self) -> "Engine":
         if self._thread is not None:
             return self
+        # a retained error belongs to the PREVIOUS run: stop(raise_on_
+        # error=True) after a clean second run must not re-raise it
+        self._last_loop_error = None
         self._running.set()
 
         def loop():
@@ -419,6 +448,8 @@ class Engine:
             "hit_rate": cstats["hits"] / lookups if lookups else 0.0,
         }
         snap["buckets"] = [b.name for b in self.buckets.buckets]
+        snap["scheduler"] = {"kind": self.scheduler.kind,
+                             "max_hold_ms": self.scheduler.max_hold_ms}
         snap["loop_errors"] = self._loop_errors
         snap["last_loop_error"] = (repr(self._last_loop_error)
                                    if self._last_loop_error else None)

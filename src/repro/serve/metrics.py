@@ -79,12 +79,21 @@ class LatencyHistogram:
 class MetricsRegistry:
     """Thread-safe serving metrics: one instance per engine.
 
-    Histograms: ``queue_wait_ms`` (arrival -> dispatch), ``service_ms``
-    (dispatch -> done, shared by every request in the batch), ``e2e_ms``
-    (arrival -> done, the SLO clock).  Occupancy is tracked per *dispatch*
-    (requests folded into one engine step, and the images-per-grid-step
-    the fused kernel's grouping actually realized).  SLO attainment is
-    per class.  Padding waste accumulates bucket-padded vs real pixels.
+    Histograms: ``queue_wait_ms`` (arrival -> dispatch, also split per
+    SLO class — the number a deadline-aware scheduler actually moves),
+    ``service_ms`` (dispatch -> done, shared by every request in the
+    batch), ``e2e_ms`` (arrival -> done, the SLO clock, also per class),
+    ``hold_ms`` (batch-aging hold per dispatch).  Occupancy is tracked
+    per *dispatch* (requests folded into one engine step, and the
+    images-per-grid-step the fused kernel's grouping actually realized).
+    SLO attainment is per class.  Padding waste accumulates
+    bucket-padded vs real pixels.
+
+    Every histogram mutation happens under the registry lock:
+    ``LatencyHistogram.record`` is a non-atomic read-modify-write of
+    ``counts/count/sum/max``, so an unlocked record from the dispatch
+    thread racing a caller thread silently loses observations (and the
+    benchmark's ``count == completed`` ledger drifts).
     """
 
     def __init__(self):
@@ -92,13 +101,16 @@ class MetricsRegistry:
         self.queue_wait_ms = LatencyHistogram()
         self.service_ms = LatencyHistogram()
         self.e2e_ms = LatencyHistogram()
+        self.hold_ms = LatencyHistogram()
+        self._queue_wait_by_class: Dict[str, LatencyHistogram] = {}
+        self._e2e_by_class: Dict[str, LatencyHistogram] = {}
         # self-healing counters are pre-seeded so every snapshot carries
         # them (a zero is a measurement — "no sheds under this traffic" —
         # not a missing key the benchmark has to .get() around)
         self.counters: Dict[str, int] = {
             "submitted": 0, "admitted": 0, "rejected": 0, "completed": 0,
             "shed": 0, "quarantined": 0, "dispatch_retries": 0,
-            "batch_bisections": 0, "loop_errors": 0}
+            "batch_bisections": 0, "loop_errors": 0, "aged_dispatches": 0}
         self._slo: Dict[str, Dict[str, int]] = {}
         self._occupancy: List[int] = []        # requests per dispatch
         self._imgs_per_step: List[int] = []    # fused-grid images per step
@@ -113,8 +125,11 @@ class MetricsRegistry:
 
     def record_slo(self, slo_name: str, met: bool) -> None:
         with self._lock:
-            d = self._slo.setdefault(slo_name, {"met": 0, "missed": 0})
-            d["met" if met else "missed"] += 1
+            self._record_slo_locked(slo_name, met)
+
+    def _record_slo_locked(self, slo_name: str, met: bool) -> None:
+        d = self._slo.setdefault(slo_name, {"met": 0, "missed": 0})
+        d["met" if met else "missed"] += 1
 
     def record_dispatch(self, *, occupancy: int, imgs_per_step: int,
                         queue_depth: int, service_ms: float) -> None:
@@ -122,15 +137,27 @@ class MetricsRegistry:
             self._occupancy.append(int(occupancy))
             self._imgs_per_step.append(int(imgs_per_step))
             self._queue_depths.append(int(queue_depth))
-        self.service_ms.record(service_ms)
+            self.service_ms.record(service_ms)
+
+    def record_hold(self, hold_ms: float) -> None:
+        """Batch-aging hold time for one formed batch (0 = dispatched the
+        instant it could; recorded per formation, before shed/retry)."""
+        with self._lock:
+            self.hold_ms.record(hold_ms)
+            if hold_ms > 0:
+                self.counters["aged_dispatches"] += 1
 
     def record_request(self, *, queue_wait_ms: float, e2e_ms: float,
                        slo_name: str, met: bool,
                        real_px: int, padded_px: int) -> None:
-        self.queue_wait_ms.record(queue_wait_ms)
-        self.e2e_ms.record(e2e_ms)
-        self.record_slo(slo_name, met)
         with self._lock:
+            self.queue_wait_ms.record(queue_wait_ms)
+            self.e2e_ms.record(e2e_ms)
+            self._queue_wait_by_class.setdefault(
+                slo_name, LatencyHistogram()).record(queue_wait_ms)
+            self._e2e_by_class.setdefault(
+                slo_name, LatencyHistogram()).record(e2e_ms)
+            self._record_slo_locked(slo_name, met)
             self.counters["completed"] += 1
             self._real_px += int(real_px)
             self._padded_px += int(padded_px)
@@ -167,11 +194,22 @@ class MetricsRegistry:
             slo = {k: dict(v) for k, v in self._slo.items()}
             depths = list(self._queue_depths)
             real_px, padded_px = self._real_px, self._padded_px
+            queue_wait = self.queue_wait_ms.summary()
+            service = self.service_ms.summary()
+            e2e = self.e2e_ms.summary()
+            hold = self.hold_ms.summary()
+            wait_by_class = {k: h.summary()
+                             for k, h in self._queue_wait_by_class.items()}
+            e2e_by_class = {k: h.summary()
+                            for k, h in self._e2e_by_class.items()}
         return {
             "counters": counters,
-            "queue_wait_ms": self.queue_wait_ms.summary(),
-            "service_ms": self.service_ms.summary(),
-            "e2e_ms": self.e2e_ms.summary(),
+            "queue_wait_ms": queue_wait,
+            "service_ms": service,
+            "e2e_ms": e2e,
+            "hold_ms": hold,
+            "queue_wait_by_class": wait_by_class,
+            "e2e_by_class": e2e_by_class,
             "slo": {name: {**d, "attainment": self.slo_attainment(name)}
                     for name, d in slo.items()},
             "slo_attainment": self.slo_attainment(),

@@ -9,9 +9,12 @@ is a *difference* of stamps, and the wall clock can step backwards under
 NTP adjustment, which would report negative (or wildly wrong) latencies
 exactly when a fleet-wide time sync happens under load.
 
-SLO classes are deadline buckets, not priorities: the engine serves FCFS
-per bucket and *accounts* attainment per class (``metrics.MetricsRegistry``),
-so a missed deadline is a measured fact rather than a scheduling hint.
+SLO classes are deadline buckets that double as the scheduling signal:
+attainment is *accounted* per class (``metrics.MetricsRegistry``), and a
+deadline-aware engine (``batcher.SchedulerPolicy(kind="edf")``) *forms*
+batches by earliest absolute deadline (:attr:`Request.deadline_t`), so
+an urgent request is dispatched ahead of slack-rich peers instead of
+merely being recorded as late afterwards.
 """
 from __future__ import annotations
 
@@ -74,6 +77,18 @@ class Request:
     @property
     def shape(self) -> Tuple[int, int]:
         return int(self.x.shape[0]), int(self.x.shape[1])
+
+    @property
+    def deadline_t(self) -> float:
+        """Absolute clock stamp (same clock as ``arrival_t``) at which
+        this request's SLO deadline expires — the EDF scheduling key."""
+        return self.arrival_t + self.slo.deadline_ms * 1e-3
+
+    def slack_ms(self, now: float) -> float:
+        """Milliseconds of headroom left before the deadline (negative:
+        already expired).  Bounds how long the batch former may hold this
+        request waiting for co-batchable arrivals."""
+        return (self.deadline_t - now) * 1e3
 
 
 @dataclasses.dataclass(frozen=True)

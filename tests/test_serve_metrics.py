@@ -1,6 +1,10 @@
 """Streaming metrics: histogram percentile accuracy (the <10% geometric
--bucket error bound), SLO attainment accounting, and the snapshot the
-serving benchmark rows come from."""
+-bucket error bound), SLO attainment accounting, the snapshot the
+serving benchmark rows come from, and the histogram-mutation lock
+discipline (every record happens under the registry lock — unlocked
+records race and lose observations)."""
+import threading
+
 import numpy as np
 import pytest
 
@@ -111,3 +115,68 @@ def test_empty_snapshot_is_complete():
     assert snap["slo_attainment"] == 1.0
     assert snap["batch_occupancy"]["dispatches"] == 0
     assert snap["queue_depth"] == {"mean": 0.0, "max": 0}
+    assert snap["hold_ms"]["count"] == 0
+    assert snap["queue_wait_by_class"] == {}
+    assert snap["e2e_by_class"] == {}
+
+
+def test_per_class_latency_histograms():
+    m = MetricsRegistry()
+    m.record_request(queue_wait_ms=10.0, e2e_ms=15.0, slo_name="interactive",
+                     met=True, real_px=1, padded_px=1)
+    m.record_request(queue_wait_ms=100.0, e2e_ms=120.0, slo_name="batch",
+                     met=True, real_px=1, padded_px=1)
+    snap = m.snapshot()
+    assert snap["queue_wait_by_class"]["interactive"]["count"] == 1
+    assert snap["e2e_by_class"]["batch"]["count"] == 1
+    # per-class splits partition the global histogram
+    assert snap["queue_wait_ms"]["count"] == 2
+    assert snap["e2e_by_class"]["interactive"]["max_ms"] == 15.0
+    assert snap["e2e_by_class"]["batch"]["max_ms"] == 120.0
+
+
+def test_hold_recording_counts_aged_dispatches():
+    m = MetricsRegistry()
+    m.record_hold(0.0)                         # immediate dispatch
+    m.record_hold(12.5)                        # aged
+    snap = m.snapshot()
+    assert snap["hold_ms"]["count"] == 2
+    assert snap["hold_ms"]["max_ms"] == 12.5
+    assert snap["counters"]["aged_dispatches"] == 1
+
+
+def test_threaded_recording_loses_no_observations():
+    """Regression for the histogram lock races: ``record_dispatch``
+    recorded ``service_ms`` outside the registry lock and
+    ``record_request`` recorded ``queue_wait_ms``/``e2e_ms`` with no lock
+    at all — ``LatencyHistogram.record`` is a non-atomic
+    read-modify-write, so concurrent threads silently lost observations
+    and the ``count == completed`` ledger drifted."""
+    m = MetricsRegistry()
+    n_threads, per_thread = 8, 400
+
+    def worker(k):
+        for i in range(per_thread):
+            m.record_request(queue_wait_ms=float(i % 7), e2e_ms=float(i),
+                             slo_name="interactive" if i % 2 else "batch",
+                             met=True, real_px=1, padded_px=2)
+            m.record_dispatch(occupancy=1, imgs_per_step=1, queue_depth=0,
+                              service_ms=float(i % 5))
+
+    threads = [threading.Thread(target=worker, args=(k,))
+               for k in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    total = n_threads * per_thread
+    snap = m.snapshot()
+    assert snap["counters"]["completed"] == total
+    assert snap["queue_wait_ms"]["count"] == total     # ledger holds
+    assert snap["e2e_ms"]["count"] == total
+    assert snap["service_ms"]["count"] == total
+    by_class = snap["queue_wait_by_class"]
+    assert (by_class["interactive"]["count"]
+            + by_class["batch"]["count"]) == total
+    assert m.e2e_ms.sum == pytest.approx(
+        n_threads * sum(range(per_thread)))            # no lost updates

@@ -1,0 +1,409 @@
+"""Deadline-aware batch scheduling (EDF) + batch aging, and the
+serving-path bugfix regressions that ride with them:
+
+  * EDF formation picks the bucket of the most urgent request and fills
+    it with same-bucket peers in deadline order — the SLO classes become
+    *scheduling*, not just accounting;
+  * batch aging holds an underfull batch for ``max_hold_ms`` (bounded by
+    the head request's slack) so co-batchable arrivals fold into ONE
+    fused grid step; hold decisions are pure functions of the injected
+    clock, asserted deterministically;
+  * batched answers stay BIT-IDENTICAL to per-request dispatch under the
+    new formation order (the PR 6 invariant re-proven under EDF);
+  * same-bucket matching is by equality, not identity (two equal
+    ``Bucket`` objects co-batch);
+  * ``BatchQueue.put_if_below`` enforces the admission depth bound
+    atomically (no TOCTOU overshoot under concurrent submitters);
+  * sub-kernel VALID shapes are rejected at admission, and
+    ``crop_output`` raises instead of silently serving an empty tensor;
+  * warm-compile dispatches do not consume an armed fault budget;
+  * ``stop(raise_on_error=True)`` does not re-raise a stale loop error
+    from a previous run.
+"""
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import faults
+from repro.api.serving_cache import ServingCache
+from repro.quant import INT8_FREQ
+from repro.serve import (BATCH, EDF, INTERACTIVE, AdmissionPolicy,
+                         BatchQueue, Bucket, BucketTable, Engine,
+                         RejectedError, SchedulerPolicy, ShedError,
+                         SLOClass, results)
+from repro.serve.types import Request
+
+CIN, COUT = 4, 8
+
+
+def _weights(seed=0):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.randn(3, 3, CIN, COUT) * 0.2, jnp.float32)
+
+
+def _table(shapes=((8, 8), (12, 12)), quant=INT8_FREQ, **kw):
+    return BucketTable.for_workload(shapes, kernel_size=3, in_channels=CIN,
+                                    out_channels=COUT, quant=quant, **kw)
+
+
+def _imgs(shapes, seed=1):
+    rng = np.random.RandomState(seed)
+    return [jnp.asarray(rng.randn(h, w, CIN), jnp.float32)
+            for h, w in shapes]
+
+
+class _FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+@pytest.fixture(scope="module")
+def shared_cache():
+    return ServingCache()
+
+
+# ----------------------------------------------------------------------
+# policy + request helpers
+# ----------------------------------------------------------------------
+def test_scheduler_policy_validation():
+    assert SchedulerPolicy().kind == "fcfs"          # default unchanged
+    assert EDF.kind == "edf" and EDF.max_hold_ms == 0.0
+    with pytest.raises(ValueError, match="kind"):
+        SchedulerPolicy(kind="lifo")
+    with pytest.raises(ValueError, match="max_hold_ms"):
+        SchedulerPolicy(max_hold_ms=-1.0)
+
+
+def test_request_deadline_and_slack():
+    r = Request(x=jnp.zeros((8, 8, CIN)), slo=INTERACTIVE, arrival_t=10.0)
+    assert r.deadline_t == pytest.approx(12.0)       # 2s interactive SLO
+    assert r.slack_ms(10.0) == pytest.approx(2_000.0)
+    assert r.slack_ms(13.0) == pytest.approx(-1_000.0)
+
+
+# ----------------------------------------------------------------------
+# EDF formation
+# ----------------------------------------------------------------------
+def test_edf_dispatches_most_urgent_bucket_first(shared_cache):
+    """A slack-rich BATCH request at the head of the queue must not delay
+    an INTERACTIVE request queued behind it in another bucket."""
+    clk = _FakeClock()
+    eng = Engine(_weights(), _table(), max_batch=4, cache=shared_cache,
+                 clock=clk, scheduler=EDF)
+    x12, x8 = _imgs([(12, 12), (8, 8)], seed=2)
+    fb = eng.submit(x12, BATCH)                # arrives first, 20s deadline
+    fi = eng.submit(x8, INTERACTIVE)           # arrives second, 2s deadline
+    assert eng.step() == 1
+    assert fi.done() and not fb.done()         # urgent bucket jumped ahead
+    assert fi.result(timeout=0).bucket_name == "b8x8"
+    assert eng.step() == 1
+    assert fb.result(timeout=0).bucket_name == "b12x12"
+
+
+def test_fcfs_default_is_head_of_line(shared_cache):
+    """The same arrival order under the default policy serves the head
+    bucket first — the pre-scheduler behavior is preserved."""
+    eng = Engine(_weights(), _table(), max_batch=4, cache=shared_cache)
+    x12, x8 = _imgs([(12, 12), (8, 8)], seed=2)
+    fb = eng.submit(x12, BATCH)
+    fi = eng.submit(x8, INTERACTIVE)
+    assert eng.step() == 1
+    assert fb.done() and not fi.done()
+    eng.step()
+    results([fb, fi])
+
+
+def test_edf_fills_same_bucket_in_deadline_order(shared_cache):
+    """Within the chosen bucket, peers ride in deadline order: with
+    max_batch=1 the later-arriving INTERACTIVE request dispatches before
+    the earlier BATCH one."""
+    clk = _FakeClock()
+    eng = Engine(_weights(), _table(), max_batch=1, cache=shared_cache,
+                 clock=clk, scheduler=EDF)
+    xs = _imgs([(8, 8)] * 2, seed=3)
+    fb = eng.submit(xs[0], BATCH)
+    fi = eng.submit(xs[1], INTERACTIVE)
+    assert eng.step() == 1
+    assert fi.done() and not fb.done()
+    eng.step()
+    results([fb, fi])
+
+
+def test_edf_expired_request_flows_to_shed_not_starvation(shared_cache):
+    """An already-expired request is maximally urgent under EDF: it is
+    taken (and shed) immediately instead of starving unresolved behind
+    still-viable work."""
+    clk = _FakeClock()
+    eng = Engine(_weights(), _table(), max_batch=4, cache=shared_cache,
+                 clock=clk, scheduler=EDF, shed_expired=True)
+    x8, x12 = _imgs([(8, 8), (12, 12)], seed=4)
+    fi = eng.submit(x8, INTERACTIVE)
+    clk.t = 5.0                                # interactive now expired
+    fb = eng.submit(x12, BATCH)                # viable, different bucket
+    assert eng.step() == 1                     # expired one taken first...
+    with pytest.raises(ShedError):
+        fi.result(timeout=0)                   # ...and resolved by shed
+    assert eng.snapshot()["counters"]["shed"] == 1
+    assert eng.step() == 1
+    assert fb.result(timeout=0).deadline_met
+
+
+def test_edf_batched_bit_identical_to_per_request(shared_cache):
+    """The acceptance invariant re-proven under the new formation order:
+    EDF-batched answers equal per-request dispatch bit-for-bit."""
+    shapes = [(11, 10), (8, 8), (12, 12), (7, 5)]
+    slos = [BATCH, INTERACTIVE, INTERACTIVE, BATCH]
+    xs = _imgs(shapes, seed=5)
+    eng_e = Engine(_weights(), _table(), max_batch=4, cache=shared_cache,
+                   scheduler=EDF)
+    eng_s = Engine(_weights(), _table(), max_batch=1, cache=shared_cache)
+
+    def serve_all(eng):
+        futs = [eng.submit(x, slo) for x, slo in zip(xs, slos)]
+        while eng.step() > 0:
+            pass
+        return results(futs)
+
+    re_, rs = serve_all(eng_e), serve_all(eng_s)
+    for b, s, (h, w) in zip(re_, rs, shapes):
+        assert b.y.shape == s.y.shape
+        assert np.array_equal(np.asarray(b.y), np.asarray(s.y)), \
+            f"EDF-batched != per-request for shape ({h}, {w})"
+    assert eng_e.snapshot()["batch_occupancy"]["max"] > 1
+
+
+# ----------------------------------------------------------------------
+# batch aging
+# ----------------------------------------------------------------------
+def test_aging_holds_underfull_batch_then_folds_arrival(shared_cache):
+    clk = _FakeClock()
+    eng = Engine(_weights(), _table(), max_batch=2, cache=shared_cache,
+                 clock=clk,
+                 scheduler=SchedulerPolicy(kind="edf", max_hold_ms=50.0))
+    xs = _imgs([(8, 8)] * 2, seed=6)
+    f1 = eng.submit(xs[0], BATCH)
+    assert eng.step(timeout=0) == 0            # held: window open, underfull
+    assert eng.queue.depth() == 1              # nothing was taken
+    f2 = eng.submit(xs[1], BATCH)
+    assert eng.step(timeout=0) == 2            # full batch ends the hold
+    r1, r2 = results([f1, f2])
+    assert r1.batch_size == 2 and r1.imgs_per_step == 2
+    assert r2.batch_size == 2
+
+
+def test_aging_window_expiry_dispatches_singleton(shared_cache):
+    clk = _FakeClock()
+    eng = Engine(_weights(), _table(), max_batch=4, cache=shared_cache,
+                 clock=clk,
+                 scheduler=SchedulerPolicy(kind="edf", max_hold_ms=50.0))
+    f = eng.submit(_imgs([(8, 8)], seed=7)[0], BATCH)
+    assert eng.step(timeout=0) == 0            # held
+    clk.t = 0.06                               # past the 50ms window
+    assert eng.step(timeout=0) == 1
+    assert f.result(timeout=0).batch_size == 1
+    snap = eng.snapshot()
+    assert snap["counters"]["aged_dispatches"] == 1
+    assert snap["hold_ms"]["max_ms"] == pytest.approx(50.0)   # clamped
+
+
+def test_aging_hold_bounded_by_head_slack(shared_cache):
+    """A huge max_hold_ms never holds past the head request's deadline:
+    the tight-deadline request dispatches as soon as its slack runs out,
+    while a slack-rich one is still being held."""
+    clk = _FakeClock()
+    tight = SLOClass("rt", deadline_ms=100.0)
+    eng = Engine(_weights(), _table(), max_batch=4, cache=shared_cache,
+                 clock=clk,
+                 scheduler=SchedulerPolicy(kind="edf",
+                                           max_hold_ms=10_000.0))
+    f = eng.submit(_imgs([(8, 8)], seed=8)[0], tight)
+    assert eng.step(timeout=0) == 0            # inside the 100ms slack
+    clk.t = 0.2                                # slack exhausted << 10s hold
+    assert eng.step(timeout=0) == 1
+    assert f.result(timeout=0).deadline_met is False
+    fb = eng.submit(_imgs([(8, 8)], seed=9)[0], BATCH)
+    assert eng.step(timeout=0) == 0            # 20s slack: still held
+    clk.t = 31.0                               # past hold AND deadline
+    assert eng.step(timeout=0) == 1
+    assert fb.done()
+
+
+def test_aging_zero_hold_is_immediate_dispatch(shared_cache):
+    eng = Engine(_weights(), _table(), max_batch=4, cache=shared_cache,
+                 scheduler=EDF)                # max_hold_ms=0
+    f = eng.submit(_imgs([(8, 8)], seed=10)[0], BATCH)
+    assert eng.step(timeout=0) == 1
+    assert f.result(timeout=0).batch_size == 1
+    assert eng.snapshot()["counters"]["aged_dispatches"] == 0
+
+
+def test_aging_blocking_take_wakes_on_completing_arrival():
+    """In blocking mode the hold waits inside take_batch and an arrival
+    that completes the batch ends it early (real clock, generous window
+    so the assertion is on completion, not timing)."""
+    q = BatchQueue()
+    spec = _table().by_name("b8x8").spec
+    b = Bucket("b8x8", 8, 8, spec)
+    now = time.perf_counter()
+    q.put(Request(x=jnp.zeros((8, 8, CIN)), slo=BATCH, arrival_t=now), b)
+    got = {}
+
+    def taker():
+        got["batch"] = q.take_batch(
+            2, timeout=5.0,
+            policy=SchedulerPolicy(kind="fcfs", max_hold_ms=5_000.0))
+
+    th = threading.Thread(target=taker)
+    th.start()
+    time.sleep(0.05)
+    q.put(Request(x=jnp.zeros((8, 8, CIN)), slo=BATCH,
+                  arrival_t=time.perf_counter()), b)
+    th.join(timeout=5.0)
+    assert not th.is_alive()
+    assert got["batch"] is not None and len(got["batch"]) == 2
+
+
+# ----------------------------------------------------------------------
+# bucket matching by equality (not identity)
+# ----------------------------------------------------------------------
+def test_equal_but_distinct_buckets_cobatch():
+    spec = _table().by_name("b8x8").spec
+    b1 = Bucket("b8x8", 8, 8, spec)
+    b2 = Bucket("b8x8", 8, 8, spec)            # equal, distinct object
+    assert b1 == b2 and b1 is not b2
+    q = BatchQueue()
+    q.put(Request(x=jnp.zeros((8, 8, CIN)), slo=BATCH, arrival_t=0.0), b1)
+    q.put(Request(x=jnp.zeros((8, 8, CIN)), slo=BATCH, arrival_t=0.0), b2)
+    batch = q.take_batch(4, timeout=0)
+    assert batch is not None and len(batch) == 2   # no occupancy loss
+    assert q.depth() == 0
+
+
+# ----------------------------------------------------------------------
+# atomic admission (TOCTOU)
+# ----------------------------------------------------------------------
+def test_put_if_below_bound_atomic_under_threads():
+    q = BatchQueue()
+    spec = _table().by_name("b8x8").spec
+    b = Bucket("b8x8", 8, 8, spec)
+    bound, n_threads, per_thread = 32, 16, 8
+    admitted = []
+
+    def submitter():
+        for _ in range(per_thread):
+            r = Request(x=jnp.zeros((8, 8, CIN)), slo=BATCH, arrival_t=0.0)
+            if q.put_if_below(r, b, bound):
+                admitted.append(r.id)
+
+    threads = [threading.Thread(target=submitter) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert q.depth() == bound                  # never overshot
+    assert len(admitted) == bound
+
+
+def test_engine_submit_never_overshoots_queue_bound(shared_cache):
+    bound = 8
+    eng = Engine(_weights(), _table(shapes=((8, 8),)), max_batch=4,
+                 cache=shared_cache,
+                 admission=AdmissionPolicy(max_queue_depth=bound))
+    x = _imgs([(8, 8)], seed=11)[0]
+    futs, lock = [], threading.Lock()
+
+    def submitter():
+        for _ in range(6):
+            f = eng.submit(x)
+            with lock:
+                futs.append(f)
+
+    threads = [threading.Thread(target=submitter) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert eng.queue.depth() == bound
+    c = eng.snapshot()["counters"]
+    assert c["admitted"] == bound
+    assert c["rejected"] == len(futs) - bound
+    rejected = [f for f in futs if f.done()]
+    with pytest.raises(RejectedError, match="queue depth"):
+        rejected[0].result(timeout=0)
+    while eng.step() > 0:                      # admitted ones still serve
+        pass
+    assert eng.drain(timeout=5.0)
+
+
+# ----------------------------------------------------------------------
+# sub-kernel VALID shapes: reject at admission, raise on empty crop
+# ----------------------------------------------------------------------
+def test_subkernel_valid_request_rejected_at_admission(shared_cache):
+    eng = Engine(_weights(), _table(shapes=((8, 8),), padding="VALID"),
+                 cache=shared_cache)
+    f = eng.submit(jnp.zeros((2, 5, CIN), jnp.float32))
+    with pytest.raises(RejectedError, match="smaller than the 3x3 kernel"):
+        f.result(timeout=0)
+    assert eng.queue.depth() == 0
+    # the same shape under SAME padding is a legitimate request
+    eng2 = Engine(_weights(), _table(shapes=((8, 8),)), cache=shared_cache)
+    f2 = eng2.submit(jnp.zeros((2, 5, CIN), jnp.float32))
+    eng2.step()
+    assert f2.result(timeout=0).y.shape == (2, 5, COUT)
+
+
+def test_crop_output_raises_on_empty_instead_of_truncating():
+    spec = _table(shapes=((8, 8),), padding="VALID").buckets[0].spec
+    b = Bucket("b8x8v", 8, 8, spec)
+    y = jnp.zeros((6, 6, COUT))
+    with pytest.raises(ValueError, match="empty output crop"):
+        BucketTable.crop_output(y, 2, 5, b)
+    assert BucketTable.crop_output(y, 5, 5, b).shape == (3, 3, COUT)
+
+
+# ----------------------------------------------------------------------
+# warm-compile must not consume an armed fault budget
+# ----------------------------------------------------------------------
+def test_warm_compile_does_not_consume_fault_budget():
+    with faults.inject({faults.DISPATCH: faults.FaultSpec(times=1)}) as fp:
+        eng = Engine(_weights(), _table(shapes=((8, 8),)), max_batch=2,
+                     cache=ServingCache(), round_batches=True,
+                     warm_compile=True)
+        assert fp.injected(faults.DISPATCH) == 0   # warm-up did not fire it
+        f = eng.submit(_imgs([(8, 8)], seed=12)[0])
+        assert eng.step() == 1
+        assert fp.injected(faults.DISPATCH) == 1   # burst spent under load
+        assert f.result(timeout=0).y.shape == (8, 8, COUT)
+    assert eng.snapshot()["counters"]["dispatch_retries"] == 1
+
+
+# ----------------------------------------------------------------------
+# stale loop error must not survive a restart
+# ----------------------------------------------------------------------
+def test_stop_does_not_reraise_stale_loop_error(shared_cache, monkeypatch):
+    eng = Engine(_weights(), _table(), max_batch=2, cache=shared_cache)
+    orig = eng.queue.take_batch
+
+    def boom(*a, **k):
+        raise RuntimeError("transient formation failure")
+
+    monkeypatch.setattr(eng.queue, "take_batch", boom)
+    eng.start()
+    deadline = time.perf_counter() + 5.0
+    while eng.snapshot()["loop_errors"] == 0 \
+            and time.perf_counter() < deadline:
+        time.sleep(0.01)
+    eng.stop()                                 # run 1 absorbed an error
+    assert eng.last_loop_error is not None
+    monkeypatch.setattr(eng.queue, "take_batch", orig)
+    eng.start()                                # run 2 is clean
+    f = eng.submit(_imgs([(8, 8)], seed=13)[0])
+    assert eng.drain(timeout=10.0)
+    assert f.result(timeout=1.0).y.shape == (8, 8, COUT)
+    eng.stop(raise_on_error=True)              # must NOT re-raise run 1's
