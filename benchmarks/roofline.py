@@ -1,4 +1,5 @@
-"""Roofline analysis from the dry-run artifacts (deliverable g).
+"""Roofline analysis from the dry-run artifacts (deliverable g), plus
+the cost-model validation cell (``run_costmodel``).
 
 Per (arch x shape x mesh) cell:
     compute    = FLOPs_per_device / 197e12         (TPU v5e bf16 peak)
@@ -10,9 +11,26 @@ flops/bytes (verified: whisper train_4k per-device flops x 256 == 6ND);
 collective bytes are parsed from the compiled HLO (operand sums), also
 per-device.  The dominant term is the bottleneck §Perf iterates on;
 ``model_flops / (hlo_flops * chips)`` flags remat/redundant compute.
+Rows land under ``BENCH_conv.json["roofline"]`` with the same
+merged-not-overwritten git-SHA ``trajectory[]`` convention as the other
+suites, besides the per-mesh ``experiments/roofline_*.json`` file.
+
+``run_costmodel`` validates ``repro.api.costmodel`` end to end: fit the
+coefficients from the probe runs, then — per spec of the VGG/ResNet
+sweep (interpret mode) — exhaustively measure every launchable
+candidate and compare against the model's ranking.  Reported per spec
+and in aggregate: Spearman rank correlation, strict top-1 agreement, a
+noise-tolerant variant (the chosen config's measured time within 5% of
+the exhaustive winner's), and the ``top_k=3`` autotune outcome (would
+measuring only the model's top-3 have found the winner?).  Everything,
+including the fitted coefficients and per-spec prediction error, lands
+in ``BENCH_conv.json["costmodel"]``.
 """
+import datetime
 import json
+import os
 import pathlib
+import subprocess
 import sys
 
 PEAK = 197e12
@@ -20,6 +38,41 @@ HBM = 819e9
 ICI = 50e9
 
 DRYRUN = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+BENCH_PATH = os.environ.get("REPRO_BENCH_OUT", "BENCH_conv.json")
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], capture_output=True,
+            text=True, check=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__))).stdout.strip()
+    except Exception:
+        return "unknown"
+
+
+def _load_bench(bench_path: str) -> dict:
+    bench = {}
+    if os.path.exists(bench_path):
+        try:
+            with open(bench_path) as f:
+                bench = json.load(f)
+        except ValueError:
+            bench = {}
+    if not isinstance(bench, dict):
+        bench = {}
+    return bench
+
+
+def _trajectory_entry(**fields) -> dict:
+    import jax
+    return {
+        "ts": datetime.datetime.now(datetime.timezone.utc)
+        .isoformat(timespec="seconds"),
+        "git_sha": _git_sha(),
+        "platform": jax.default_backend(), "jax": jax.__version__,
+        **fields,
+    }
 
 
 def load_cells(mesh_tag="pod1"):
@@ -56,11 +109,12 @@ def roofline_row(rec):
     }
 
 
-def run(log=print, mesh_tag="pod1"):
+def run(log=print, mesh_tag="pod1", bench_path=None):
+    bench_path = bench_path or BENCH_PATH
     cells = load_cells(mesh_tag)
     if not cells:
         log("# no dry-run artifacts found — run repro.launch.dryrun first")
-        return []
+        return {"bench_path": bench_path, "rows": []}
     log("arch,shape,t_compute_s,t_memory_s,t_collective_s,dominant,"
         "useful_flops_ratio,roofline_fraction")
     rows = []
@@ -73,8 +127,217 @@ def run(log=print, mesh_tag="pod1"):
     out = DRYRUN.parent / f"roofline_{mesh_tag}.json"
     out.write_text(json.dumps(rows, indent=1))
     log(f"# wrote {out}")
-    return rows
+    # merge, never overwrite: rows ride BENCH_conv.json["roofline"] next
+    # to the other suites' keys, and the run stamps the shared trajectory
+    bench = _load_bench(bench_path)
+    bench.setdefault("roofline", {})[mesh_tag] = rows
+    bench.setdefault("trajectory", []).append(_trajectory_entry(
+        suite="roofline", mesh=mesh_tag, cells=len(rows),
+        dominant={r["shape"]: r["dominant"] for r in rows}))
+    with open(bench_path, "w") as f:
+        json.dump(bench, f, indent=1)
+    log(f"# bench_artifact,{bench_path} "
+        f"(trajectory: {len(bench['trajectory'])} entries)")
+    return {"bench_path": bench_path, "rows": rows}
+
+
+# --------------------------------------------------------------------------
+# cost-model validation cell
+# --------------------------------------------------------------------------
+def _spearman(a, b) -> float:
+    """Spearman rank correlation, hand-rolled (no scipy in the image).
+    Average ranks for ties; 1.0 for degenerate single-point inputs."""
+    import numpy as np
+    a, b = np.asarray(a, float), np.asarray(b, float)
+    if len(a) < 2:
+        return 1.0
+
+    def ranks(v):
+        order = np.argsort(v, kind="stable")
+        r = np.empty(len(v))
+        r[order] = np.arange(1, len(v) + 1)
+        for val in np.unique(v):
+            m = v == val
+            r[m] = r[m].mean()
+        return r
+
+    ra, rb = ranks(a), ranks(b)
+    ra, rb = ra - ra.mean(), rb - rb.mean()
+    denom = np.sqrt((ra ** 2).sum() * (rb ** 2).sum())
+    return float((ra * rb).sum() / denom) if denom else 1.0
+
+
+def _sweep_specs(cap: int):
+    """Deduped stride-1 conv specs of the VGG/ResNet benchmark sweep at
+    the bench spatial cap (channels full — they decide the ranking)."""
+    from benchmarks.table3_throughput import (RESNET_LOWERED_LAYERS,
+                                              VGG_LAYERS, _scaled_layers)
+    from repro.api import ConvSpec
+    from repro.quant import INT8_FREQ
+    specs, seen = [], set()
+    for hw, cin, cout in _scaled_layers(cap):
+        key = (hw, cin, cout)
+        if key in seen:
+            continue
+        seen.add(key)
+        specs.append((f"vgg{hw}x{hw}x{cin}->{cout}",
+                      ConvSpec(kernel_size=3, in_channels=cin,
+                               out_channels=cout, spatial=(hw, hw),
+                               quant=INT8_FREQ)))
+    for name, hw, cin, cout, r, stride, dw in RESNET_LOWERED_LAYERS:
+        if stride != 1 or not dw:
+            continue                 # fast-path pricing is stride-1 native
+        hw_s = max(round(hw * cap / 224), 7) if cap < 224 else hw
+        specs.append((f"resnet_{name}{hw_s}x{hw_s}",
+                      ConvSpec(kernel_size=r, in_channels=cin,
+                               out_channels=cout, spatial=(hw_s, hw_s),
+                               depthwise=True, quant=INT8_FREQ)))
+    assert VGG_LAYERS  # sweep source sanity
+    return specs
+
+
+def _dedup_key(spec, algo, cfg, batch):
+    """Configs resolving identical launches are one candidate: e.g.
+    k_block 128 vs 256 both clamp to one k-block at C_in=64, and timing
+    both would turn top-1 agreement into a coin flip between aliases."""
+    from repro.analysis import kernel_checks
+    if cfg.datapath == "fused":
+        H, W = spec.spatial
+        return ("fused", kernel_checks.geometry_for(
+            algo, cfg, batch, H, W, spec.in_channels, spec.out_channels,
+            padding=spec.padding, depthwise=spec.depthwise))
+    import math
+    n_k = 1 if cfg.k_block is None \
+        else math.ceil(spec.in_channels / cfg.k_block)
+    return ("staged", cfg.tile_block, cfg.chan_block, n_k)
+
+
+def run_costmodel(log=print, bench_path=None, backend="pallas",
+                  interpret=True, top_k=3):
+    """Fit the cost model, exhaustively measure the sweep, score the
+    model's ranking, and write ``BENCH_conv.json["costmodel"]``."""
+    from repro.analysis import kernel_checks, ranges
+    from repro.api import costmodel, planner, registry, tuning
+
+    bench_path = bench_path or BENCH_PATH
+    reps = int(os.environ.get("REPRO_BENCH_REPS", "2"))
+    cap = int(os.environ.get("REPRO_BENCH_SPATIAL_CAP", "28"))
+
+    log("# fitting cost-model coefficients from probe runs")
+    report = costmodel.fit_coefficients(backend=backend,
+                                        interpret=interpret, reps=reps)
+    for dp, vec in report["coefficients"].items():
+        log(f"coefficients,{dp}," + ",".join(f"{c:.3e}" for c in vec))
+
+    spec_rows = []
+    for name, spec in _sweep_specs(cap):
+        algo_name = planner.select_algorithm(spec)     # pure BOPs pick
+        algo = registry.get_algorithm(algo_name)
+        if algo is None:
+            continue
+        try:
+            p0 = planner.plan(spec, backend=backend, algo=algo_name,
+                              interpret=interpret)
+        except ranges.AccumulatorOverflowError:
+            continue
+        if p0.path != "fast":
+            continue
+        x, w = tuning._synthetic_operands(spec)
+        launchable, _ = kernel_checks.check_candidates(
+            spec, algo, tuning.DEFAULT_CANDIDATES, batch=x.shape[0])
+        uniq, seen = [], set()
+        for cfg in launchable:
+            k = _dedup_key(spec, algo, cfg, x.shape[0])
+            if k in seen:
+                continue
+            seen.add(k)
+            uniq.append(cfg)
+        measured, predicted = [], []
+        for cfg in uniq:
+            t = tuning._measure_plan(p0.with_config(cfg), x, w, reps)
+            pred = costmodel.predict_time(spec, algo, cfg,
+                                          backend=backend,
+                                          interpret=interpret,
+                                          batch=x.shape[0])
+            measured.append(t)
+            predicted.append(pred)
+        if not measured or any(p is None for p in predicted):
+            continue
+        best_meas = min(measured)
+        i_meas = measured.index(best_meas)
+        i_pred = predicted.index(min(predicted))
+        # the autotune(top_k) outcome: measure only the model's top-k,
+        # keep the fastest measured among them
+        order = sorted(range(len(uniq)), key=lambda i: predicted[i])
+        kept = order[:top_k]
+        i_chosen = min(kept, key=lambda i: measured[i])
+        row = {
+            "spec": name, "algo": algo_name,
+            "n_candidates": len(uniq),
+            "spearman": _spearman(predicted, measured),
+            "top1_strict": i_pred == i_meas,
+            # noise tolerance: a pick within 5% of the winner's measured
+            # time is an agreement — interpret-mode CPU timings jitter
+            # more than the margin separating near-tied configs
+            "top1_within5pct": measured[i_pred] <= 1.05 * best_meas,
+            "topk_winner_found": i_chosen == i_meas,
+            "topk_within5pct": measured[i_chosen] <= 1.05 * best_meas,
+            "winner_measured_ms": best_meas * 1e3,
+            "top1_measured_ms": measured[i_pred] * 1e3,
+            "winner_pred_rel_err": abs(predicted[i_meas] - best_meas)
+            / best_meas,
+        }
+        spec_rows.append(row)
+        log(f"costmodel,{name},n={row['n_candidates']},"
+            f"rho={row['spearman']:.2f},"
+            f"top1={'Y' if row['top1_strict'] else 'n'}"
+            f"({'Y' if row['top1_within5pct'] else 'n'}@5%),"
+            f"top{top_k}={'Y' if row['topk_within5pct'] else 'n'}@5%,"
+            f"win={row['winner_measured_ms']:.2f}ms")
+
+    if not spec_rows:
+        log("# costmodel: no sweep spec produced a fast-path plan")
+        return {"bench_path": bench_path, "summary": {}}
+    n = len(spec_rows)
+    summary = {
+        "n_specs": n, "top_k": top_k,
+        "mean_spearman": sum(r["spearman"] for r in spec_rows) / n,
+        "top1_strict_rate": sum(r["top1_strict"] for r in spec_rows) / n,
+        "top1_within5pct_rate":
+            sum(r["top1_within5pct"] for r in spec_rows) / n,
+        "topk_winner_rate":
+            sum(r["topk_winner_found"] for r in spec_rows) / n,
+        "topk_within5pct_rate":
+            sum(r["topk_within5pct"] for r in spec_rows) / n,
+        "mean_winner_pred_rel_err":
+            sum(r["winner_pred_rel_err"] for r in spec_rows) / n,
+    }
+    log(f"costmodel_summary,rho={summary['mean_spearman']:.2f},"
+        f"top1={summary['top1_strict_rate']:.0%}"
+        f"({summary['top1_within5pct_rate']:.0%}@5%),"
+        f"top{top_k}={summary['topk_winner_rate']:.0%}"
+        f"({summary['topk_within5pct_rate']:.0%}@5%)")
+
+    bench = _load_bench(bench_path)
+    bench["costmodel"] = {
+        "coefficients": report["coefficients"],
+        "fit": {k: report[k] for k in ("samples", "fit_error", "device")
+                if k in report},
+        "specs": spec_rows, "summary": summary,
+        "spatial_cap": cap, "reps": reps, "interpret": interpret,
+    }
+    bench.setdefault("trajectory", []).append(_trajectory_entry(
+        suite="costmodel", spatial_cap=cap, reps=reps, **summary))
+    with open(bench_path, "w") as f:
+        json.dump(bench, f, indent=1)
+    log(f"# bench_artifact,{bench_path} "
+        f"(trajectory: {len(bench['trajectory'])} entries)")
+    return {"bench_path": bench_path, "summary": summary}
 
 
 if __name__ == "__main__":
-    run(mesh_tag=sys.argv[1] if len(sys.argv) > 1 else "pod1")
+    arg = sys.argv[1] if len(sys.argv) > 1 else "pod1"
+    if arg == "costmodel":
+        run_costmodel()
+    else:
+        run(mesh_tag=arg)

@@ -16,7 +16,11 @@ on single-device hosts); ``serving`` appends the open-loop
 continuous-batching SLO rows (``repro.serve`` engine, p50/p95/p99 +
 goodput + occupancy + cache hit rate) under the ``"serving"`` key;
 ``chaos`` appends goodput/SLO under injected fault rates plus breaker
-recovery time under the ``"chaos"`` key.
+recovery time under the ``"chaos"`` key; ``roofline`` appends the
+dry-run roofline cells under ``"roofline"``; ``costmodel`` fits the
+analytic cost model and appends its predicted-vs-measured validation
+(rank correlation, top-1/top-k agreement, coefficients) under the
+``"costmodel"`` key.
 """
 import sys
 import time
@@ -36,6 +40,7 @@ def main() -> None:
         "fig5": fig5_layer_mse.run,
         "appendixB": appendixB_iterative.run,
         "roofline": roofline.run,
+        "costmodel": roofline.run_costmodel,
         "scaleout": scaleout.run,
         "serving": serving.run,
         "chaos": chaos.run,

@@ -23,6 +23,14 @@ they are properties of the *source layout*, not of any runtime value:
                called from the registry seams (``repro/api/registry.py``,
                ``repro/api/backends.py``).  Registration elsewhere makes
                the available-algorithm set import-order dependent.
+  ``COST001``  The analytic cost model (``repro/api/costmodel.py``) may
+               read launch geometry ONLY through the kernel's
+               single-sourced ``fused_geometry``/``FusedGeometry``
+               surface (via ``kernel_checks.geometry_for``): referencing
+               the kernel's VMEM/blocking helpers (``fused_vmem_bytes``,
+               ``VMEM_LIMIT_BYTES``, ``auto_rows_per_step``, ...) would
+               re-derive — and inevitably fork — the resource math the
+               geometry already owns.
 
 Run via ``python -m repro.analysis --check`` (the CI ``analysis`` job)
 or programmatically through :func:`run_lint`.
@@ -46,6 +54,16 @@ _KERNEL_MODULES: Tuple[str, ...] = (
 # Files allowed to *call* the registration seams.
 _REG_ALLOWED: Tuple[str, ...] = ("api/registry.py", "api/backends.py")
 _REG_NAMES: Tuple[str, ...] = ("register_algorithm", "register_backend")
+
+# COST001: the cost model's only sanctioned geometry surface.  Any other
+# kernel-internal name (VMEM budget helpers, blocking heuristics) inside
+# costmodel.py duplicates resource math the geometry single-sources.
+_COST_FILE = "api/costmodel.py"
+_COST_ALLOWED_KERNEL_NAMES: Tuple[str, ...] = ("fused_geometry",
+                                               "FusedGeometry")
+_COST_BANNED_NAMES: Tuple[str, ...] = (
+    "fused_vmem_bytes", "_vmem_bytes", "VMEM_LIMIT_BYTES",
+    "XQ_CACHE_BYTES", "auto_rows_per_step", "cache_fits")
 
 
 def _package_relpath(path: pathlib.Path, root: pathlib.Path) -> str:
@@ -100,9 +118,48 @@ def lint_source(source: str, relpath: str) -> List[Finding]:
     in_serve = relpath.startswith("serve/")
     arch_ok = _arch_allowed(relpath)
     reg_ok = relpath in _REG_ALLOWED
+    is_cost = relpath == _COST_FILE
 
     for node in ast.walk(tree):
         where = f"{relpath}:{getattr(node, 'lineno', 0)}"
+
+        if is_cost:
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    if _is_kernel_module(alias.name):
+                        findings.append(Finding(
+                            "COST001", ERROR,
+                            f"costmodel imports kernel module "
+                            f"{alias.name!r} wholesale; read geometry "
+                            f"only via fused_geometry/FusedGeometry "
+                            f"(kernel_checks.geometry_for)", where))
+            elif isinstance(node, ast.ImportFrom) and node.level == 0 \
+                    and _is_kernel_module(node.module or ""):
+                bad = [a.name for a in node.names
+                       if a.name not in _COST_ALLOWED_KERNEL_NAMES]
+                if bad:
+                    findings.append(Finding(
+                        "COST001", ERROR,
+                        f"costmodel imports kernel-internal name(s) "
+                        f"{bad} from {node.module!r}; only "
+                        f"{list(_COST_ALLOWED_KERNEL_NAMES)} are the "
+                        f"sanctioned geometry surface", where))
+            elif isinstance(node, ast.Name) \
+                    and node.id in _COST_BANNED_NAMES:
+                findings.append(Finding(
+                    "COST001", ERROR,
+                    f"costmodel references kernel resource helper "
+                    f"{node.id!r}; the launch geometry "
+                    f"(FusedGeometry accessors) already owns that "
+                    f"math — do not re-derive it", where))
+            elif isinstance(node, ast.Attribute) \
+                    and node.attr in _COST_BANNED_NAMES:
+                findings.append(Finding(
+                    "COST001", ERROR,
+                    f"costmodel references kernel resource helper "
+                    f".{node.attr}; the launch geometry "
+                    f"(FusedGeometry accessors) already owns that "
+                    f"math — do not re-derive it", where))
 
         if isinstance(node, ast.Import) and not arch_ok:
             for alias in node.names:

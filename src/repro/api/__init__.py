@@ -12,7 +12,7 @@ not apply, and dispatches execution to the ``reference`` (pure jnp) or
 extension seam for future backends — register new ones with
 ``register_backend`` and new algorithms with ``register_algorithm``.
 """
-from repro.api import lowering, serving_cache, tuning
+from repro.api import costmodel, lowering, serving_cache, tuning
 from repro.api.backends import (get_backend, list_backends,
                                 register_backend)
 from repro.api.lowering import CompositePlan, CompositePrepared
@@ -30,6 +30,6 @@ __all__ = [
     "select_algorithm", "estimate_cost",
     "register_algorithm", "get_algorithm", "list_algorithms",
     "register_backend", "get_backend", "list_backends",
-    "tuning", "KernelConfig", "autotune",
+    "tuning", "KernelConfig", "autotune", "costmodel",
     "serving_cache", "ServingCache", "get_serving_cache",
 ]

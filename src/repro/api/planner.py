@@ -16,6 +16,10 @@ Algorithm resolution happens in one place, for every call site:
     takes precedence: if this (spec, backend) has been autotuned on this
     host, ``algo="auto"`` picks the fastest measured algorithm and the
     plan carries the winning kernel config;
+  * next, the calibrated analytic cost model (``repro.api.costmodel``)
+    ranks candidates and predicts the best kernel config for specs with
+    no timing entry — cold specs get a near-optimal plan without a
+    blocking sweep (coefficients fitted once per host from probe runs);
   * otherwise ``algo="auto"`` ranks the registered candidates with the
     paper's BOPs cost model (``repro.quant.bops``: transform adds +
     element-wise MACs + inverse adds, tile geometry included via
@@ -81,13 +85,19 @@ def select_algorithm(spec: ConvSpec, backend: Optional[str] = None,
                      interpret: bool = True) -> str:
     """Cheapest eligible algorithm for the spec (may be 'direct').
 
-    With ``backend`` given, measured latencies from the tuning cache
-    (``repro.api.tuning``, keyed per interpret/compiled mode) take
-    precedence over the BOPs model — but only when the BOPs-best
-    candidate itself has been timed: a partial sweep (e.g. an autotune
-    restricted to one algorithm) must not hide a never-measured candidate
-    that the analytic model ranks first.  Untimed specs fall back to the
-    analytic ranking.
+    With ``backend`` given, selection walks three tiers of evidence:
+
+      1. **measured** wall-clock from the tuning cache
+         (``repro.api.tuning``, keyed per interpret/compiled mode) — but
+         only when the BOPs-best candidate itself has been timed: a
+         partial sweep (e.g. an autotune restricted to one algorithm)
+         must not hide a never-measured candidate that the analytic
+         model ranks first;
+      2. the **calibrated cost model** (``repro.api.costmodel``), when
+         fitted for this backend/device and able to price every
+         eligible candidate (same partial-knowledge rule);
+      3. raw **BOPs** (``repro.quant.bops``) otherwise — arithmetic
+         only, but always available.
     """
     if not spec.fast_eligible:
         return registry.DIRECT
@@ -102,13 +112,17 @@ def select_algorithm(spec: ConvSpec, backend: Optional[str] = None,
         if cost < best_cost:
             best_name, best_cost = entry.name, cost
     if backend is not None:
-        from repro.api import tuning
+        from repro.api import costmodel, tuning
         measured = tuning.lookup(spec, backend, interpret)
         eligible = {registry.DIRECT} | {e.name for e in candidates}
         timed = {n: m["time_s"] for n, m in measured.items()
                  if n in eligible}
         if timed and best_name in timed:
             return min(timed, key=timed.get)
+        modeled = costmodel.select_algorithm(
+            spec, sorted(eligible), backend, interpret)
+        if modeled is not None:
+            return modeled
     return best_name
 
 
@@ -151,11 +165,18 @@ def _plan_cached(spec: ConvSpec, backend: str, algo: str,
         # safe C_in bound.
         from repro.analysis import ranges
         ranges.check_spec_accumulator(spec, algorithm, algo_name=name)
-    from repro.api import tuning
+    from repro.api import costmodel, tuning
+    # config precedence mirrors the algorithm tiers: a measured winner
+    # from the tuning cache first, else the cost model's predicted-best
+    # for cold specs (None when the model is unfitted — the kernel then
+    # resolves its own defaults)
+    config = tuning.get_config(spec, backend, name, interpret)
+    if config is None and algorithm is not None:
+        config = costmodel.best_config(spec, backend, name, interpret)
     return ConvPlan(spec=spec, backend=backend, algo_name=name,
                     algorithm=algorithm,
                     interpret=interpret, cost=estimate_cost(spec, name),
-                    config=tuning.get_config(spec, backend, name, interpret))
+                    config=config)
 
 
 def plan(spec: ConvSpec, *, backend: str = "reference", algo: str = "auto",

@@ -221,6 +221,7 @@ def get_config(spec: ConvSpec, backend: str, algo_name: str,
 
 def record(spec: ConvSpec, backend: str, algo_name: str, time_s: float,
            config: Optional[KernelConfig] = None, *,
+           predicted_s: Optional[float] = None,
            interpret: bool = True, persist: bool = True) -> None:
     """Store one measurement (used by autotune; exposed for tests/offline
     calibration imports).  Last measurement wins — a re-tune must be able
@@ -241,6 +242,11 @@ def record(spec: ConvSpec, backend: str, algo_name: str, time_s: float,
         entry[algo_name] = {"time_s": float(time_s)}
         if config is not None:
             entry[algo_name]["config"] = config.to_json()
+        if predicted_s is not None:
+            # cost-model self-validation: autotune stores the model's
+            # prediction for the measured winner alongside the ground
+            # truth, so a drifting model is visible in the cache itself
+            entry[algo_name]["predicted_s"] = float(predicted_s)
         if persist:
             _write(cache_path(), _snapshot_locked())
     _invalidate_plans()
@@ -249,18 +255,31 @@ def record(spec: ConvSpec, backend: str, algo_name: str, time_s: float,
 # --------------------------------------------------------------------------
 # measurement
 # --------------------------------------------------------------------------
-def time_fn(fn, *args, reps: int = 3) -> float:
+def time_fn(fn, *args, reps: int = 3, min_total_s: float = 0.02,
+            max_reps: int = 64) -> float:
     """Mean wall-clock of ``fn(*args)`` after one warmup (compile) call.
 
-    The one timing protocol shared by the autotuner and the benchmarks
-    (``benchmarks/table3_throughput.py``).
+    The one timing protocol shared by the autotuner, the cost-model
+    calibration, and the benchmarks (``benchmarks/table3_throughput.py``).
+    De-noised by an adaptive repeat: after the initial ``reps`` batch,
+    timed batches double until at least ``min_total_s`` of wall-clock has
+    accumulated (or ``max_reps`` calls ran) — a sub-millisecond kernel
+    timed three times is mostly timer jitter, and coefficients fitted
+    from jitter would mis-rank candidates.  ``min_total_s=0`` restores
+    the fixed-``reps`` protocol.
     """
     jax.block_until_ready(fn(*args))              # compile + warm up once
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        out = fn(*args)
-        jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps
+    total, calls, batch = 0.0, 0, max(reps, 1)
+    while True:
+        t0 = time.perf_counter()
+        for _ in range(batch):
+            out = fn(*args)
+            jax.block_until_ready(out)
+        total += time.perf_counter() - t0
+        calls += batch
+        if total >= min_total_s or calls >= max_reps:
+            return total / calls
+        batch = min(calls, max_reps - calls)      # double, capped
 
 
 def calibrate_act_scale(x: jnp.ndarray, algo, quant,
@@ -314,18 +333,29 @@ def autotune(spec: ConvSpec, backend: str = "pallas", *,
              algos: Optional[Sequence[str]] = None,
              candidates: Sequence[KernelConfig] = DEFAULT_CANDIDATES,
              include_direct: bool = True, reps: int = 3,
+             top_k: Optional[int] = 3,
              interpret: bool = True, persist: bool = True,
              log=None) -> Dict[str, Dict]:
     """Measure candidate configs for ``spec`` and persist the winners.
 
-    Times every (algorithm, config) pair on synthetic operands, records
-    the fastest config per algorithm (plus the direct path), and returns
-    the resulting ``lookup(spec, backend)`` entries.  Subsequent
+    Times candidate (algorithm, config) pairs on synthetic operands,
+    records the fastest config per algorithm (plus the direct path), and
+    returns the resulting ``lookup(spec, backend)`` entries.  Subsequent
     ``plan(spec, backend=..., algo='auto')`` calls rank by these measured
     latencies instead of BOPs.  The cache file is written once at the end
     (an interrupted run persists nothing, so a partial sweep cannot skew
     the planner across processes), with the direct baseline measured
     first.
+
+    ``top_k``: when the analytic cost model (``repro.api.costmodel``) is
+    fitted for this backend/device, launchable candidates are ranked by
+    predicted latency and only the top ``top_k`` are measured — the
+    ROADMAP's cold-start story: a fleet spec with live traffic behind it
+    pays for k timed launches, not a full sweep.  The winner's predicted
+    time is recorded next to the measurement (``predicted_s``) so the
+    model self-validates in the cache.  With the model unfitted (or
+    ``top_k=None``) every launchable candidate is measured, exactly as
+    before.
     """
     from repro.api import planner, registry
     x, w = _synthetic_operands(spec)
@@ -368,6 +398,7 @@ def autotune(spec: ConvSpec, backend: str = "pallas", *,
                         f"{first}; skipped")
                 continue
         launchable = list(candidates)
+        predictions: Dict[KernelConfig, float] = {}
         if p_name.path == "fast" and p_name.algorithm is not None:
             # static resource pre-flight: drop fused configs whose launch
             # geometry breaks the VMEM budget / strip bounds / scratch
@@ -382,6 +413,19 @@ def autotune(spec: ConvSpec, backend: str = "pallas", *,
                         f"r={cfg.rows_per_step},"
                         f"db={int(cfg.double_buffer)}): rejected by "
                         f"pre-flight [{errs[0].code}]")
+            if top_k is not None:
+                # fitted cost model: measure only the predicted top-k
+                from repro.api import costmodel
+                ranked = costmodel.rank_candidates(
+                    spec, p_name.algorithm, launchable, backend=backend,
+                    interpret=interpret, batch=x.shape[0])
+                if ranked is not None:
+                    predictions = dict(ranked)
+                    launchable = [cfg for cfg, _ in ranked[:top_k]]
+                    if log and len(ranked) > len(launchable):
+                        log(f"autotune {name}: cost model kept top-"
+                            f"{len(launchable)} of {len(ranked)} "
+                            f"launchable candidates")
         best: Optional[float] = None
         best_cfg: Optional[KernelConfig] = None
         for cfg in launchable:
@@ -400,8 +444,11 @@ def autotune(spec: ConvSpec, backend: str = "pallas", *,
                 best, best_cfg = dt, cfg
         if best is not None:
             record(spec, backend, name, best, best_cfg,
+                   predicted_s=predictions.get(best_cfg),
                    interpret=interpret, persist=False)
             results[name] = {"time_s": best, "config": best_cfg.to_json()}
+            if best_cfg in predictions:
+                results[name]["predicted_s"] = predictions[best_cfg]
     if persist:
         _save()
     return results

@@ -288,6 +288,91 @@ class FusedGeometry:
         """DMA landing slot of strip-sequence entry ``s_idx``."""
         return s_idx % self.db_slots
 
+    # ---- workload accounting (the analytic cost model's inputs) ----
+    # These accessors are the ONE place the kernel's per-launch work is
+    # counted: repro.api.costmodel prices candidates from them and must
+    # never re-derive strip/blocking arithmetic (lint rule COST001).
+    @property
+    def grid_steps(self) -> int:
+        """Total grid steps of the launch (the per-step overhead quanta)."""
+        n = 1
+        for g in self.grid:
+            n *= g
+        return n
+
+    @property
+    def input_consuming_steps(self) -> int:
+        """Grid steps that read their input strip group from HBM.
+
+        With the quantized-strip cache only the first C_out block of each
+        (strip group, k-block) touches the input; every other step replays
+        from VMEM.  The double-buffer DMA path issues exactly one copy per
+        consuming step, so the count is the same either way."""
+        if self.depthwise:
+            return self.grid0 * self.n_o
+        if self.cache_xq:
+            return self.grid0 * self.n_k
+        return self.grid0 * self.n_o * self.n_k
+
+    @property
+    def transform_invocations(self) -> int:
+        """How many times the B^T X B transform + quantize runs (equals
+        :attr:`input_consuming_steps`: strips are transformed exactly when
+        they are read, cached strips replay the quantized result)."""
+        return self.input_consuming_steps
+
+    def hbm_bytes(self) -> Dict[str, int]:
+        """Per-launch HBM traffic of this geometry, bytes by stream.
+
+        input   — f32 strip-group reads, one per consuming step (the
+                  overlapping spans are re-read per strip group; the xq
+                  cache removes the per-C_out-block re-reads);
+        weights — the int8 weight block every step fetches;
+        output  — the f32 spatial strip groups the last k-block writes.
+        """
+        strip = self.imgs * self.span * self.w_padded * self.kb * 4
+        inp = self.input_consuming_steps * strip
+        if self.depthwise:
+            wgt = self.grid0 * self.n_o * self.P * self.cb
+        else:
+            wgt = self.grid0 * self.n_o * self.n_k * self.P * self.kb \
+                * self.cb
+        out = self.grid0 * self.n_o \
+            * self.imgs * self.rows * self.M * self.nW * self.M * self.cb * 4
+        return {"input": inp, "weights": wgt, "output": out,
+                "total": inp + wgt + out}
+
+    def compute_ops(self) -> Dict[str, int]:
+        """Per-launch arithmetic of this geometry, ops by execution unit.
+
+        mxu_macs    — int8 MXU multiply-accumulates of the t^2 transform-
+                      domain matmuls (zero for depthwise);
+        vpu_ew      — the depthwise transform-domain elementwise products;
+        vpu_transform — f32 VPU work of the separable B^T X B transform +
+                      per-frequency quantize, once per consuming step;
+        vpu_inverse — dequant + A^T Y A correction inverse per finalize.
+        """
+        cols = self.cols
+        if self.depthwise:
+            mxu = 0
+            ew = self.grid0 * self.n_o * self.P * cols * self.cb
+        else:
+            mxu = self.grid0 * self.n_o * self.n_k * self.P * cols \
+                * self.kb * self.cb
+            ew = 0
+        # per consuming step: row transform (t x L against the full strip
+        # width), per-column col transform, per-frequency quantize
+        per_step = self.imgs * self.rows * self.kb * (
+            self.t * self.L * self.w_padded
+            + self.nW * self.t * self.t * self.L
+            + self.nW * self.P)
+        transform = self.transform_invocations * per_step
+        # per finalize: dequant scale (P x cols) + the two inverse einsums
+        inverse = self.grid0 * self.n_o * cols * self.cb * (
+            self.P + self.M * self.t * self.t + self.M * self.M * self.t)
+        return {"mxu_macs": mxu, "vpu_ew": ew, "vpu_transform": transform,
+                "vpu_inverse": inverse}
+
     def scratch_shapes(self) -> Tuple[Tuple[str, Tuple[int, ...], str], ...]:
         """(name, shape, dtype) of every VMEM scratch the launch allocates,
         in ``pallas_call`` order."""

@@ -115,6 +115,10 @@ class Engine:
         self._inflight_zero = threading.Condition()
         self._loop_errors = 0
         self._last_loop_error: Optional[BaseException] = None
+        # per-bucket provenance of the warm-up kernel config: 'measured'
+        # (timing-cache entry), 'model' (cost-model prediction for a cold
+        # bucket), or 'default' (kernel resolves its own)
+        self.warm_sources: Dict[str, str] = {}
         self._warm(calib_seed)
         if warm_compile:
             self._warm_compile()
@@ -128,10 +132,24 @@ class Engine:
         synthetic batch (a deployment would substitute PTQ calibration
         data); the scale arrays are pinned here so the cache's identity
         checks hold for the engine's lifetime."""
+        from repro.api import costmodel, tuning
         from repro.api.tuning import calibrate_act_scale
         rng = np.random.RandomState(calib_seed)
         for b in self.buckets.buckets:
             p = self._plan(b)
+            # warm-config provenance: a timed bucket rides its measured
+            # winner; a COLD bucket with a fitted cost model rides the
+            # model-predicted config (planner fallback) instead of
+            # blocking construction on an exhaustive sweep
+            if tuning.lookup(b.spec, self.backend, self.interpret):
+                src = "measured"
+            elif p.path == "fast" and getattr(p, "config", None) is not None \
+                    and costmodel.is_fitted(self.backend, self.interpret):
+                src = "model"
+            else:
+                src = "default"
+            self.warm_sources[b.name] = src
+            self.metrics.inc(f"warm_config_{src}")
             scale = None
             if p.spec.quant.enabled and p.path == "fast" \
                     and p.algorithm is not None:
@@ -448,6 +466,7 @@ class Engine:
             "hit_rate": cstats["hits"] / lookups if lookups else 0.0,
         }
         snap["buckets"] = [b.name for b in self.buckets.buckets]
+        snap["warm_config_sources"] = dict(self.warm_sources)
         snap["scheduler"] = {"kind": self.scheduler.kind,
                              "max_hold_ms": self.scheduler.max_hold_ms}
         snap["loop_errors"] = self._loop_errors

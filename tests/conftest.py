@@ -44,6 +44,25 @@ def deterministic_time_fn(monkeypatch):
     return log
 
 
+@pytest.fixture(autouse=True, scope="session")
+def _isolated_caches_for_session(tmp_path_factory):
+    """Session-wide hermetic tuning/cost-model caches.
+
+    Module-scoped fixtures (e.g. test_resilience's ``quantized``)
+    instantiate BEFORE function-scoped autouse fixtures, so without this
+    outer layer they would plan against the host's real
+    ``~/.cache/repro`` stores — a host-fitted cost model flips their
+    ``plan(backend=...)`` selections (the model tier honestly prefers
+    direct over interpret-mode fused on CPU)."""
+    from repro.api import costmodel, tuning
+    d = tmp_path_factory.mktemp("caches")
+    tuning.set_cache_path(str(d / "tuning.json"))
+    costmodel.set_cache_path(str(d / "costmodel.json"))
+    yield
+    tuning.set_cache_path(None)
+    costmodel.set_cache_path(None)
+
+
 @pytest.fixture(autouse=True)
 def _isolated_tuning_cache(tmp_path):
     """Hermetic measured-latency cache for every test.
@@ -53,6 +72,25 @@ def _isolated_tuning_cache(tmp_path):
     that records measurements) would change other tests' auto-selections.
     """
     from repro.api import tuning
+    prev = tuning.cache_path()      # the session-scoped hermetic path —
     tuning.set_cache_path(str(tmp_path / "tuning.json"))
     yield
-    tuning.set_cache_path(None)
+    tuning.set_cache_path(prev)     # NOT None: a module-scoped fixture
+    # instantiating between tests must never see the host's real cache
+
+
+@pytest.fixture(autouse=True)
+def _isolated_costmodel_cache(tmp_path):
+    """Hermetic cost-model coefficient store for every test.
+
+    The planner consults ``repro.api.costmodel`` between measured timings
+    and BOPs, and ``autotune(top_k=...)`` truncates its sweep when the
+    model is fitted — a coefficient fit persisted on the host must not
+    leak into tests (each test starts unfitted unless it fits/installs
+    coefficients itself).
+    """
+    from repro.api import costmodel
+    prev = costmodel.cache_path()
+    costmodel.set_cache_path(str(tmp_path / "costmodel.json"))
+    yield
+    costmodel.set_cache_path(prev)

@@ -94,6 +94,30 @@ def test_reg001_registration_outside_seams():
                             "api/backends.py") == []
 
 
+def test_cost001_costmodel_geometry_surface():
+    # the sanctioned surface: FusedGeometry/fused_geometry only
+    ok = "from repro.kernels.sfc_fused import fused_geometry\n"
+    assert lint.lint_source(ok, "api/costmodel.py") == []
+    assert lint.lint_source(
+        "from repro.kernels.sfc_fused import FusedGeometry\n",
+        "api/costmodel.py") == []
+    # kernel-internal resource helpers are banned inside costmodel.py
+    assert _codes(lint.lint_source(
+        "from repro.kernels.sfc_fused import fused_vmem_bytes\n",
+        "api/costmodel.py")) == ["COST001"]
+    assert _codes(lint.lint_source(
+        "import repro.kernels.sfc_fused\n",
+        "api/costmodel.py")) == ["COST001"]
+    assert _codes(lint.lint_source(
+        "b = sf.VMEM_LIMIT_BYTES\n", "api/costmodel.py")) == ["COST001"]
+    assert _codes(lint.lint_source(
+        "r = auto_rows_per_step(g)\n", "api/costmodel.py")) == ["COST001"]
+    # the rule is scoped to costmodel.py: other api files may (they are
+    # already ARCH-allowlisted and not the cost model)
+    assert lint.lint_source(
+        "b = sf.VMEM_LIMIT_BYTES\n", "api/backends.py") == []
+
+
 def test_syntax_error_is_reported_not_raised():
     findings = lint.lint_source("def broken(:\n", "core/x.py")
     assert _codes(findings) == ["LNT000"]

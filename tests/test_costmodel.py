@@ -1,0 +1,254 @@
+"""repro.api.costmodel: the calibrated analytic cost model.
+
+Covers the ISSUE-10 contract: fit determinism, memory-feature
+monotonicity, ``autotune(top_k=k)`` measuring exactly k launchable
+candidates (and all of them when unfitted), the planner's
+measured > model > BOPs precedence, the model-predicted config riding
+cold plans, and coefficient persistence.
+"""
+import jax
+
+from repro.api import ConvSpec, costmodel, plan, registry, tuning
+from repro.api.planner import select_algorithm
+from repro.api.tuning import KernelConfig
+from repro.quant.fake_quant import INT8_FREQ
+
+
+def _spec(cin=64, cout=128, hw=14):
+    return ConvSpec(kernel_size=3, in_channels=cin, out_channels=cout,
+                    spatial=(hw, hw), quant=INT8_FREQ)
+
+
+def _algo(spec):
+    return registry.get_algorithm(select_algorithm(spec))
+
+
+def _patch_deterministic_measure(monkeypatch):
+    """Replace ``tuning._measure_plan`` with a pseudo-latency that is a
+    fixed linear function of the candidate's analytic features — nothing
+    executes, rankings are deterministic, and the least-squares fit has
+    an exact solution to recover."""
+    def fake(p, x, w, reps):
+        feats = costmodel.features_for(p.spec, p.algorithm, p.config,
+                                       batch=x.shape[0])
+        base = {"direct": 5e-3, "fused": 1e-3, "staged": 3e-3}
+        return (base[feats.datapath] + feats.grid_steps * 1e-5
+                + feats.roof_s * 2.0)
+    monkeypatch.setattr(tuning, "_measure_plan", fake)
+    return fake
+
+
+def _full_coefs(fused=(1e-3, 1e-5, 2.0), staged=(3e-3, 1e-5, 2.0),
+                direct=(5e-3, 2.0)):
+    return {"fused": list(fused), "staged": list(staged),
+            "direct": list(direct)}
+
+
+# ---------------------------------------------------------------------------
+# features
+# ---------------------------------------------------------------------------
+def test_memory_feature_monotone_in_cin():
+    """More C_in k-blocks must never predict fewer memory cycles: the
+    memory-seconds feature is non-decreasing in C_in at fixed config."""
+    algo = _algo(_spec())
+    cfg = tuning.DEFAULT_FUSED
+    mem = [costmodel.features_for(_spec(cin=c), algo, cfg).memory_s
+           for c in (32, 64, 128, 256, 512)]
+    assert all(b >= a for a, b in zip(mem, mem[1:])), mem
+
+
+def test_memory_feature_monotone_in_k_blocking():
+    """Splitting the same C_in into more k-blocks never *reduces* the
+    modelled HBM traffic (per-step bytes shrink but steps grow — the
+    total is invariant or larger, never smaller)."""
+    spec = _spec(cin=256)
+    algo = _algo(spec)
+    full = costmodel.features_for(spec, algo,
+                                  KernelConfig(k_block=None))
+    blocked = costmodel.features_for(spec, algo,
+                                     KernelConfig(k_block=64))
+    assert blocked.memory_s >= full.memory_s
+
+
+def test_unfitted_model_predicts_nothing():
+    spec = _spec()
+    assert not costmodel.is_fitted()
+    assert costmodel.predict_time(spec, _algo(spec),
+                                  tuning.DEFAULT_FUSED) is None
+    assert costmodel.best_config(spec, "pallas", "sfc4_4") is None
+    assert costmodel.select_algorithm(
+        spec, [registry.DIRECT, "sfc4_4"], "pallas") is None
+
+
+# ---------------------------------------------------------------------------
+# calibration
+# ---------------------------------------------------------------------------
+def test_fit_determinism(monkeypatch):
+    """Same probes -> same coefficients, bit-for-bit."""
+    _patch_deterministic_measure(monkeypatch)
+    r1 = costmodel.fit_coefficients(persist=False)
+    costmodel.clear()
+    r2 = costmodel.fit_coefficients(persist=False)
+    assert r1["coefficients"] == r2["coefficients"]
+    assert set(r1["coefficients"]) >= {"fused", "direct"}
+
+
+def test_fit_recovers_linear_pseudo_latency(monkeypatch):
+    """The fit must reproduce the (linear, noise-free) pseudo-latency it
+    measured: predictions equal measurements on the probe set."""
+    fake = _patch_deterministic_measure(monkeypatch)
+    report = costmodel.fit_coefficients(persist=False)
+    for dp, errs in report["fit_error"].items():
+        assert errs["max_rel"] < 1e-6, (dp, errs)
+    # and end-to-end: predict_time matches the fake for a fresh spec
+    spec = _spec(cin=128, cout=128, hw=10)
+    x, w = tuning._synthetic_operands(spec)
+    p = plan(spec, backend="pallas", algo=select_algorithm(spec))
+    for cfg in (tuning.DEFAULT_FUSED, tuning.DEFAULT_STAGED):
+        pred = costmodel.predict_time(spec, p.algorithm, cfg)
+        want = fake(p.with_config(cfg), x, w, 1)
+        assert abs(pred - want) / want < 1e-6
+
+
+def test_coefficients_persist_across_reload():
+    coefs = _full_coefs()
+    costmodel.set_coefficients(coefs, "pallas", interpret=True)
+    path = costmodel.cache_path()
+    # a fresh process == dropping the in-memory store and reloading
+    costmodel.set_cache_path(path)
+    assert costmodel.coefficients("pallas", True) == coefs
+    # keyed per backend/interpret: other keys stay unfitted
+    assert costmodel.coefficients("pallas", False) is None
+    assert costmodel.coefficients("reference", True) is None
+
+
+# ---------------------------------------------------------------------------
+# autotune top-k
+# ---------------------------------------------------------------------------
+def _count_measures(monkeypatch):
+    counted = []
+
+    def fake(p, x, w, reps):
+        counted.append(p.config)
+        feats = costmodel.features_for(p.spec, p.algorithm, p.config,
+                                       batch=x.shape[0])
+        base = {"direct": 5e-3, "fused": 1e-3, "staged": 3e-3}
+        return (base[feats.datapath] + feats.grid_steps * 1e-5
+                + feats.roof_s * 2.0)
+
+    monkeypatch.setattr(tuning, "_measure_plan", fake)
+    return counted
+
+
+def test_autotune_topk_measures_exactly_k(monkeypatch):
+    from repro.analysis import kernel_checks
+    spec = _spec()
+    algo = _algo(spec)
+    launchable, _ = kernel_checks.check_candidates(
+        spec, algo, tuning.DEFAULT_CANDIDATES, batch=1)
+    assert len(launchable) > 3          # the truncation is observable
+    costmodel.set_coefficients(_full_coefs())
+    counted = _count_measures(monkeypatch)
+    results = tuning.autotune(spec, algos=[select_algorithm(spec)],
+                              include_direct=False, top_k=2)
+    assert len(counted) == 2
+    name = select_algorithm(spec)
+    # predicted-vs-measured self-validation rides the cache entry
+    assert "predicted_s" in results[name]
+    assert "predicted_s" in tuning.lookup(spec, "pallas")[name]
+
+
+def test_autotune_unfitted_measures_every_launchable(monkeypatch):
+    """Behaviour preservation: with no fitted model, top_k is a no-op
+    and the sweep stays exhaustive."""
+    from repro.analysis import kernel_checks
+    spec = _spec()
+    algo = _algo(spec)
+    launchable, _ = kernel_checks.check_candidates(
+        spec, algo, tuning.DEFAULT_CANDIDATES, batch=1)
+    assert not costmodel.is_fitted()
+    counted = _count_measures(monkeypatch)
+    tuning.autotune(spec, algos=[select_algorithm(spec)],
+                    include_direct=False, top_k=3)
+    assert len(counted) == len(launchable)
+
+
+# ---------------------------------------------------------------------------
+# planner precedence: measured > model > BOPs
+# ---------------------------------------------------------------------------
+def test_planner_precedence_measured_over_model_over_bops():
+    spec = _spec()
+    bops_best = select_algorithm(spec)          # no backend: pure BOPs
+    assert bops_best != registry.DIRECT
+    # tier 3 — unfitted, untimed: BOPs governs
+    assert select_algorithm(spec, backend="pallas") == bops_best
+    # tier 2 — a fitted model that prices direct as near-free overrides
+    # the BOPs ranking
+    costmodel.set_coefficients(_full_coefs(
+        fused=(10.0, 0.0, 0.0), staged=(10.0, 0.0, 0.0),
+        direct=(1e-6, 0.0)))
+    assert select_algorithm(spec, backend="pallas") == registry.DIRECT
+    # tier 1 — measured wall-clock beats the model
+    tuning.record(spec, "pallas", bops_best, 1e-4)
+    tuning.record(spec, "pallas", registry.DIRECT, 5e-4)
+    assert select_algorithm(spec, backend="pallas") == bops_best
+
+
+def test_model_predicted_config_rides_cold_plan():
+    """With no timing entry, a fitted model supplies the plan's kernel
+    config (the serve engine's cold-bucket warm-up path)."""
+    spec = _spec()
+    # price per grid step only: the rows_per_step=None single-step grid
+    # wins, and staged (many steps) loses
+    costmodel.set_coefficients(_full_coefs(
+        fused=(0.0, 1e-5, 0.0), staged=(0.0, 1e-5, 0.0),
+        direct=(5e-3, 0.0)))
+    name = select_algorithm(spec)
+    p = plan(spec, backend="pallas", algo=name)
+    assert p.config is not None
+    assert p.config == costmodel.best_config(spec, "pallas", name)
+    assert p.config.datapath == "fused" and p.config.rows_per_step is None
+    # measured config takes over once recorded
+    cfg = KernelConfig(datapath="fused", k_block=None)
+    tuning.record(spec, "pallas", name, 1e-4, cfg)
+    assert plan(spec, backend="pallas", algo=name).config == cfg
+
+
+def test_rank_candidates_orders_by_prediction():
+    spec = _spec()
+    algo = _algo(spec)
+    costmodel.set_coefficients(_full_coefs())
+    ranked = costmodel.rank_candidates(spec, algo)
+    assert ranked is not None and len(ranked) >= 3
+    preds = [t for _, t in ranked]
+    assert preds == sorted(preds)
+    for cfg, t in ranked:
+        assert abs(costmodel.predict_time(spec, algo, cfg) - t) < 1e-12
+
+
+def test_engine_warm_source_accounting():
+    """Cold buckets under a fitted model warm as 'model'; timed buckets
+    as 'measured'; the snapshot exposes the provenance."""
+    import numpy as np
+    from repro.serve.bucketing import BucketTable
+    from repro.serve.engine import Engine
+
+    rng = np.random.RandomState(0)
+    w = rng.randn(3, 3, 8, 8).astype("float32") * 0.1
+    table = BucketTable.for_workload([(10, 10)], kernel_size=3,
+                                     in_channels=8, out_channels=8,
+                                     quant=INT8_FREQ)
+    costmodel.set_coefficients(_full_coefs())
+    eng = Engine(w, table, interpret=True)
+    b = table.buckets[0]
+    src = eng.warm_sources[b.name]
+    snap = eng.snapshot()
+    assert snap["warm_config_sources"][b.name] == src
+    if eng._plan(b).path == "fast":
+        assert src == "model"
+        assert snap["counters"]["warm_config_model"] >= 1
+    # a timing entry flips the bucket to 'measured' on a fresh engine
+    tuning.record(b.spec, "pallas", select_algorithm(b.spec), 1e-4,
+                  KernelConfig())
+    eng2 = Engine(w, table, interpret=True)
+    assert eng2.warm_sources[b.name] == "measured"

@@ -217,3 +217,45 @@ def test_write_failure_warns_once_and_store_still_serves(monkeypatch):
             and "not persisted" in str(w.message)]
     assert len(hits) == 1
     assert os.path.exists(tuning.cache_path())      # the a3 write landed
+
+
+# ---------------------------------------------------------------------------
+# adaptive timing protocol
+# ---------------------------------------------------------------------------
+def _counting_fn(calls):
+    def fn():
+        calls[0] += 1
+        return jnp.zeros(())
+    return fn
+
+
+def test_time_fn_fixed_protocol_when_floor_disabled():
+    """min_total_s=0 restores the historical protocol exactly: one
+    warmup call plus ``reps`` timed calls."""
+    calls = [0]
+    tuning.time_fn(_counting_fn(calls), reps=3, min_total_s=0.0)
+    assert calls[0] == 1 + 3
+
+
+def test_time_fn_adaptive_batches_cap_at_max_reps():
+    """A near-instant fn can never reach the floor; the doubling batches
+    must stop exactly at max_reps timed calls (warmup excluded)."""
+    calls = [0]
+    tuning.time_fn(_counting_fn(calls), reps=3, min_total_s=1e9,
+                   max_reps=17)
+    assert calls[0] == 1 + 17          # batches 3+3+6+5, capped
+
+
+def test_time_fn_stops_once_floor_crossed():
+    """A slow fn that crosses the floor in its first batch is not timed
+    again — the adaptive loop only extends *fast* kernels."""
+    calls = [0]
+    counting = _counting_fn(calls)
+
+    def slow():
+        time.sleep(0.004)
+        return counting()
+
+    t = tuning.time_fn(slow, reps=3, min_total_s=0.01)
+    assert calls[0] == 1 + 3
+    assert t >= 0.003                  # mean per-call, not total
